@@ -1,0 +1,94 @@
+"""Table 1: bucket search method (linear vs binary-rank) x memory layout
+(column / aligned row / packed row), 64-bit keys, uniformity 100%."""
+from benchmarks.common import emit, parse_args, timeit
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cgrx
+from repro.core.keys import KeyArray, key_eq, key_le, key_lt
+from repro.data import keygen
+
+
+def linear_search_rank(rows: KeyArray, q: KeyArray) -> jnp.ndarray:
+    """Left-to-right scan (paper's linear search): sequential fori."""
+    B = rows.lo.shape[-1]
+
+    def body(i, pos):
+        ki = KeyArray(rows.lo[..., i],
+                      None if rows.hi is None else rows.hi[..., i])
+        return pos + key_lt(ki, q).astype(jnp.int32)
+
+    return jax.lax.fori_loop(0, B, body, jnp.zeros(q.shape, jnp.int32))
+
+
+def gather_layouts(idx, bucket_id, layout):
+    """column: separate key/rowID arrays (two gathers);
+    aligned row: 16-byte padded rows (k_hi, k_lo, rowid, pad);
+    packed row: 12-byte rows (k_hi, k_lo, rowid)."""
+    B = idx.bucket_size
+    offs = bucket_id[:, None] * B + jnp.arange(B, dtype=jnp.int32)
+    if layout == "column":
+        ks = idx.buckets.keys.take(offs)
+        rs = jnp.take(idx.buckets.row_ids, offs, mode="clip")
+        return ks, rs
+    # row layouts: interleaved uint32 words
+    width = 4 if layout == "aligned" else 3
+    k = idx.buckets.keys
+    words = [k.hi if k.hi is not None else jnp.zeros_like(k.lo), k.lo,
+             idx.buckets.row_ids.view(jnp.uint32) if hasattr(
+                 idx.buckets.row_ids, "view")
+             else idx.buckets.row_ids.astype(jnp.uint32)]
+    if width == 4:
+        words.append(jnp.zeros_like(k.lo))
+    inter = jnp.stack(words, axis=1).reshape(-1)      # (n*width,)
+    woffs = offs[..., None] * width + jnp.arange(width)
+    rows = jnp.take(inter, woffs.reshape(offs.shape[0], -1), mode="clip")
+    rows = rows.reshape(offs.shape[0], B, width)
+    ks = KeyArray(rows[..., 1], rows[..., 0])
+    rs = rows[..., 2].astype(jnp.int32)
+    return ks, rs
+
+
+def main(args=None) -> None:
+    args = args or parse_args()
+    n, q = args.n, args.q // 4
+    keys, rows, raw = keygen.keyset(n, 1.0, bits=64, seed=0)
+    q_raw = keygen.uniform_lookups(raw, q, seed=1)
+    qk = keygen.as_keys(q_raw, 64)
+
+    for bucket in (4, 16, 256):
+        idx = cgrx.build(keys, jnp.asarray(rows), bucket)
+
+        for search in ("binary", "linear"):
+            if search == "linear" and bucket > 256:
+                continue
+            for layout in ("column", "aligned", "packed"):
+                def lookup(qq):
+                    b = cgrx._rep_search(idx, qq, "left")
+                    bc = jnp.minimum(b, idx.num_buckets - 1)
+                    ks, rs = gather_layouts(idx, bc, layout)
+                    qb = KeyArray(qq.lo[:, None],
+                                  None if qq.hi is None else qq.hi[:, None])
+                    if search == "binary":
+                        pos = jnp.sum(key_lt(ks, qb).astype(jnp.int32), -1)
+                    else:
+                        pos = linear_search_rank(ks, qq)
+                    safe = jnp.minimum(pos, idx.bucket_size - 1)
+                    hit_lo = jnp.take_along_axis(ks.lo, safe[:, None], 1)[:, 0]
+                    hit_hi = (jnp.take_along_axis(ks.hi, safe[:, None], 1)[:, 0]
+                              if ks.hi is not None else None)
+                    found = key_eq(KeyArray(hit_lo, hit_hi), qq)
+                    return jnp.where(
+                        found,
+                        jnp.take_along_axis(rs, safe[:, None], 1)[:, 0], -1)
+
+                fn = jax.jit(lookup)
+                sec = timeit(fn, qk)
+                emit(f"table1_b{bucket}_{search}_{layout}", sec,
+                     f"q={q}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Fig. 10: bucket-size sweep — construction breakdown + lookup breakdown.
+
+Construction phases mirror the paper's: (1) sort keys+rowIDs, (2) packed
+row-layout conversion (bucket matrix view), (3) representative extraction
+(the triangle-set analogue), (4) search-structure build (fanout tree =
+BVH), plus the RX (bucket size 1) baseline.  Lookup phases: (1) successor
+search ("rays"), (2) bucket post-filter, (3) result write.
+"""
+from benchmarks.common import emit, parse_args, timeit
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bucketing, cgrx, fanout
+from repro.core.keys import sort_with_payload
+from repro.data import keygen
+
+
+def main(args=None) -> None:
+    args = args or parse_args()
+    n, q = args.n, args.q // 4
+    for uniformity in (0.0, 1.0):
+        keys, rows, raw = keygen.keyset(n, uniformity, bits=64, seed=0)
+        rows_j = jnp.asarray(rows)
+        q_raw = keygen.uniform_lookups(raw, q, seed=1)
+        qk = keygen.as_keys(q_raw, 64)
+
+        for bucket in (2, 16, 256, 4096, 65536):
+            # The post-filter materializes a (Q, B) gather; cap the query
+            # count for large buckets so the working set stays ~2^24 rows
+            # (the paper measures phases separately for the same reason).
+            q_eff = max(min(q, (1 << 24) // bucket), 1024)
+            qk_eff = qk[:q_eff] if q_eff < q else qk
+            # --- construction breakdown ---
+            t_sort = timeit(jax.jit(
+                lambda k, r: sort_with_payload(k, r)[0].lo), keys, rows_j)
+            bs = bucketing.build_buckets(keys, rows_j, bucket)
+            t_build_all = timeit(
+                lambda: cgrx.build(keys, rows_j, bucket).buckets.keys.lo,
+                warmup=0, iters=1)
+            t_tree = timeit(lambda: fanout.build_tree(bs.reps).levels[0].lo,
+                            warmup=0, iters=1)
+            idx = cgrx.build(keys, rows_j, bucket)
+            total_bytes = cgrx.index_nbytes(idx)["total_bytes"]
+            emit(f"fig10a_u{int(uniformity*100)}_b{bucket}", t_build_all,
+                 f"sort={t_sort*1e3:.1f}ms;tree={t_tree*1e3:.1f}ms;"
+                 f"bytes={total_bytes}")
+
+            # --- lookup breakdown ---
+            rep_fn = jax.jit(lambda qq: cgrx._rep_search(idx, qq, "left"))
+            t_rays = timeit(rep_fn, qk_eff)
+            bids = rep_fn(qk_eff)
+            t_bucket = timeit(jax.jit(
+                lambda b, qq: cgrx._bucket_count(idx, b, qq, "left")),
+                bids, qk_eff)
+            t_total = timeit(jax.jit(
+                lambda qq: cgrx.lookup(idx, qq).row_id), qk_eff)
+            emit(f"fig10b_u{int(uniformity*100)}_b{bucket}", t_total,
+                 f"rays={t_rays*1e3:.1f}ms;bucket={t_bucket*1e3:.1f}ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Fig. 11: memory footprint, point-lookup time, throughput-per-byte
+("bang for the buck") — cgRX{4,16,64,256} vs HT / B+ / SA / RX, 32-bit."""
+from benchmarks.common import emit, parse_args, timeit
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines as bl
+from repro.core import cgrx, footprint
+from repro.data import keygen
+
+
+def main(args=None) -> None:
+    args = args or parse_args()
+    n, q = args.n, args.q // 2
+    for uniformity in (0.0, 0.5, 1.0):
+        keys, rows, raw = keygen.keyset(n, uniformity, bits=32, seed=0)
+        rows_j = jnp.asarray(rows)
+        q_raw = keygen.uniform_lookups(raw, q, seed=1)
+        qk = keygen.as_keys(q_raw, 32)
+        u = int(uniformity * 100)
+
+        entries = []
+        for b in (4, 16, 64, 256):
+            idx = cgrx.build(keys, rows_j, b)
+            fn = jax.jit(lambda qq: cgrx.lookup(idx, qq).row_id)
+            sec = timeit(fn, qk)
+            fp = footprint.footprint(idx, paper_model=True)["total_bytes"]
+            entries.append((f"cgRX{b}", sec, fp))
+        ht = bl.ht_build(keys, rows_j)
+        entries.append(("HT", timeit(jax.jit(
+            lambda qq: bl.ht_lookup(ht, qq).row_id), qk),
+            footprint.footprint(ht)["total_bytes"]))
+        bp = bl.bp_build(keys, rows_j)
+        entries.append(("B+", timeit(jax.jit(
+            lambda qq: bl.bp_lookup(bp, qq).row_id), qk),
+            footprint.footprint(bp)["total_bytes"]))
+        sa = bl.sa_build(keys, rows_j)
+        entries.append(("SA", timeit(jax.jit(
+            lambda qq: bl.sa_lookup(sa, qq).row_id), qk),
+            footprint.footprint(sa)["total_bytes"]))
+        rx = bl.rx_build(keys, rows_j)
+        entries.append(("RX", timeit(jax.jit(
+            lambda qq: bl.rx_lookup(rx, qq).row_id), qk),
+            footprint.footprint(rx)["total_bytes"]))
+
+        for name, sec, fp in entries:
+            thr = q / sec
+            emit(f"fig11_u{u}_{name}", sec,
+                 f"bytes={fp};thr={thr:.3e}/s;bang={thr/fp:.4f}")
+
+
+if __name__ == "__main__":
+    main()

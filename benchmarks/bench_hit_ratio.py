@@ -1,0 +1,37 @@
+"""Fig. 13: varying the hit ratio (in-range vs out-of-range misses),
+32-bit keys, uniformity 100%."""
+from benchmarks.common import emit, parse_args, timeit
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import baselines as bl
+from repro.core import cgrx
+from repro.data import keygen
+
+
+def main(args=None) -> None:
+    args = args or parse_args()
+    n, q = args.n, args.q // 4
+    keys, rows, raw = keygen.keyset(n, 1.0, bits=32, seed=0)
+    rows_j = jnp.asarray(rows)
+    idx = cgrx.build(keys, rows_j, 16)
+    rx = bl.rx_build(keys, rows_j)
+    ht = bl.ht_build(keys, rows_j)
+
+    cases = [("hit100", 1.0, False), ("hit50_in", 0.5, False),
+             ("hit0_in", 0.0, False), ("hit50_out", 0.5, True),
+             ("hit0_out", 0.0, True)]
+    for name, ratio, out in cases:
+        q_raw = keygen.hit_ratio_lookups(raw, q, ratio, out, bits=32, seed=1)
+        qk = keygen.as_keys(q_raw, 32)
+        sec = timeit(jax.jit(lambda qq: cgrx.lookup(idx, qq).row_id), qk)
+        emit(f"fig13_{name}_cgRX16", sec, "")
+        sec = timeit(jax.jit(lambda qq: bl.rx_lookup(rx, qq).row_id), qk)
+        emit(f"fig13_{name}_RX", sec, "")
+        sec = timeit(jax.jit(lambda qq: bl.ht_lookup(ht, qq).row_id), qk)
+        emit(f"fig13_{name}_HT", sec, "")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Beyond-paper: Pallas kernel block-shape sweep (interpret mode).
+
+Interpret-mode wall time is NOT TPU performance; the sweep's purpose is
+(a) regression coverage over BlockSpec configurations and (b) the VMEM
+working-set table per block shape that the §Perf napkin math uses.
+"""
+from benchmarks.common import emit, parse_args, timeit
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import successor
+
+
+def vmem_bytes(block_q, block_r, is64):
+    lanes = 128
+    per = 4  # uint32 words
+    q = block_q * lanes * per * (2 if is64 else 1)
+    r = block_r * lanes * per * (2 if is64 else 1)
+    out = block_q * lanes * 4
+    work = block_q * lanes * block_r * lanes * 1  # bool predicate tile
+    return q + r + out + work
+
+
+def main(args=None) -> None:
+    args = args or parse_args()
+    rng = np.random.default_rng(0)
+    raw = np.sort(rng.integers(0, 1 << 40, 1 << 14, dtype=np.uint64))
+    qs = rng.integers(0, 1 << 40, 1 << 12, dtype=np.uint64)
+    rl = jnp.asarray((raw & 0xFFFFFFFF).astype(np.uint32))
+    rh = jnp.asarray((raw >> np.uint64(32)).astype(np.uint32))
+    ql = jnp.asarray((qs & 0xFFFFFFFF).astype(np.uint32))
+    qh = jnp.asarray((qs >> np.uint64(32)).astype(np.uint32))
+
+    for bq in (1, 2, 8):
+        for br in (2, 8, 16):
+            sec = timeit(lambda: successor.successor_count(
+                rl, rh, ql, qh, "left", block_q=bq, block_r=br),
+                warmup=1, iters=2)
+            emit(f"kern_succ_bq{bq}_br{br}", sec,
+                 f"vmem={vmem_bytes(bq, br, True)}B")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Fig. 8: key mapping x representation (naive vs optimized) x uniformity.
+
+The paper's scaled key mapping exists to steer OptiX's opaque BVH builder;
+our grouping is explicit (DESIGN.md Sec. 2), so the observable analogue is
+the *ray count* and *lookup time* difference between naive and optimized
+representations across key distributions — which this benchmark measures,
+along with the triangle/memory reduction of the optimized scene.
+"""
+from benchmarks.common import emit, parse_args, timeit
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import grid
+from repro.data import keygen
+
+
+def main(args=None) -> None:
+    args = args or parse_args()
+    n, q = args.n // 4, args.q // 16   # grid probes are searchsorted-heavy
+    for bits in (32, 64):
+        for uniformity in (0.0, 0.5, 1.0):
+            keys, rows, raw = keygen.keyset(n, uniformity, bits=bits, seed=0)
+            q_raw = keygen.uniform_lookups(raw, q, seed=1)
+            qk = keygen.as_keys(q_raw, bits)
+            for representation in ("naive", "optimized"):
+                for bucket in (4, 16, 256):
+                    scene, buckets = grid.build_scene(
+                        keys, jnp.asarray(rows), bucket, representation)
+                    fn = jax.jit(lambda qq: grid.point_lookup(
+                        scene, buckets, qq)[0])
+                    sec = timeit(fn, qk)
+                    _, _, rays = grid.point_lookup(scene, buckets, qk)
+                    mean_rays = float(jnp.mean(rays))
+                    mem = scene.nbytes_model()
+                    emit(f"fig8_{bits}b_u{int(uniformity*100)}"
+                         f"_{representation}_b{bucket}", sec,
+                         f"rays={mean_rays:.2f};tris={scene.triangles_materialized};"
+                         f"vbuf={mem['vertex_buffer_bytes']}")
+
+
+if __name__ == "__main__":
+    main()

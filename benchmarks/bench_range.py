@@ -1,0 +1,52 @@
+"""Fig. 12: range lookups on a dense 23-bit key range — normalized
+cumulative lookup time (total time / entries retrieved), hits/range
+1..1024, vs RX / SA / B+ (HT has no range support)."""
+from benchmarks.common import emit, parse_args, timeit
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines as bl
+from repro.core import cgrx
+from repro.data import keygen
+
+
+def main(args=None) -> None:
+    args = args or parse_args()
+    n = min(args.n, 1 << 23)          # dense 23-bit range (paper setup)
+    q = args.q // 32
+    keys, rows, raw = keygen.keyset(n, 0.0, bits=32, seed=0)
+    rows_j = jnp.asarray(rows)
+    sraw = np.sort(raw)
+
+    idxs = {f"cgRX{b}": cgrx.build(keys, rows_j, b) for b in (4, 16, 64)}
+    sa = bl.sa_build(keys, rows_j)
+    bp = bl.bp_build(keys, rows_j)
+    rx = bl.rx_build(keys, rows_j)
+
+    for hits in (1, 4, 16, 64, 256, 1024):
+        nq = max(q // hits, 64)
+        lo, hi = keygen.range_lookups(sraw, nq, hits, seed=1)
+        lo_k, hi_k = keygen.as_keys(lo, 32), keygen.as_keys(hi, 32)
+        total = nq * hits
+
+        for name, idx in idxs.items():
+            fn = jax.jit(lambda a, b: cgrx.range_lookup(
+                idx, a, b, max_hits=hits).row_ids)
+            sec = timeit(fn, lo_k, hi_k)
+            emit(f"fig12_h{hits}_{name}", sec / total,
+                 f"total_s={sec:.4f};nq={nq}")
+        fn = jax.jit(lambda a, b: bl.sa_range(sa, a, b, hits)[1])
+        sec = timeit(fn, lo_k, hi_k)
+        emit(f"fig12_h{hits}_SA", sec / total, f"total_s={sec:.4f}")
+        fn = jax.jit(lambda a, b: bl.bp_range(bp, a, b, hits)[1])
+        sec = timeit(fn, lo_k, hi_k)
+        emit(f"fig12_h{hits}_B+", sec / total, f"total_s={sec:.4f}")
+        fn = jax.jit(lambda a, b: bl.rx_range(rx, a, b, hits)[1])
+        sec = timeit(fn, lo_k, hi_k)
+        emit(f"fig12_h{hits}_RX", sec / total, f"total_s={sec:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Fig. 14: Zipf-skewed lookups, coefficient 0.0 (uniform) .. 5.0."""
+from benchmarks.common import emit, parse_args, timeit
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import baselines as bl
+from repro.core import cgrx
+from repro.data import keygen
+
+
+def main(args=None) -> None:
+    args = args or parse_args()
+    n, q = args.n, args.q // 4
+    keys, rows, raw = keygen.keyset(n, 1.0, bits=32, seed=0)
+    rows_j = jnp.asarray(rows)
+    idx = cgrx.build(keys, rows_j, 16)
+    ht = bl.ht_build(keys, rows_j)
+    bp = bl.bp_build(keys, rows_j)
+
+    for theta in (0.0, 0.25, 0.5, 1.0, 2.0, 5.0):
+        q_raw = keygen.zipf_lookups(raw, q, theta, seed=1)
+        qk = keygen.as_keys(q_raw, 32)
+        sec = timeit(jax.jit(lambda qq: cgrx.lookup(idx, qq).row_id), qk)
+        emit(f"fig14_z{theta}_cgRX16", sec, "")
+        sec = timeit(jax.jit(lambda qq: bl.ht_lookup(ht, qq).row_id), qk)
+        emit(f"fig14_z{theta}_HT", sec, "")
+        sec = timeit(jax.jit(lambda qq: bl.bp_lookup(bp, qq).row_id), qk)
+        emit(f"fig14_z{theta}_B+", sec, "")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Fig. 15: node-chain batch updates vs full rebuild.
+
+Bulk-load 64-bit uniformity-100% keys (node size 32, half filled), then
+eight insertion waves inflating the set ~2.2x, then eight deletion waves
+back to the original size; a lookup batch runs after every wave.  The
+rebuild baseline re-sorts from scratch per wave (bucket size 16 = same
+bucket count, per the paper's setup)."""
+from benchmarks.common import emit, parse_args, timeit
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cgrx, nodes
+from repro.data import keygen
+
+
+def main(args=None) -> None:
+    args = args or parse_args()
+    n, q = args.n // 2, args.q // 8
+    keys, rows, raw = keygen.keyset(n, 1.0, bits=64, seed=0)
+    rows_j = jnp.asarray(rows)
+
+    store = nodes.build(keys, rows_j, node_cap=32)       # half-filled
+    flat = keys
+    flat_rows = rows_j
+
+    rng = np.random.default_rng(1)
+    total_inflate = int(1.2 * n)
+    wave_size = total_inflate // 8
+    inserted_waves = []
+
+    live = raw.copy()
+    next_row = n
+    for wave in range(8):
+        # Draw inserts from the SAME space as the key set (full 64-bit for
+        # uniformity 100%) so they spread across buckets like the paper's.
+        ins = np.setdiff1d(
+            np.unique(rng.integers(0, np.iinfo(np.uint64).max,
+                                   int(wave_size * 1.4),
+                                   dtype=np.uint64)), live)[:wave_size]
+        inserted_waves.append(ins)
+        ins_k = keygen.as_keys(ins, 64)
+        ins_r = jnp.arange(next_row, next_row + len(ins), dtype=jnp.int32)
+        next_row += len(ins)
+
+        t0 = time.perf_counter()
+        store = nodes.apply_batch(store, ins_k, ins_r, None)
+        jax.block_until_ready(store.node_keys.lo)
+        t_upd = time.perf_counter() - t0
+
+        live = np.concatenate([live, ins])
+        t0 = time.perf_counter()
+        rebuilt = cgrx.build(keygen.as_keys(live, 64),
+                             jnp.arange(len(live), dtype=jnp.int32), 16)
+        jax.block_until_ready(rebuilt.buckets.keys.lo)
+        t_reb = time.perf_counter() - t0
+        emit(f"fig15a_ins{wave}", t_upd,
+             f"rebuild={t_reb*1e3:.1f}ms;speedup={t_reb/max(t_upd,1e-9):.2f}x")
+
+        q_raw = live[rng.integers(0, len(live), q)]
+        qk = keygen.as_keys(q_raw, 64)
+        sec_n = timeit(jax.jit(lambda qq: nodes.lookup(store, qq).row_id), qk)
+        sec_r = timeit(jax.jit(lambda qq: cgrx.lookup(rebuilt, qq).row_id), qk)
+        emit(f"fig15b_ins{wave}", sec_n,
+             f"rebuilt_lookup={sec_r*1e3:.1f}ms;chains<={store.max_chain}")
+
+    for wave in range(8):
+        dels = inserted_waves[7 - wave]
+        t0 = time.perf_counter()
+        store = nodes.apply_batch(store, None, None, keygen.as_keys(dels, 64))
+        jax.block_until_ready(store.node_keys.lo)
+        t_upd = time.perf_counter() - t0
+        live = np.setdiff1d(live, dels)
+        t0 = time.perf_counter()
+        rebuilt = cgrx.build(keygen.as_keys(live, 64),
+                             jnp.arange(len(live), dtype=jnp.int32), 16)
+        jax.block_until_ready(rebuilt.buckets.keys.lo)
+        t_reb = time.perf_counter() - t0
+        emit(f"fig15a_del{wave}", t_upd,
+             f"rebuild={t_reb*1e3:.1f}ms;speedup={t_reb/max(t_upd,1e-9):.2f}x")
+        q_raw = live[rng.integers(0, len(live), q)]
+        qk = keygen.as_keys(q_raw, 64)
+        sec_n = timeit(jax.jit(lambda qq: nodes.lookup(store, qq).row_id), qk)
+        emit(f"fig15b_del{wave}", sec_n, f"chains<={store.max_chain}")
+
+
+if __name__ == "__main__":
+    main()

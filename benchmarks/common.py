@@ -1,0 +1,52 @@
+"""Benchmark harness helpers.
+
+CPU-container caveat (recorded in DESIGN.md Sec. 7): wall times here are
+CPU-backend numbers — valid for the paper's *relative* comparisons (bucket
+size trade-off, representation, layout, update-vs-rebuild) and for
+throughput-per-byte ratios; absolute GPU/TPU throughputs are not claimed.
+Sizes default to 2^20 keys / 2^21 lookups (the paper uses 2^26 / 2^27 on
+a 24 GB RTX 4090); pass ``--full`` to run paper-scale if you have the RAM
+and patience.
+"""
+import os
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import argparse
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+N_KEYS = 1 << 20
+N_LOOKUPS = 1 << 21
+
+
+def parse_args(extra: Callable = None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale 2^26 keys / 2^27 lookups")
+    ap.add_argument("--n", type=int, default=None)
+    ap.add_argument("--q", type=int, default=None)
+    if extra:
+        extra(ap)
+    args = ap.parse_args()
+    args.n = args.n or (1 << 26 if args.full else N_KEYS)
+    args.q = args.q or (1 << 27 if args.full else N_LOOKUPS)
+    return args
+
+
+def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds with jit warmup; blocks on results."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    print(f"{name},{seconds*1e6:.1f}us,{derived}", flush=True)

@@ -1,0 +1,66 @@
+"""Run every paper-table benchmark.  Output: ``name,us_per_call,derived``.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig12]
+
+Default sizes are container-scale (2^18 keys); --full is paper-scale
+(2^26 keys / 2^27 lookups, needs paper-class memory).
+"""
+import os
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import argparse
+import importlib
+import sys
+import time
+import traceback
+
+SUITES = [
+    ("fig8_keymap", "benchmarks.bench_keymap"),
+    ("table1_bucket_config", "benchmarks.bench_bucket_config"),
+    ("fig10_bucket_size", "benchmarks.bench_bucket_size"),
+    ("fig11_footprint", "benchmarks.bench_footprint"),
+    ("fig12_range", "benchmarks.bench_range"),
+    ("fig13_hit_ratio", "benchmarks.bench_hit_ratio"),
+    ("fig14_skew", "benchmarks.bench_skew"),
+    ("fig15_updates", "benchmarks.bench_updates"),
+    ("kernels", "benchmarks.bench_kernels"),
+]
+
+
+class _Args:
+    def __init__(self, n, q):
+        self.n, self.q, self.full = n, q, False
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--n", type=int, default=None)
+    ap.add_argument("--q", type=int, default=None)
+    args = ap.parse_args()
+    n = args.n or (1 << 26 if args.full else 1 << 18)
+    q = args.q or (1 << 27 if args.full else 1 << 19)
+
+    failures = []
+    for name, mod_name in SUITES:
+        if args.only and args.only not in name:
+            continue
+        print(f"# === {name} (n={n}, q={q}) ===", flush=True)
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(mod_name)
+            mod.main(_Args(n, q))
+            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:                                  # noqa: BLE001
+            failures.append(name)
+            print(f"# {name} FAILED:\n{traceback.format_exc()[-2000:]}",
+                  flush=True)
+    if failures:
+        print(f"# FAILURES: {failures}")
+        sys.exit(1)
+    print("# ALL BENCHMARKS COMPLETED")
+
+
+if __name__ == "__main__":
+    main()

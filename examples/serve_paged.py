@@ -1,0 +1,38 @@
+"""Serve a small model with batched requests over the cgRX-paged KV cache.
+
+The page table is the paper's updatable node-chain index: sequence
+admission inserts block keys, retirement deletes them — watch the index
+churn counters while throughput stays flat.
+
+    PYTHONPATH=src python examples/serve_paged.py
+"""
+import os
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import jax
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serving.engine import Engine
+
+
+def main() -> None:
+    cfg = get_config("starcoder2-3b").tiny()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, max_batch=3, max_seq=64, page_size=8,
+                 num_pages=128)
+    rng = np.random.default_rng(0)
+    for i in range(6):
+        eng.submit(rng.integers(0, cfg.vocab_size, 8 + i), max_new_tokens=8)
+    results = eng.run_to_completion()
+    s = eng.stats
+    print(f"completed {len(results)} requests, {s.tokens_out} tokens")
+    print(f"page-table churn: +{s.index_inserts} / -{s.index_deletes} blocks "
+          f"(chains <= {eng.cache.table.max_chain}, reps untouched: "
+          f"{eng.cache.table.num_buckets} buckets since build)")
+    assert len(eng.cache.free_pages) == 128, "page leak"
+
+
+if __name__ == "__main__":
+    main()

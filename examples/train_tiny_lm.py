@@ -1,0 +1,71 @@
+"""End-to-end driver: train a small LM for a few hundred steps on CPU.
+
+Uses the same train-step factory the 512-chip dry-run lowers, with
+checkpointing + fault-tolerance runtime attached.  The synthetic stream
+has copy structure, so the loss visibly falls.
+
+    PYTHONPATH=src python examples/train_tiny_lm.py --steps 200
+"""
+import os
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data import tokens as data_tokens
+from repro.models import lm
+from repro.runtime import Heartbeat, StragglerMonitor
+from repro.training import optim, step as step_mod
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", default="/tmp/repro_example_ckpt")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).tiny()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    opt_cfg = optim.AdamWConfig(lr_peak=3e-3, warmup_steps=20,
+                                total_steps=args.steps)
+    opt = optim.init_state(params)
+    fn = jax.jit(step_mod.make_train_step(cfg, opt_cfg),
+                 donate_argnums=(0, 1))
+
+    ckpt = CheckpointManager(args.ckpt, keep=2)
+    hb = Heartbeat("/tmp/repro_example_hb.json").start()
+    mon = StragglerMonitor()
+
+    first_loss = last_loss = None
+    for i in range(args.steps):
+        t0 = time.time()
+        batch = jax.tree.map(jnp.asarray, data_tokens.synthetic_batch(
+            i, args.batch, args.seq, cfg.vocab_size))
+        params, opt, m = fn(params, opt, batch)
+        loss = float(m["loss"])
+        mon.record(i, time.time() - t0)
+        hb.update(i)
+        if first_loss is None:
+            first_loss = loss
+        last_loss = loss
+        if i % 20 == 0:
+            print(f"step {i:4d}  loss {loss:.4f}  lr {float(m['lr']):.2e}")
+        if (i + 1) % 100 == 0:
+            ckpt.save_async(i + 1, (params, opt), {"data_step": i + 1})
+    ckpt.wait()
+    hb.stop()
+    print(f"loss {first_loss:.3f} -> {last_loss:.3f} "
+          f"over {args.steps} steps")
+    assert last_loss < first_loss, "training did not reduce the loss"
+
+
+if __name__ == "__main__":
+    main()

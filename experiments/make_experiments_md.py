@@ -1,0 +1,139 @@
+"""Assemble EXPERIMENTS.md from dry-run artifacts + roofline + perf variants.
+
+    PYTHONPATH=src python experiments/make_experiments_md.py
+"""
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import roofline  # noqa: E402
+
+ROOT = os.path.dirname(os.path.abspath(__file__))
+REPO = os.path.dirname(ROOT)
+
+
+def load(mesh):
+    return roofline.load_dir(os.path.join(ROOT, "dryrun", mesh))
+
+
+def load_variants(mesh):
+    return [r for r in roofline.load_dir(os.path.join(ROOT, "dryrun", mesh),
+                                         include_variants=True)
+            if r.get("tag")]
+
+
+def dryrun_table(recs):
+    out = ["| arch | shape | status | lower (s) | compile (s) | "
+           "params/dev (GB) | opt+cache/dev (GB) | coll types | note |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["status"] != "OK":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['status']} | — | —"
+                       f" | — | — | — | {r.get('reason', '')[:70]} |")
+            continue
+        extra = (r.get("opt_bytes_per_dev", 0)
+                 + r.get("cache_bytes_per_dev", 0)) / 1e9
+        colls = ",".join(sorted(r.get("collectives", {}).keys()))
+        mb = r.get("num_microbatches", "")
+        note = f"mb={mb}" if mb else ""
+        out.append(
+            f"| {r['arch']} | {r['shape']} | OK "
+            f"| {r.get('seconds_lower', 0):.1f} "
+            f"| {r.get('seconds_compile', 0):.1f} "
+            f"| {r.get('param_bytes_per_dev', 0)/1e9:.2f} "
+            f"| {extra:.2f} | {colls} | {note} |")
+    return "\n".join(out)
+
+
+def perf_table(base_recs, var_recs, cells):
+    rows = ["| cell | variant | t_compute | t_memory | t_collective | "
+            "dominant | bound step (s) | Δ dominant vs baseline |",
+            "|---|---|---|---|---|---|---|---|"]
+    base_by = {(r["arch"], r["shape"]): r for r in base_recs
+               if r["status"] == "OK"}
+    for arch, shape in cells:
+        b = base_by.get((arch, shape))
+        if not b:
+            continue
+        bt = roofline.cell_terms(b)
+        rows.append(
+            f"| {arch}/{shape} | **baseline** | {bt['t_compute']:.3e} "
+            f"| {bt['t_memory']:.3e} | {bt['t_collective']:.3e} "
+            f"| {bt['dominant']} | {bt['step_time_bound_s']:.3e} | — |")
+        base_dom = bt[f"t_{bt['dominant']}"]
+        for v in var_recs:
+            if (v["arch"], v["shape"]) != (arch, shape) or v["status"] != "OK":
+                continue
+            vt = roofline.cell_terms(v)
+            delta = (vt[f"t_{bt['dominant']}"] - base_dom) / base_dom * 100
+            rows.append(
+                f"| {arch}/{shape} | {v['tag']} | {vt['t_compute']:.3e} "
+                f"| {vt['t_memory']:.3e} | {vt['t_collective']:.3e} "
+                f"| {vt['dominant']} | {vt['step_time_bound_s']:.3e} "
+                f"| {delta:+.1f}% |")
+    return "\n".join(rows)
+
+
+def main():
+    pod1 = load("pod1")
+    pod2 = load("pod2")
+    variants = load_variants("pod1")
+
+    hill_cells = [("qwen3-32b", "train_4k"),
+                  ("deepseek-v2-lite-16b", "decode_32k"),
+                  ("qwen1.5-32b", "decode_32k")]
+
+    with open(os.path.join(ROOT, "EXPERIMENTS_header.md")) as f:
+        header = f.read()
+    with open(os.path.join(ROOT, "EXPERIMENTS_perf_narrative.md")) as f:
+        narrative = f.read()
+
+    parts = [header]
+    parts.append("\n## §Dry-run — single pod (16x16 = 256 chips)\n")
+    parts.append(dryrun_table(pod1))
+    parts.append("\n\n## §Dry-run — multi-pod (2x16x16 = 512 chips)\n")
+    parts.append(dryrun_table(pod2))
+    parts.append("\n\n## §Roofline (single-pod mesh, per chip)\n")
+    parts.append(
+        "\nTerms in seconds: compute = FLOPs/197e12, memory = HBM-bytes/"
+        "819e9, collective = bytes-on-wire/50e9 (per-link serialization "
+        "upper bound).  FLOPs and collective bytes are loop-trip-corrected "
+        "from the compiled HLO (launch/hlo_loops.py); HBM bytes count "
+        "heavy-op boundaries (in-place update-slices at touched-region "
+        "size).  `useful/HLO` = MODEL_FLOPS / corrected-HLO-FLOPs "
+        "(remat/redundancy waste; ~0.75 = full-remat-consistent for "
+        "matmul-dominated cells; SSM decode can exceed 1 because the "
+        "6ND/2ND convention undercounts per-token state-update work); "
+        "`MFU bound` = model-flops-time / dominant-term-time = the "
+        "ceiling a perfect overlap could reach.  Notable structural "
+        "findings: qwen1.5-32b (MHA kv=40) pays a large memory term "
+        "because 40 KV heads do not divide the 16-way model axis — the "
+        "divisibility fallback replicates KV projections; padding to 48 "
+        "KV heads or 8-way head sharding is the identified lever.  "
+        "Zamba2 compute terms are MAX-bound upper estimates (shared-attn "
+        "conditional counted every layer, executes every 6th).\n\n")
+    parts.append(roofline.markdown(pod1))
+    parts.append("\n\n### Per-cell bottleneck notes\n")
+    for rec in pod1:
+        if rec.get("status") != "OK":
+            continue
+        t = roofline.row(rec)
+        parts.append(f"- **{rec['arch']}/{rec['shape']}**: dominant = "
+                     f"{t['dominant']}; {t['suggest']}.")
+    parts.append("\n\n## §Perf — hillclimbing log\n")
+    parts.append(narrative)
+    parts.append("\n\n### Variant measurements (dry-run, pod1)\n")
+    parts.append(perf_table(pod1, variants, hill_cells))
+    parts.append("\n")
+
+    out = os.path.join(REPO, "EXPERIMENTS.md")
+    with open(out, "w") as f:
+        f.write("\n".join(parts))
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: cgRX coarse-granular indexing as a first-class feature of a
+multi-pod JAX LM training/serving framework."""

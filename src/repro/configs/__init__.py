@@ -1,0 +1,2 @@
+from .base import ArchConfig, MLACfg, MoECfg, SSMCfg, SHAPES, SHAPES_BY_NAME, ShapeCell, cell_applicable, input_specs  # noqa: F401
+from .registry import ARCH_IDS, all_configs, get_config  # noqa: F401

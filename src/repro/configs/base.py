@@ -1,0 +1,165 @@
+"""Architecture configuration schema + input shape cells.
+
+Every assigned architecture is an ``ArchConfig``; the four LM shape cells
+(train_4k / prefill_32k / decode_32k / long_500k) are ``ShapeCell``s.
+``input_specs`` builds jax.ShapeDtypeStruct stand-ins for the dry-run
+(no allocation); ``tiny()`` produces the reduced same-family config used
+by the CPU smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    num_shared: int = 0
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class MLACfg:
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMCfg:
+    d_state: int = 128
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    conv_k: int = 4
+    chunk: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    norm: str = "rms"              # rms | ln
+    gated_mlp: bool = True
+    act: str = "silu"
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    moe: Optional[MoECfg] = None
+    mla: Optional[MLACfg] = None
+    ssm: Optional[SSMCfg] = None
+    attn_every: int = 0            # hybrid: shared attn after every k-th layer
+    num_patches: int = 0           # vlm: vision-prefix length
+    sub_quadratic: bool = False    # supports long_500k decode
+    # training knobs
+    remat: bool = True
+    remat_policy: str = "full"     # full | dots | none  (§Perf knob)
+    attn_probs_bf16: bool = False  # bf16 attention prob tiles (§Perf knob)
+    loss_chunks: int = 8
+    attn_block_q: int = 512
+    attn_block_kv: int = 512
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // max(self.num_heads, 1))
+
+    @property
+    def has_attention(self) -> bool:
+        return self.family != "ssm"
+
+    def tiny(self) -> "ArchConfig":
+        """Reduced same-family config for CPU smoke tests."""
+        repl: Dict = dict(
+            num_layers=min(self.num_layers, 4 if self.attn_every == 0
+                           else self.attn_every + 2),
+            d_model=128,
+            num_heads=max(min(self.num_heads, 4), 1),
+            num_kv_heads=1 if self.num_kv_heads == 1
+            else max(min(self.num_kv_heads, 2), 1),
+            d_ff=256,
+            vocab_size=512,
+            head_dim=32 if self.head_dim else None,
+            loss_chunks=2,
+            attn_block_q=64, attn_block_kv=64,
+        )
+        if self.num_kv_heads == self.num_heads:   # keep MHA archs MHA
+            repl["num_kv_heads"] = repl["num_heads"]
+        if self.moe:
+            repl["moe"] = MoECfg(num_experts=4,
+                                 top_k=min(self.moe.top_k, 2),
+                                 d_ff_expert=64,
+                                 num_shared=min(self.moe.num_shared, 1))
+        if self.mla:
+            repl["mla"] = MLACfg(kv_lora_rank=32, qk_nope_dim=16,
+                                 qk_rope_dim=8, v_head_dim=16)
+            repl["head_dim"] = None
+        if self.ssm:
+            repl["ssm"] = SSMCfg(d_state=16, expand=2, head_dim=16,
+                                 chunk=32)
+        if self.num_patches:
+            repl["num_patches"] = 8
+        return dataclasses.replace(self, **repl)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Tuple[ShapeCell, ...] = (
+    ShapeCell("train_4k", 4096, 256, "train"),
+    ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    ShapeCell("decode_32k", 32768, 128, "decode"),
+    ShapeCell("long_500k", 524288, 1, "decode"),
+)
+
+SHAPES_BY_NAME = {s.name: s for s in SHAPES}
+
+
+def cell_applicable(cfg: ArchConfig, cell: ShapeCell) -> Tuple[bool, str]:
+    """long_500k needs sub-quadratic attention (SSM/hybrid only here)."""
+    if cell.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("full-attention family: 500k dense-softmax decode is "
+                       "out of scope per assignment (see DESIGN.md)")
+    return True, ""
+
+
+def input_specs(cfg: ArchConfig, cell: ShapeCell) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of the cell."""
+    B, S = cell.global_batch, cell.seq_len
+    i32 = jnp.int32
+    if cell.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+        }
+        if cfg.num_patches:
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_patches, cfg.d_model), jnp.bfloat16)
+        return specs
+    if cell.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.num_patches:
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_patches, cfg.d_model), jnp.bfloat16)
+        return specs
+    # decode: one new token against a cache of S positions
+    return {"token": jax.ShapeDtypeStruct((B, 1), i32)}

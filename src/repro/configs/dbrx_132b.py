@@ -1,0 +1,10 @@
+"""DBRX-132B: 16-expert top-4 fine-grained MoE [hf:databricks/dbrx-base]."""
+from .base import ArchConfig, MoECfg
+
+CONFIG = ArchConfig(
+    name="dbrx-132b", family="moe",
+    num_layers=40, d_model=6144, num_heads=48, num_kv_heads=8,
+    d_ff=10752, vocab_size=100352, head_dim=128,
+    norm="ln", gated_mlp=True, act="silu", rope_theta=500000.0,
+    moe=MoECfg(num_experts=16, top_k=4, d_ff_expert=10752),
+)

@@ -1,0 +1,10 @@
+"""Mamba2-370M: attention-free SSD [arXiv:2405.21060]."""
+from .base import ArchConfig, SSMCfg
+
+CONFIG = ArchConfig(
+    name="mamba2-370m", family="ssm",
+    num_layers=48, d_model=1024, num_heads=0, num_kv_heads=0,
+    d_ff=0, vocab_size=50280,
+    ssm=SSMCfg(d_state=128, expand=2, head_dim=64),
+    sub_quadratic=True,
+)

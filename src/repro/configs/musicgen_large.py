@@ -1,0 +1,14 @@
+"""MusicGen-large: decoder-only over EnCodec tokens [arXiv:2306.05284].
+
+Modality frontend (EnCodec) is a stub per assignment: inputs are already
+audio-token ids (single interleaved codebook stream; the release uses 4
+codebooks with delay interleaving — noted in DESIGN.md).
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="musicgen-large", family="audio",
+    num_layers=48, d_model=2048, num_heads=32, num_kv_heads=32,
+    d_ff=8192, vocab_size=2048,
+    norm="ln", gated_mlp=False, act="gelu", norm_eps=1e-5,
+)

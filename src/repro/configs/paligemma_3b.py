@@ -1,0 +1,15 @@
+"""PaliGemma-3B: SigLIP + Gemma backbone [arXiv:2407.07726].
+
+The SigLIP vision tower is a stub per assignment: input_specs() provides
+precomputed patch embeddings (256 tokens at d_model) which the model
+projects and prepends; attention over the prefix is causal (the release
+uses full prefix attention — noted in DESIGN.md).
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="paligemma-3b", family="vlm",
+    num_layers=18, d_model=2048, num_heads=8, num_kv_heads=1,
+    d_ff=16384, vocab_size=257216, head_dim=256,
+    act="gelu", num_patches=256,
+)

@@ -1,0 +1,30 @@
+"""Registry of the 10 assigned architectures.  ``--arch <id>`` resolves here."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from .base import ArchConfig
+
+ARCH_IDS: List[str] = [
+    "dbrx-132b",
+    "deepseek-v2-lite-16b",
+    "zamba2-1.2b",
+    "qwen3-32b",
+    "starcoder2-3b",
+    "yi-6b",
+    "qwen1.5-32b",
+    "mamba2-370m",
+    "musicgen-large",
+    "paligemma-3b",
+]
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    mod_name = arch_id.replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def all_configs() -> Dict[str, ArchConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

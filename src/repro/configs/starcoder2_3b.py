@@ -1,0 +1,11 @@
+"""StarCoder2-3B: dense GQA(kv=2), LayerNorm, non-gated GELU MLP
+[arXiv:2402.19173]."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="starcoder2-3b", family="dense",
+    num_layers=30, d_model=3072, num_heads=24, num_kv_heads=2,
+    d_ff=12288, vocab_size=49152,
+    norm="ln", gated_mlp=False, act="gelu", qkv_bias=True,
+    rope_theta=100000.0, norm_eps=1e-5,
+)

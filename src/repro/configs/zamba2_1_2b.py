@@ -1,0 +1,16 @@
+"""Zamba2-1.2B: Mamba2 backbone + shared attention block [arXiv:2411.15242].
+
+Simplifications vs the released model (noted in DESIGN.md): one shared
+attention+MLP block applied every 6 mamba layers (the release interleaves
+two shared blocks with per-invocation LoRA); no embedding concat at shared
+block input.
+"""
+from .base import ArchConfig, SSMCfg
+
+CONFIG = ArchConfig(
+    name="zamba2-1.2b", family="hybrid",
+    num_layers=38, d_model=2048, num_heads=32, num_kv_heads=32,
+    d_ff=8192, vocab_size=32000, head_dim=64,
+    ssm=SSMCfg(d_state=64, expand=2, head_dim=64),
+    attn_every=6, sub_quadratic=True,
+)

@@ -1,0 +1,20 @@
+"""repro.core — the paper's contribution: coarse-granular indexing on TPU.
+
+Modules:
+  keys        u32/u64-as-uint32-pairs key arithmetic (packed layout)
+  keymap      key -> (x,y,z) bit-slice mappings (paper Sec. 2.1/5.2)
+  bucketing   sort + bucket partition + representative extraction
+  fanout      lane-width successor-search tree (the BVH analogue)
+  cgrx        the coarse-granular index: build, point/range lookup
+  grid        paper-faithful 3D scene + up-to-5-ray lookup emulation
+  nodes       updatable node-chain variant (paper Sec. 4)
+  baselines   HT / B+ / SA / RX re-implementations (paper Sec. 6)
+  footprint   memory accounting, actual + paper model
+  distributed range-partitioned mesh-sharded index (beyond paper)
+"""
+from . import baselines, bucketing, cgrx, distributed, fanout, footprint, grid, keymap, keys, nodes  # noqa: F401
+
+__all__ = [
+    "baselines", "bucketing", "cgrx", "distributed", "fanout", "footprint",
+    "grid", "keymap", "keys", "nodes",
+]

@@ -1,0 +1,105 @@
+"""Sorted-bucket machinery shared by the cgRX index and MoE dispatch.
+
+The paper's construction (Algorithm 1/3) sorts the key set, partitions it
+into buckets of ``bucket_size`` keys and materializes only the *last* key of
+each bucket (the representative).  This module provides the sort/partition/
+representative-extraction primitives; cgrx.py composes them into the index.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .keys import (
+    KeyArray,
+    key_eq,
+    key_max_sentinel,
+    sort_with_payload,
+)
+
+
+@dataclasses.dataclass
+class BucketedSet:
+    """A sorted key/rowID set partitioned into fixed-size buckets.
+
+    ``keys``/``row_ids`` are the flat sorted arrays padded to
+    ``num_buckets * bucket_size`` with MAX-sentinel keys; the 2-D *bucket
+    matrix* view is just a reshape of the same buffer (zero-copy), which is
+    the packed row layout's natural TPU form.
+    """
+
+    keys: KeyArray            # (num_buckets * bucket_size,), sorted, padded
+    row_ids: jnp.ndarray      # (num_buckets * bucket_size,) int32, padded w/ -1
+    reps: KeyArray            # (num_buckets,) last key of each bucket
+    bucket_size: int
+    n: int                    # true (unpadded) number of keys
+
+    tree_flatten = None  # plain container; rebuilt per build()
+
+    @property
+    def num_buckets(self) -> int:
+        return self.reps.shape[0]
+
+    def bucket_matrix(self) -> KeyArray:
+        return self.keys.reshape(self.num_buckets, self.bucket_size)
+
+    def rowid_matrix(self) -> jnp.ndarray:
+        return self.row_ids.reshape(self.num_buckets, self.bucket_size)
+
+
+def build_buckets(keys: KeyArray, row_ids: jnp.ndarray, bucket_size: int) -> BucketedSet:
+    """Sort (keys, row_ids) and partition into buckets (paper Alg. 1 l.1-9)."""
+    n = keys.shape[0]
+    if row_ids is None:
+        row_ids = jnp.arange(n, dtype=jnp.int32)
+    skeys, srow = sort_with_payload(keys, row_ids.astype(jnp.int32))
+
+    num_buckets = max(1, -(-n // bucket_size))  # ceil div
+    padded = num_buckets * bucket_size
+    pad = padded - n
+    if pad:
+        sentinel = key_max_sentinel(skeys, (pad,))
+        from .keys import concat_keys
+
+        skeys = concat_keys(skeys, sentinel)
+        srow = jnp.concatenate([srow, jnp.full((pad,), -1, dtype=jnp.int32)])
+
+    # Representative = last *real* key of each bucket: index
+    # min((b+1)*B, n) - 1 into the sorted array (Alg. 1 l.8).
+    b = jnp.arange(num_buckets, dtype=jnp.int32)
+    rep_idx = jnp.minimum((b + 1) * bucket_size, n) - 1
+    reps = skeys.take(rep_idx)
+
+    return BucketedSet(keys=skeys, row_ids=srow, reps=reps, bucket_size=bucket_size, n=n)
+
+
+def rep_duplicate_mask(reps: KeyArray) -> jnp.ndarray:
+    """Paper Sec. 3.1 duplicate handling: when consecutive buckets share a
+    representative (same key spilling over bucket boundaries), only the first
+    gets a triangle.  Returns True where a rep is a duplicate of its
+    predecessor (i.e. would NOT be materialized)."""
+    nb = reps.shape[0]
+    prev = reps[jnp.maximum(jnp.arange(nb) - 1, 0)]
+    dup = key_eq(reps, prev)
+    return dup & (jnp.arange(nb) > 0)
+
+
+# ---------------------------------------------------------------------------
+# Sort-based dispatch (reused by MoE): bucket boundaries by successor search.
+# ---------------------------------------------------------------------------
+
+def segment_bounds(sorted_ids: jnp.ndarray, num_segments: int):
+    """Start/end offsets of each id-segment in a sorted id array.
+
+    This is the same "two binary searches delimit my slice" pattern the
+    paper's batch-update kernel uses per bucket (Sec. 4), applied to MoE
+    token->expert dispatch.
+    """
+    seg = jnp.arange(num_segments, dtype=sorted_ids.dtype)
+    starts = jnp.searchsorted(sorted_ids, seg, side="left")
+    ends = jnp.searchsorted(sorted_ids, seg, side="right")
+    return starts.astype(jnp.int32), ends.astype(jnp.int32)

@@ -1,0 +1,184 @@
+"""cgRX: the paper's coarse-granular index, TPU-native.
+
+Build (paper Alg. 1/3): sort the key set, partition into buckets of size B,
+materialize only bucket representatives in the accelerated search structure.
+Lookup (paper Alg. 2): find the smallest representative >= k (successor
+search — the role of the ray/BVH machinery on the GPU), then post-filter
+inside the bucket's key-rowID slice.
+
+Point- and range-lookups both reduce to *rank queries* against the sorted
+structure:
+
+    rank_left(q)  = #keys <  q        rank_right(q) = #keys <= q
+
+computed hierarchically as  (rep successor search) * B + (in-bucket count),
+which maps 1:1 onto the paper's  (BVH traversal) + (bucket search)  split.
+The rep search runs through one of three backends:
+
+    'tree'   — lane-width fanout tree (fanout.py), the BVH analogue;
+    'binary' — plain binary search over reps (the B+/SA-style control);
+    'kernel' — Pallas successor/bucket kernels (kernels/ops.py), the
+               hardware path (interpret=True on CPU).
+
+Range lookup [l, u]  =  rank_left(l) .. rank_right(u)  on the flat sorted
+key-rowID array — one successor search + a sequential scan, exactly the
+paper's Sec. 3.2 procedure (and the reason cgRX beats RX by ~2x on ranges).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import fanout
+from .bucketing import BucketedSet, build_buckets, rep_duplicate_mask
+from .keys import (
+    KeyArray,
+    key_eq,
+    key_le,
+    key_lt,
+    searchsorted,
+)
+
+MISS = jnp.int32(-1)
+
+
+@dataclasses.dataclass
+class CgrxIndex:
+    buckets: BucketedSet
+    tree: fanout.FanoutTree
+    min_rep: KeyArray  # scalar-shaped (1,): keys[B-1] (paper Alg. 1 l.1)
+    max_rep: KeyArray  # scalar-shaped (1,): keys[n-1]
+    method: str = "tree"  # 'tree' | 'binary' | 'kernel'
+
+    @property
+    def bucket_size(self) -> int:
+        return self.buckets.bucket_size
+
+    @property
+    def num_buckets(self) -> int:
+        return self.buckets.num_buckets
+
+    @property
+    def n(self) -> int:
+        return self.buckets.n
+
+
+class LookupResult(NamedTuple):
+    bucket_id: jnp.ndarray  # int32, bucket containing the successor
+    row_id: jnp.ndarray     # int32, rowID of the key, or MISS (-1)
+    found: jnp.ndarray      # bool
+    position: jnp.ndarray   # int32 global rank_left position
+
+
+def build(keys: KeyArray, row_ids: Optional[jnp.ndarray], bucket_size: int,
+          *, fanout_width: int = 128, method: str = "tree") -> CgrxIndex:
+    buckets = build_buckets(keys, row_ids, bucket_size)
+    tree = fanout.build_tree(buckets.reps, fanout=fanout_width)
+    min_rep = buckets.reps[jnp.array([0])]
+    max_rep = buckets.reps[jnp.array([buckets.num_buckets - 1])]
+    return CgrxIndex(buckets=buckets, tree=tree, min_rep=min_rep,
+                     max_rep=max_rep, method=method)
+
+
+# ---------------------------------------------------------------------------
+# Rep successor search (the "ray" / BVH-traversal stage).
+# ---------------------------------------------------------------------------
+
+def _rep_search(index: CgrxIndex, queries: KeyArray, side: str) -> jnp.ndarray:
+    if index.method == "binary":
+        return searchsorted(index.buckets.reps, queries, side=side)
+    if index.method == "kernel":
+        from repro.kernels import ops as kops
+
+        return kops.successor_search(index.buckets.reps, queries, side=side)
+    return fanout.descend(index.tree, queries, side=side)
+
+
+def _bucket_count(index: CgrxIndex, bucket_id: jnp.ndarray, queries: KeyArray,
+                  side: str) -> jnp.ndarray:
+    """#keys (<) / (<=) q inside bucket ``bucket_id`` (post-filter stage)."""
+    if index.method == "kernel":
+        from repro.kernels import ops as kops
+
+        return kops.bucket_rank(index.buckets, bucket_id, queries, side=side)
+    offs = (
+        jnp.minimum(bucket_id, index.num_buckets - 1)[..., None]
+        * index.bucket_size
+        + jnp.arange(index.bucket_size, dtype=jnp.int32)
+    )
+    rows = index.buckets.keys.take(offs)  # (Q, B) gather from flat buffer
+    qb = KeyArray(queries.lo[..., None],
+                  None if queries.hi is None else queries.hi[..., None])
+    cmp = key_le if side == "right" else key_lt
+    return jnp.sum(cmp(rows, qb).astype(jnp.int32), axis=-1)
+
+
+def rank(index: CgrxIndex, queries: KeyArray, side: str = "left") -> jnp.ndarray:
+    """Global rank of each query in the sorted key set (0..n)."""
+    b = _rep_search(index, queries, side)
+    inb = _bucket_count(index, b, queries, side)
+    full = b * index.bucket_size + inb
+    # b == num_buckets means q beyond max rep: rank = n.
+    return jnp.where(b >= index.num_buckets, index.n, jnp.minimum(full, index.n))
+
+
+# ---------------------------------------------------------------------------
+# Point lookup (paper Alg. 2 + post-filter, Sec. 3.1/3.4).
+# ---------------------------------------------------------------------------
+
+def lookup(index: CgrxIndex, queries: KeyArray) -> LookupResult:
+    pos = rank(index, queries, side="left")
+    in_range = pos < index.n
+    safe_pos = jnp.minimum(pos, index.n - 1)
+    hit_keys = index.buckets.keys.take(safe_pos)
+    found = in_range & key_eq(hit_keys, queries)
+    row = jnp.where(found, index.buckets.row_ids[safe_pos], MISS)
+    bucket_id = jnp.minimum(pos // index.bucket_size, index.num_buckets - 1)
+    return LookupResult(bucket_id=bucket_id.astype(jnp.int32),
+                        row_id=row.astype(jnp.int32),
+                        found=found, position=pos.astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Range lookup (paper Sec. 3.2: one successor search + sequential scan).
+# ---------------------------------------------------------------------------
+
+class RangeResult(NamedTuple):
+    start: jnp.ndarray   # int32 (Q,) first qualifying global position
+    count: jnp.ndarray   # int32 (Q,) number of qualifying keys
+    row_ids: jnp.ndarray  # int32 (Q, max_hits) qualifying rowIDs, -1 padded
+
+
+def range_lookup(index: CgrxIndex, lo: KeyArray, hi: KeyArray,
+                 max_hits: int) -> RangeResult:
+    start = rank(index, lo, side="left")
+    end = rank(index, hi, side="right")
+    count = jnp.maximum(end - start, 0)
+    offs = start[..., None] + jnp.arange(max_hits, dtype=jnp.int32)
+    valid = jnp.arange(max_hits, dtype=jnp.int32) < count[..., None]
+    rows = jnp.take(index.buckets.row_ids, jnp.minimum(offs, index.n - 1),
+                    mode="clip")
+    rows = jnp.where(valid, rows, MISS)
+    return RangeResult(start=start.astype(jnp.int32),
+                       count=count.astype(jnp.int32), row_ids=rows)
+
+
+# ---------------------------------------------------------------------------
+# Footprint accounting (consumed by core/footprint.py and benchmarks).
+# ---------------------------------------------------------------------------
+
+def index_nbytes(index: CgrxIndex) -> dict:
+    """Actual JAX buffer footprint, split the way the paper reports it."""
+    b = index.buckets
+    out = {
+        "key_rowid_bytes": b.keys.nbytes + b.row_ids.nbytes,
+        "rep_bytes": b.reps.nbytes,
+        "tree_bytes": index.tree.nbytes,
+    }
+    out["total_bytes"] = sum(out.values())
+    return out

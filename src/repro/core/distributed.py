@@ -1,0 +1,222 @@
+"""Mesh-sharded cgRX: range-partitioned coarse-granular index.
+
+Scaling the paper's single-GPU index to a pod: the sorted key space is
+range-partitioned into ``S`` contiguous shards along the mesh's *model*
+axis (each shard holds its own reps + buckets — a complete local cgRX),
+while query batches are data-parallel along the *data*/*pod* axes.
+
+A point lookup is then:
+  1. local successor search on every model shard (no communication);
+  2. exactly one shard owns the query's range -> combine the masked
+     (found, rowID) pairs with one ``psum`` over the model axis.
+
+This keeps the collective cost at one small all-reduce per batch
+(O(queries_per_device * 8 bytes)), independent of index size — the same
+"the accelerated structure never moves" philosophy the paper applies to
+updates.  Shard ownership is decided by per-shard max-key splitters, which
+are just the last representatives — no extra structure.
+
+Batch updates route insert/delete keys to their owning shard with the same
+splitter search; each shard applies its slice with nodes.apply_batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import cgrx
+from .keys import KeyArray, key_eq, key_le, searchsorted, sort_with_payload
+
+
+@dataclasses.dataclass
+class ShardedIndex:
+    """Stacked per-shard cgRX state (leading axis = shard)."""
+
+    # (S, n_shard) sorted keys + rowids, (S, nb_shard) reps.
+    keys: KeyArray
+    row_ids: jnp.ndarray
+    reps: KeyArray
+    splitters: KeyArray          # (S,) per-shard max key, replicated
+    bucket_size: int
+    n_per_shard: int
+    num_shards: int
+    mesh: Optional[Mesh] = None
+    shard_axis: str = "model"
+
+    @property
+    def num_buckets_per_shard(self) -> int:
+        return self.reps.shape[1]
+
+
+def build_sharded(keys: KeyArray, row_ids: Optional[jnp.ndarray],
+                  bucket_size: int, num_shards: int,
+                  mesh: Optional[Mesh] = None,
+                  shard_axis: str = "model") -> ShardedIndex:
+    """Global sort, then contiguous range partition into equal shards."""
+    n = keys.shape[0]
+    if row_ids is None:
+        row_ids = jnp.arange(n, dtype=jnp.int32)
+    skeys, srows = sort_with_payload(keys, row_ids.astype(jnp.int32))
+
+    per = -(-n // num_shards)
+    per = -(-per // bucket_size) * bucket_size  # round up to bucket multiple
+    padded = per * num_shards
+    pad = padded - n
+    if pad:
+        from .keys import concat_keys, key_max_sentinel
+
+        skeys = concat_keys(skeys, key_max_sentinel(skeys, (pad,)))
+        srows = jnp.concatenate([srows, jnp.full((pad,), -1, jnp.int32)])
+
+    keys2 = skeys.reshape(num_shards, per)
+    rows2 = srows.reshape(num_shards, per)
+    nb = per // bucket_size
+    reps = keys2.reshape(num_shards, nb, bucket_size)[:, :, bucket_size - 1]
+    splitters = reps[:, nb - 1]  # (S,) per-shard max
+    return ShardedIndex(keys=keys2, row_ids=rows2, reps=reps,
+                        splitters=splitters, bucket_size=bucket_size,
+                        n_per_shard=per, num_shards=num_shards,
+                        mesh=mesh, shard_axis=shard_axis)
+
+
+def _local_lookup(keys: KeyArray, rows: jnp.ndarray, reps: KeyArray,
+                  bucket_size: int, queries: KeyArray):
+    """Single-shard rank+probe (same math as cgrx.rank on local arrays)."""
+    from .keys import key_lt
+
+    nb = reps.shape[0]
+    n = keys.shape[0]
+    b = searchsorted(reps, queries, side="left")
+    offs = (jnp.minimum(b, nb - 1)[..., None] * bucket_size
+            + jnp.arange(bucket_size, dtype=jnp.int32))
+    seg = keys.take(offs)
+    qb = KeyArray(queries.lo[..., None],
+                  None if queries.hi is None else queries.hi[..., None])
+    inb = jnp.sum(key_lt(seg, qb).astype(jnp.int32), axis=-1)
+    pos = jnp.minimum(b * bucket_size + inb, n - 1)
+    found = (b < nb) & key_eq(keys.take(pos), queries)
+    rowid = jnp.where(found, rows[pos], 0)
+    return found, rowid
+
+
+def sharded_lookup(idx: ShardedIndex, queries: KeyArray,
+                   data_axis: Tuple[str, ...] = ("data",)) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Distributed point lookup under shard_map.
+
+    queries: (Q,) sharded over the data axes; index sharded over model.
+    Returns (found, row_id) with row_id = -1 on miss.
+    """
+    mesh = idx.mesh
+    assert mesh is not None, "build_sharded(..., mesh=...) required"
+    ax = idx.shard_axis
+
+    def local(keys_lo, keys_hi, rows, reps_lo, reps_hi, q_lo, q_hi):
+        keys = KeyArray(keys_lo[0], None if keys_hi is None else keys_hi[0])
+        reps = KeyArray(reps_lo[0], None if reps_hi is None else reps_hi[0])
+        q = KeyArray(q_lo, None if q_hi is None else q_hi)
+        found, rowid = _local_lookup(keys, rows[0], reps, idx.bucket_size, q)
+        # Exactly one shard can own a key; rank-0-style combine:
+        f = jax.lax.psum(found.astype(jnp.int32), ax)
+        r = jax.lax.psum(jnp.where(found, rowid + 1, 0), ax)
+        return f > 0, jnp.where(f > 0, r - 1, -1)
+
+    spec_idx = P(ax)           # shard-stacked arrays: leading dim over model
+    spec_q = P(data_axis)      # queries over data axes
+    spec_out = P(data_axis)
+
+    is64 = idx.keys.is64
+    args = [idx.keys.lo, idx.keys.hi, idx.row_ids, idx.reps.lo, idx.reps.hi,
+            queries.lo, queries.hi]
+    in_specs = (spec_idx, spec_idx if is64 else None, spec_idx,
+                spec_idx, spec_idx if is64 else None,
+                spec_q, spec_q if is64 else None)
+    # shard_map can't take None args; filter them.
+    live = [(a, s) for a, s in zip(args, in_specs) if a is not None]
+    arrs, specs = zip(*live)
+
+    def wrapper(*live_args):
+        it = iter(live_args)
+        full = [next(it) if a is not None else None for a in args]
+        return local(*full)
+
+    fn = jax.shard_map(wrapper, mesh=mesh, in_specs=tuple(specs),
+                       out_specs=(spec_out, spec_out), check_vma=False)
+    return fn(*arrs)
+
+
+def route_updates(idx: ShardedIndex, upd_keys: KeyArray) -> jnp.ndarray:
+    """Owning shard of each update key: successor over splitters (keys
+    beyond the last splitter go to the last shard)."""
+    s = searchsorted(idx.splitters, upd_keys, side="left")
+    return jnp.minimum(s, idx.num_shards - 1).astype(jnp.int32)
+
+
+def _local_rank(keys: KeyArray, reps: KeyArray, bucket_size: int,
+                queries: KeyArray, side: str) -> jnp.ndarray:
+    """Shard-local rank (#keys </<= q), the range-lookup primitive."""
+    from .keys import key_le, key_lt
+
+    nb = reps.shape[0]
+    n = keys.shape[0]
+    b = searchsorted(reps, queries, side=side)
+    offs = (jnp.minimum(b, nb - 1)[..., None] * bucket_size
+            + jnp.arange(bucket_size, dtype=jnp.int32))
+    seg = keys.take(offs)
+    qb = KeyArray(queries.lo[..., None],
+                  None if queries.hi is None else queries.hi[..., None])
+    cmp = key_le if side == "right" else key_lt
+    inb = jnp.sum(cmp(seg, qb).astype(jnp.int32), axis=-1)
+    return jnp.where(b >= nb, n, jnp.minimum(b * bucket_size + inb, n))
+
+
+def sharded_range_count(idx: ShardedIndex, lo: KeyArray, hi: KeyArray,
+                        data_axis: Tuple[str, ...] = ("data",)
+                        ) -> jnp.ndarray:
+    """Distributed range-lookup COUNT: |{keys in [lo, hi]}| per query.
+
+    Each model shard computes its local (rank_right(hi) - rank_left(lo)),
+    clipped to its own range; one psum combines — a range over the whole
+    pod-sharded key space costs a single small all-reduce, preserving the
+    paper's 'one successor search + scan' cost shape at cluster scale.
+    Padded sentinel slots never count (they compare > every real key).
+    """
+    mesh = idx.mesh
+    assert mesh is not None
+    ax = idx.shard_axis
+    is64 = idx.keys.is64
+
+    def local(keys_lo, keys_hi, reps_lo, reps_hi, lo_lo, lo_hi, hi_lo, hi_hi):
+        keys = KeyArray(keys_lo[0], None if keys_hi is None else keys_hi[0])
+        reps = KeyArray(reps_lo[0], None if reps_hi is None else reps_hi[0])
+        lo_k = KeyArray(lo_lo, None if lo_hi is None else lo_hi)
+        hi_k = KeyArray(hi_lo, None if hi_hi is None else hi_hi)
+        start = _local_rank(keys, reps, idx.bucket_size, lo_k, "left")
+        end = _local_rank(keys, reps, idx.bucket_size, hi_k, "right")
+        cnt = jnp.maximum(end - start, 0)
+        return jax.lax.psum(cnt, ax)
+
+    spec_idx = P(ax)
+    spec_q = P(data_axis)
+    args = [idx.keys.lo, idx.keys.hi, idx.reps.lo, idx.reps.hi,
+            lo.lo, lo.hi, hi.lo, hi.hi]
+    in_specs = (spec_idx, spec_idx if is64 else None,
+                spec_idx, spec_idx if is64 else None,
+                spec_q, spec_q if is64 else None,
+                spec_q, spec_q if is64 else None)
+    live = [(a, s) for a, s in zip(args, in_specs) if a is not None]
+    arrs, specs = zip(*live)
+
+    def wrapper(*live_args):
+        it = iter(live_args)
+        full = [next(it) if a is not None else None for a in args]
+        return local(*full)
+
+    fn = jax.shard_map(wrapper, mesh=mesh, in_specs=tuple(specs),
+                       out_specs=P(data_axis), check_vma=False)
+    return fn(*arrs)

@@ -1,0 +1,64 @@
+"""Memory-footprint accounting (paper Figs. 1a, 10a, 11a/c).
+
+Two accountings are reported side by side:
+
+  * ``actual``  — bytes of the JAX device buffers this implementation holds
+                  (what a TPU deployment would pay);
+  * ``paper``   — the paper's GPU memory model for triangle-based structures
+                  (36 B per triangle slot = 9 f32, plus a BVH overhead per
+                  materialized triangle; default 64 B/tri, calibrated so that
+                  RX's 2^26-key footprint lands in the paper's 2.2-2.6 GiB
+                  band), so that Fig. 11-style comparisons are reproducible.
+
+Throughput-per-byte ("bang for the buck", Fig. 11c) divides lookups/s by
+the *permanent* footprint, exactly as Sec. 6.1 does.
+"""
+from __future__ import annotations
+
+from typing import Union
+
+from . import baselines, cgrx, grid, nodes
+
+BVH_BYTES_PER_TRI = 64.0
+
+
+def footprint(obj, paper_model: bool = False) -> dict:
+    """Bytes held by an index structure, as {component: bytes, total_bytes}."""
+    if isinstance(obj, cgrx.CgrxIndex):
+        out = cgrx.index_nbytes(obj)
+        if paper_model:
+            # Paper accounting for the accelerated part: reps are triangles.
+            tri = obj.num_buckets
+            out = {
+                "key_rowid_bytes": out["key_rowid_bytes"],
+                "vertex_buffer_bytes": 36 * tri,
+                "bvh_bytes": int(BVH_BYTES_PER_TRI * tri),
+            }
+            out["total_bytes"] = sum(out.values())
+        return out
+    if isinstance(obj, grid.GridScene):
+        out = obj.nbytes_model(BVH_BYTES_PER_TRI)
+        out["total_bytes"] = sum(out.values())
+        return out
+    if isinstance(obj, nodes.NodeStore):
+        return obj.nbytes
+    if isinstance(obj, baselines.SortedArray):
+        return {"total_bytes": obj.nbytes, "key_rowid_bytes": obj.nbytes}
+    if isinstance(obj, baselines.HashTable):
+        return {"total_bytes": obj.nbytes, "table_bytes": obj.nbytes}
+    if isinstance(obj, baselines.BPlusTree):
+        return {
+            "total_bytes": obj.nbytes,
+            "key_rowid_bytes": obj.keys.nbytes + obj.row_ids.nbytes,
+            "tree_bytes": obj.tree.nbytes,
+        }
+    if isinstance(obj, baselines.RxIndex):
+        out = obj.nbytes_model(BVH_BYTES_PER_TRI)
+        out["total_bytes"] = sum(out.values())
+        return out
+    raise TypeError(f"no footprint accounting for {type(obj)}")
+
+
+def bang_for_buck(lookups_per_s: float, obj) -> float:
+    """Paper Fig. 11c metric: throughput divided by footprint in bytes."""
+    return lookups_per_s / max(footprint(obj)["total_bytes"], 1)

@@ -1,0 +1,444 @@
+"""Paper-faithful 3D-grid scene emulation (Sec. 3.1-3.3).
+
+cgRX-on-GPU places representative *triangles* on an integer grid
+(key -> (x,y,z) by bit slicing) and locates the successor representative by
+firing up to five rays (Algorithm 2): x-ray in the query's row, y-ray to a
+row marker, x-ray, z-ray to a plane marker, y-ray, x-ray.  The *optimized*
+representation (Algorithm 3) removes explicit markers by moving
+representatives to row ends, inserting auxiliary representatives, and
+encoding "only rep in its row" in the triangle winding order (flipping =
+back-side hit lets the follow-up x-ray be skipped).
+
+On TPU each "ray" becomes a *vector probe*: a successor search over a
+sorted coordinate directory (one masked VPU compare-count per tree level;
+kernels/grid_probe.py provides the Pallas probe).  The probe sequence,
+marker placement, duplicate handling, triangle budget and the
+primitive-index remap formula follow the paper exactly so that ray counts
+and memory accounting are comparable with Figures 8 and 10.
+
+Device-side coordinates are int32 (x<=23 bits, y<=23, z<=18 — the paper's
+own float-precision limits guarantee they fit), so no 64-bit device
+arithmetic is needed: triangle positions are (z, y, x) triples compared
+lexicographically.
+
+Scene construction runs host-side in numpy (the paper builds with a CUDA
+kernel; our device-side build cost is dominated by the sort in
+bucketing.py and is benchmarked there).  Lookups are pure jnp and jit-able.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .bucketing import BucketedSet, build_buckets
+from .keymap import KeyMapping, default_mapping
+from .keys import KeyArray
+
+MISS = -1
+
+
+# ---------------------------------------------------------------------------
+# Host-side coordinate extraction.
+# ---------------------------------------------------------------------------
+
+def _coords_np(kmap: KeyMapping, k: np.ndarray):
+    k = k.astype(np.uint64)
+    x = (k & np.uint64(kmap.x_max)).astype(np.int32)
+    y = ((k >> np.uint64(kmap.x_bits)) & np.uint64(kmap.y_max)).astype(np.int32)
+    z = ((k >> np.uint64(kmap.x_bits + kmap.y_bits))
+         & np.uint64(max(kmap.z_max, 0))).astype(np.int32)
+    return x, y, z
+
+
+def coords_device(kmap: KeyMapping, queries: KeyArray):
+    """(x, y, z) int32 coordinates of query keys, on device."""
+    lo = queries.lo
+    hi = queries.hi if queries.is64 else jnp.zeros_like(lo)
+    x = (lo & jnp.uint32(kmap.x_max)).astype(jnp.int32)
+    lo_part_bits = 32 - kmap.x_bits
+    y = (((lo >> jnp.uint32(kmap.x_bits))
+          | (hi << jnp.uint32(lo_part_bits))) & jnp.uint32(kmap.y_max)).astype(jnp.int32)
+    zshift = max(kmap.x_bits + kmap.y_bits - 32, 0)
+    z = ((hi >> jnp.uint32(zshift)) & jnp.uint32(max(kmap.z_max, 0))).astype(jnp.int32)
+    return x, y, z
+
+
+# ---------------------------------------------------------------------------
+# Lexicographic successor search over int32 coordinate tuples.
+# ---------------------------------------------------------------------------
+
+def searchsorted_lex(arrs: Sequence[jnp.ndarray], qs: Sequence[jnp.ndarray],
+                     side: str = "left") -> jnp.ndarray:
+    """Vectorized binary search over parallel sorted int32 arrays compared
+    lexicographically.  This is the pure-jnp probe oracle; one call = one
+    "ray" in the emulation."""
+    n = arrs[0].shape[0]
+    if n == 0:
+        return jnp.zeros(qs[0].shape, jnp.int32)
+    n_iter = max(1, int(np.ceil(np.log2(n + 1))))
+
+    def lex_le(mids):  # q <= mid  (side=left: go left when q <= mid)
+        out = jnp.zeros(qs[0].shape, bool)
+        tie = jnp.ones(qs[0].shape, bool)
+        for m, q in zip(mids, qs):
+            out = out | (tie & (q < m))
+            tie = tie & (q == m)
+        return (out | tie) if side == "left" else out  # left: q<=m, right: q<m
+
+    def body(_, lohi):
+        lo, hi = lohi
+        done = lo >= hi
+        mid = (lo + hi) // 2
+        mids = [jnp.take(a, mid, mode="clip") for a in arrs]
+        go_left = lex_le(mids)
+        lo2 = jnp.where(done, lo, jnp.where(go_left, lo, mid + 1))
+        hi2 = jnp.where(done, hi, jnp.where(go_left, mid, hi))
+        return lo2, hi2
+
+    lo = jnp.zeros(qs[0].shape, jnp.int32)
+    hi = jnp.full(qs[0].shape, n, jnp.int32)
+    lo, hi = jax.lax.fori_loop(0, n_iter, body, (lo, hi))
+    return lo
+
+
+# ---------------------------------------------------------------------------
+# Scene container.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class GridScene:
+    representation: str            # 'naive' | 'optimized'
+    kmap: KeyMapping
+    num_buckets: int
+    is64: bool
+    # Triangles sorted lexicographically by (z, y, x).
+    tri_z: jnp.ndarray
+    tri_y: jnp.ndarray
+    tri_x: jnp.ndarray
+    tri_prim: jnp.ndarray          # int32 primitive index (slot in vertex buffer)
+    tri_flip: jnp.ndarray          # bool (optimized only)
+    # y-ray target set: naive = explicit row markers (populated-row
+    # directory); optimized = row-END triangles (x == x_max).
+    rowdir_z: jnp.ndarray
+    rowdir_y: jnp.ndarray
+    rowdir_flip: jnp.ndarray       # flip bit of the row-end triangle
+    rowdir_prim: jnp.ndarray       # prim of the row-end triangle (optimized)
+    # z-ray target set: populated planes (naive) / plane-end triangles (opt).
+    plane_z: jnp.ndarray
+    # Bounds (Alg. 2 l.1-2), as (1,)-shaped KeyArrays.
+    min_rep: KeyArray
+    max_rep: KeyArray
+    multi_line: bool
+    multi_plane: bool
+    triangles_materialized: int
+    slots_allocated: int
+
+    def nbytes_model(self, bvh_bytes_per_tri: float = 64.0) -> dict:
+        """Paper memory model: 36 B per triangle slot (9 f32) in the vertex
+        buffer + per-materialized-triangle BVH overhead."""
+        return {
+            "vertex_buffer_bytes": 36 * self.slots_allocated,
+            "bvh_bytes": int(bvh_bytes_per_tri * self.triangles_materialized),
+        }
+
+
+class GridLookupResult(NamedTuple):
+    bucket_id: jnp.ndarray  # int32 bucketID or MISS(-1)
+    rays: jnp.ndarray       # int32 rays fired (paper Fig. 8 metric)
+
+
+def remap_prim(prim: jnp.ndarray, num_buckets: int) -> jnp.ndarray:
+    """Paper Sec. 3.3 primitive-index -> bucketID remap."""
+    nb = num_buckets
+    return jnp.where(prim >= 2 * nb, prim - 2 * nb + 1,
+                     jnp.where(prim >= nb, prim - nb + 1, prim)).astype(jnp.int32)
+
+
+def _sorted_tris(z, y, x, prim, flip):
+    order = np.lexsort((x, y, z))
+    return z[order], y[order], x[order], prim[order], flip[order]
+
+
+def _pad1(a: np.ndarray, fill) -> np.ndarray:
+    """Ensure arrays are never zero-length (keeps gathers well-defined)."""
+    if len(a) == 0:
+        return np.array([fill], dtype=a.dtype if a.dtype != bool else bool)
+    return a
+
+
+# ---------------------------------------------------------------------------
+# Construction: naive representation (Algorithm 1).
+# ---------------------------------------------------------------------------
+
+def build_naive(buckets: BucketedSet, kmap: Optional[KeyMapping] = None) -> GridScene:
+    reps = buckets.reps.to_numpy().astype(np.uint64)
+    nb = len(reps)
+    if kmap is None:
+        kmap = default_mapping(buckets.reps.is64)
+    x, y, z = _coords_np(kmap, reps)
+    rowkey = (z.astype(np.int64) << kmap.y_bits) | y
+
+    is_dup = np.concatenate([[False], reps[1:] == reps[:-1]])
+    mat = ~is_dup                                              # Alg.1 l.11
+    prev_rowkey = np.concatenate([[-1], rowkey[:-1]])
+    prev_plane = np.concatenate([[-1], z[:-1]])
+    multi_line = bool(rowkey[0] != rowkey[-1])                 # Alg.1 l.2
+    multi_plane = bool(z[0] != z[-1])                          # Alg.1 l.3
+
+    first_in_row = mat & (rowkey != prev_rowkey)               # Alg.1 l.13
+    first_in_plane = mat & (z != prev_plane)                   # Alg.1 l.15
+
+    sel = np.nonzero(mat)[0]
+    tz, ty, tx, tp, tf = _sorted_tris(
+        z[sel], y[sel], x[sel], sel.astype(np.int32), np.zeros(len(sel), bool))
+
+    if multi_line:
+        rsel = np.nonzero(first_in_row)[0]
+    else:
+        rsel = sel[:1]
+    rorder = np.lexsort((y[rsel], z[rsel]))
+    rdz, rdy = z[rsel][rorder], y[rsel][rorder]
+
+    if multi_plane:
+        psel = np.nonzero(first_in_plane)[0]
+        pz = np.sort(z[psel])
+    else:
+        pz = z[sel[:1]]
+
+    n_mark = (len(rsel) if multi_line else 0) + (len(pz) if multi_plane else 0)
+    scene = GridScene(
+        representation="naive", kmap=kmap, num_buckets=nb,
+        is64=buckets.reps.is64,
+        tri_z=jnp.asarray(tz), tri_y=jnp.asarray(ty), tri_x=jnp.asarray(tx),
+        tri_prim=jnp.asarray(tp), tri_flip=jnp.asarray(tf),
+        rowdir_z=jnp.asarray(_pad1(rdz, 1 << 30)),
+        rowdir_y=jnp.asarray(_pad1(rdy, 1 << 30)),
+        rowdir_flip=jnp.asarray(_pad1(np.zeros(len(rdz), bool), False)),
+        rowdir_prim=jnp.asarray(_pad1(np.full(len(rdz), -1, np.int32), -1)),
+        plane_z=jnp.asarray(_pad1(pz, 1 << 30)),
+        min_rep=buckets.reps[jnp.array([0])],
+        max_rep=buckets.reps[jnp.array([nb - 1])],
+        multi_line=multi_line, multi_plane=multi_plane,
+        triangles_materialized=int(mat.sum()) + n_mark,
+        slots_allocated=nb + (int(multi_line) + int(multi_plane)) * nb,  # l.5-6
+    )
+    return scene
+
+
+# ---------------------------------------------------------------------------
+# Construction: optimized representation (Algorithm 3).
+# ---------------------------------------------------------------------------
+
+def build_optimized(buckets: BucketedSet, keys_sorted: np.ndarray,
+                    kmap: Optional[KeyMapping] = None) -> GridScene:
+    reps = buckets.reps.to_numpy().astype(np.uint64)
+    nb = len(reps)
+    n = buckets.n
+    if kmap is None:
+        kmap = default_mapping(buckets.reps.is64)
+    B = buckets.bucket_size
+    x, y, z = _coords_np(kmap, reps)
+    rowkey = (z.astype(np.int64) << kmap.y_bits) | y
+    x_max, y_max = kmap.x_max, kmap.y_max
+
+    rep_idx = np.minimum((np.arange(nb) + 1) * B, n) - 1
+    has_next = rep_idx + 1 < n
+    next_key = keys_sorted[np.minimum(rep_idx + 1, n - 1)].astype(np.uint64)
+    nx, ny, nz = _coords_np(kmap, next_key)
+    nk_row = np.where(has_next, (nz.astype(np.int64) << kmap.y_bits) | ny, -1)
+
+    prev_row = np.concatenate([[-1], rowkey[:-1]])
+    next_rep_row = np.concatenate([rowkey[1:], [-1]])
+    next_rep_z = np.concatenate([z[1:], [-1]]).astype(np.int64)
+    is_dup = np.concatenate([[False], reps[1:] == reps[:-1]])
+
+    multi_line = bool(rowkey[0] != rowkey[-1])
+    multi_plane = bool(z[0] != z[-1])
+
+    movable = nk_row != rowkey                                   # l.10
+    needs_rep = (~is_dup) | (movable & (x != x_max))             # l.13
+    needs_row_mark = (~movable) & (rowkey != next_rep_row)       # l.14
+    needs_plane_mark = (y != y_max) & (z.astype(np.int64) != next_rep_z)  # l.15
+    do_flip = movable & (prev_row != rowkey)                     # l.18
+
+    parts = []
+    sel = np.nonzero(needs_rep)[0]
+    rx = np.where(movable[sel], x_max, x[sel]).astype(np.int32)
+    parts.append((z[sel], y[sel], rx, sel.astype(np.int32), do_flip[sel]))
+    if multi_line:                                               # l.20-21
+        m = np.nonzero(needs_row_mark)[0]
+        parts.append((z[m], y[m], np.full(len(m), x_max, np.int32),
+                      (m + nb).astype(np.int32), np.zeros(len(m), bool)))
+    if multi_plane:                                              # l.22-23
+        m = np.nonzero(needs_plane_mark)[0]
+        parts.append((z[m], np.full(len(m), y_max, np.int32),
+                      np.full(len(m), x_max, np.int32),
+                      (m + 2 * nb).astype(np.int32), np.zeros(len(m), bool)))
+
+    tz = np.concatenate([p[0] for p in parts])
+    ty = np.concatenate([p[1] for p in parts])
+    tx = np.concatenate([p[2] for p in parts])
+    tp = np.concatenate([p[3] for p in parts])
+    tf = np.concatenate([p[4] for p in parts])
+    tz, ty, tx, tp, tf = _sorted_tris(tz, ty, tx, tp, tf)
+
+    # y-ray target set: row-END triangles (x == x_max), deduped per row
+    # keeping the lowest prim (deterministic closest-hit).
+    is_end = tx == x_max
+    eidx = np.nonzero(is_end)[0]
+    erk = (tz[eidx].astype(np.int64) << kmap.y_bits) | ty[eidx]
+    keep = np.concatenate([[True], erk[1:] != erk[:-1]]) if len(erk) else np.zeros(0, bool)
+    eidx = eidx[keep]
+
+    # z-ray target set: plane-end triangles (x_max, y_max).
+    pidx = eidx[ty[eidx] == y_max]
+    pz = tz[pidx]
+
+    scene = GridScene(
+        representation="optimized", kmap=kmap, num_buckets=nb,
+        is64=buckets.reps.is64,
+        tri_z=jnp.asarray(tz), tri_y=jnp.asarray(ty), tri_x=jnp.asarray(tx),
+        tri_prim=jnp.asarray(tp), tri_flip=jnp.asarray(tf),
+        rowdir_z=jnp.asarray(_pad1(tz[eidx], 1 << 30)),
+        rowdir_y=jnp.asarray(_pad1(ty[eidx], 1 << 30)),
+        rowdir_flip=jnp.asarray(_pad1(tf[eidx], False)),
+        rowdir_prim=jnp.asarray(_pad1(tp[eidx], -1)),
+        plane_z=jnp.asarray(_pad1(pz, 1 << 30)),
+        min_rep=buckets.reps[jnp.array([0])],
+        max_rep=buckets.reps[jnp.array([nb - 1])],
+        multi_line=multi_line, multi_plane=multi_plane,
+        triangles_materialized=len(tz),
+        slots_allocated=(1 + int(multi_line) + int(multi_plane)) * nb,  # l.5
+    )
+    return scene
+
+
+# ---------------------------------------------------------------------------
+# Lookup: Algorithm 2 (both representations).
+# ---------------------------------------------------------------------------
+
+def lookup(scene: GridScene, queries: KeyArray,
+           use_kernel: bool = False) -> GridLookupResult:
+    """Point lookup.  ``use_kernel=True`` routes every probe ("ray")
+    through the Pallas lexicographic-count kernel (kernels/grid_probe.py)
+    instead of the pure-jnp binary search — same results, hardware path.
+    Probes of lower arity pad the missing coordinates with zeros."""
+    from .keys import key_lt
+
+    global _succ
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        def probe(arrs, qs):
+            z = [jnp.zeros_like(arrs[0])] * (3 - len(arrs))
+            qz_pad = [jnp.zeros_like(qs[0])] * (3 - len(qs))
+            a = list(arrs) + z
+            q = list(qs) + qz_pad
+            return kops.ray_probe(a[0], a[1], a[2], q[0], q[1], q[2])
+    else:
+        probe = searchsorted_lex
+
+    kmap = scene.kmap
+    qx, qy, qz = coords_device(kmap, queries)
+    T = scene.tri_z.shape[0]
+    R = scene.rowdir_z.shape[0]
+
+    below = key_lt(queries, scene.min_rep[jnp.array(0)])        # l.1
+    above = key_lt(scene.max_rep[jnp.array(0)], queries)        # l.2
+
+    zeros = jnp.zeros_like(qx)
+    rays = jnp.zeros(qx.shape, jnp.int32)
+
+    # Ray 1: xCast(key.x, key.y, key.z) — successor among triangles, hit iff
+    # it lies in the query's row.
+    i1 = probe((scene.tri_z, scene.tri_y, scene.tri_x), (qz, qy, qx))
+    i1c = jnp.minimum(i1, T - 1)
+    hit1 = (i1 < T) & (scene.tri_z[i1c] == qz) & (scene.tri_y[i1c] == qy)
+    prim1 = scene.tri_prim[i1c]
+    rays = rays + 1
+
+    # Ray 2: yCast from the next row — probes the marker / row-end set.
+    j = probe((scene.rowdir_z, scene.rowdir_y), (qz, qy + 1))
+    jc = jnp.minimum(j, R - 1)
+    hit2 = (j < R) & (scene.rowdir_z[jc] == qz)
+    row2_y = scene.rowdir_y[jc]
+    flip2 = scene.rowdir_flip[jc] & hit2
+    prim2_end = scene.rowdir_prim[jc]
+    rays = rays + jnp.where(hit1, 0, 1)
+
+    # Ray 3: xCast(0, row2_y, qz) — first triangle of the discovered row
+    # (skipped on a back-side = flipped hit).
+    i3 = probe((scene.tri_z, scene.tri_y, scene.tri_x),
+               (qz, row2_y, zeros))
+    prim3 = scene.tri_prim[jnp.minimum(i3, T - 1)]
+    rays = rays + jnp.where((~hit1) & hit2 & (~flip2), 1, 0)
+
+    # Rays 4-6: zCast to the next populated plane, then yCast from y=0,
+    # then xCast (the last skipped on a flipped row-end hit).
+    p = probe((scene.plane_z,), (qz + 1,)).astype(jnp.int32)
+    pc = jnp.minimum(p, scene.plane_z.shape[0] - 1)
+    plane4 = scene.plane_z[pc]
+    j4 = probe((scene.rowdir_z, scene.rowdir_y), (plane4, zeros))
+    j4c = jnp.minimum(j4, R - 1)
+    row4_y = scene.rowdir_y[j4c]
+    flip4 = scene.rowdir_flip[j4c]
+    prim4_end = scene.rowdir_prim[j4c]
+    i5 = probe((scene.tri_z, scene.tri_y, scene.tri_x),
+               (plane4, row4_y, zeros))
+    prim5 = scene.tri_prim[jnp.minimum(i5, T - 1)]
+    need_z = (~hit1) & (~hit2)
+    rays = rays + jnp.where(need_z, jnp.where(flip4, 2, 3), 0)
+
+    prim = jnp.where(
+        hit1, prim1,
+        jnp.where(hit2, jnp.where(flip2, prim2_end, prim3),
+                  jnp.where(flip4, prim4_end, prim5)))
+    if scene.representation == "optimized":
+        bucket = remap_prim(prim, scene.num_buckets)
+    else:
+        bucket = prim  # naive: prim index == bucketID
+    bucket = jnp.where(below, 0, bucket)
+    bucket = jnp.where(above, MISS, bucket)
+    rays = jnp.where(below | above, 0, rays)
+    return GridLookupResult(bucket_id=bucket.astype(jnp.int32), rays=rays)
+
+
+# ---------------------------------------------------------------------------
+# Convenience: full point lookup (bucket via scene + post-filter).
+# ---------------------------------------------------------------------------
+
+def build_scene(keys: KeyArray, row_ids: Optional[jnp.ndarray], bucket_size: int,
+                representation: str = "optimized",
+                kmap: Optional[KeyMapping] = None) -> Tuple[GridScene, BucketedSet]:
+    buckets = build_buckets(keys, row_ids, bucket_size)
+    if representation == "naive":
+        scene = build_naive(buckets, kmap)
+    else:
+        keys_sorted = buckets.keys.to_numpy()[: buckets.n]
+        scene = build_optimized(buckets, keys_sorted, kmap)
+    return scene, buckets
+
+
+def point_lookup(scene: GridScene, buckets: BucketedSet,
+                 queries: KeyArray):
+    """bucketID via the ray emulation + in-bucket post-filter -> rowID."""
+    from .keys import key_eq, key_le, key_lt
+
+    res = lookup(scene, queries)
+    B = buckets.bucket_size
+    nb = buckets.num_buckets
+    bid = jnp.clip(res.bucket_id, 0, nb - 1)
+    offs = bid[..., None] * B + jnp.arange(B, dtype=jnp.int32)
+    rows = buckets.keys.take(offs)
+    qb = KeyArray(queries.lo[..., None],
+                  None if queries.hi is None else queries.hi[..., None])
+    inb = jnp.sum(key_lt(rows, qb).astype(jnp.int32), axis=-1)
+    pos = bid * B + inb
+    safe = jnp.minimum(pos, buckets.n - 1)
+    found = (res.bucket_id >= 0) & (pos < buckets.n) & key_eq(buckets.keys.take(safe), queries)
+    rowid = jnp.where(found, buckets.row_ids[safe], MISS)
+    return rowid.astype(jnp.int32), found, res.rays

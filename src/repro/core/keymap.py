@@ -1,0 +1,90 @@
+"""Key -> 3D-coordinate mappings (paper Sec. 2.1 / 5.2).
+
+RX/cgRX embed keys on an integer grid:  ``k -> (x, y, z)`` by bit slicing,
+with 23/23/18 bits for 64-bit keys (float-precision limit of RT cores) and
+23/9/0 for 32-bit keys (single plane).
+
+On TPU there is no float-precision cliff (we compare uint32 pairs exactly),
+but the *row/plane decomposition* is retained because the paper's lookup
+algorithm (Algorithm 2) is expressed in terms of rows (same y,z) and planes
+(same z).  The *scaled* mapping (multiplying y by 2^15 and z by 2^25) exists
+in the paper purely to steer OptiX's opaque BVH builder to group bounding
+volumes along the x-axis (Fig. 9); our grouping is explicit and always
+"along x" (we build on the sorted rep array), so scaling is accepted as a
+config knob but is a no-op for correctness and grouping — recorded in
+DESIGN.md Sec. 2 as a changed assumption.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from .keys import KeyArray
+
+X_BITS_64, Y_BITS_64, Z_BITS_64 = 23, 23, 18
+X_BITS_32, Y_BITS_32, Z_BITS_32 = 23, 9, 0
+
+
+@dataclasses.dataclass(frozen=True)
+class KeyMapping:
+    """Bit-slice mapping of a key into (x, y, z) integer coordinates."""
+
+    x_bits: int
+    y_bits: int
+    z_bits: int
+    # Paper's scaled mapping k -> (x, 2^15 * y, 2^25 * z); see module docstring.
+    y_scale_log2: int = 0
+    z_scale_log2: int = 0
+
+    @property
+    def x_max(self) -> int:
+        return (1 << self.x_bits) - 1
+
+    @property
+    def y_max(self) -> int:
+        return (1 << self.y_bits) - 1
+
+    @property
+    def z_max(self) -> int:
+        return (1 << self.z_bits) - 1 if self.z_bits else 0
+
+    def coords(self, keys: KeyArray):
+        """Return integer (x, y, z) uint32 coordinate arrays."""
+        lo = keys.lo
+        x = lo & jnp.uint32(self.x_max)
+        if keys.is64:
+            hi = keys.hi
+            # y bits straddle the 32-bit boundary for the default 23/23/18 map:
+            # lo[31:x_bits] supplies the low (32 - x_bits) y-bits, hi supplies
+            # the rest.
+            lo_part = lo >> jnp.uint32(self.x_bits)
+            lo_part_bits = 32 - self.x_bits
+            y = (lo_part | (hi << jnp.uint32(lo_part_bits))) & jnp.uint32(self.y_max)
+            z_shift = self.x_bits + self.y_bits - 32  # bits of hi consumed by y
+            z = (hi >> jnp.uint32(max(z_shift, 0))) & jnp.uint32(self.z_max if self.z_bits else 0)
+        else:
+            y = (lo >> jnp.uint32(self.x_bits)) & jnp.uint32(self.y_max)
+            z = jnp.zeros_like(lo)
+        return x, y, z
+
+    def rowkey(self, keys: KeyArray) -> jnp.ndarray:
+        """(z,y) combined — equal rowkey <=> same row.  Paper's ``k.yz``."""
+        x, y, z = self.coords(keys)
+        return (z.astype(jnp.uint32) << jnp.uint32(self.y_bits)) | y
+
+    def planekey(self, keys: KeyArray) -> jnp.ndarray:
+        """Paper's ``k.z``."""
+        _, _, z = self.coords(keys)
+        return z
+
+
+DEFAULT_64 = KeyMapping(X_BITS_64, Y_BITS_64, Z_BITS_64)
+SCALED_64 = KeyMapping(X_BITS_64, Y_BITS_64, Z_BITS_64, y_scale_log2=15, z_scale_log2=25)
+DEFAULT_32 = KeyMapping(X_BITS_32, Y_BITS_32, Z_BITS_32)
+
+
+def default_mapping(is64: bool, scaled: bool = True) -> KeyMapping:
+    if not is64:
+        return DEFAULT_32
+    return SCALED_64 if scaled else DEFAULT_64

@@ -1,0 +1,234 @@
+"""Key arithmetic for 32-bit and 64-bit unsigned keys.
+
+JAX runs with 32-bit defaults (no ``jax_enable_x64``), so 64-bit keys are
+represented as ``(hi, lo)`` pairs of ``uint32`` arrays with lexicographic
+comparison.  This mirrors the paper's own *packed* row layout, which stores
+64-bit keys as two 32-bit numbers to circumvent 8-byte alignment (Sec. 3.4).
+
+All comparison helpers are elementwise and broadcast like jnp primitives.
+``KeyArray`` is a registered pytree so it can flow through jit/vmap/shard_map.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+U32_MAX = np.uint32(0xFFFFFFFF)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class KeyArray:
+    """A (possibly 64-bit) unsigned key array.
+
+    ``lo`` always holds the low 32 bits.  ``hi`` is ``None`` for 32-bit key
+    sets and holds the high 32 bits otherwise.  Invariant: ``hi is None`` or
+    ``hi.shape == lo.shape``.
+    """
+
+    lo: jnp.ndarray
+    hi: Optional[jnp.ndarray] = None
+
+    # -- pytree protocol ---------------------------------------------------
+    def tree_flatten(self):
+        if self.hi is None:
+            return (self.lo,), ("u32",)
+        return (self.lo, self.hi), ("u64",)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        if aux[0] == "u32":
+            return cls(lo=children[0], hi=None)
+        return cls(lo=children[0], hi=children[1])
+
+    # -- basics ------------------------------------------------------------
+    @property
+    def shape(self):
+        return self.lo.shape
+
+    @property
+    def ndim(self):
+        return self.lo.ndim
+
+    @property
+    def is64(self) -> bool:
+        return self.hi is not None
+
+    @property
+    def nbytes(self) -> int:
+        n = int(np.prod(self.shape)) if self.shape else 1
+        return n * (8 if self.is64 else 4)
+
+    def __len__(self):
+        return self.lo.shape[0]
+
+    def __getitem__(self, idx):
+        return KeyArray(self.lo[idx], None if self.hi is None else self.hi[idx])
+
+    def reshape(self, *shape):
+        return KeyArray(
+            self.lo.reshape(*shape),
+            None if self.hi is None else self.hi.reshape(*shape),
+        )
+
+    def take(self, idx, fill_value=None):
+        """Gather by index.  Out-of-range indices clamp (jnp default)."""
+        lo = jnp.take(self.lo, idx, mode="clip")
+        hi = None if self.hi is None else jnp.take(self.hi, idx, mode="clip")
+        return KeyArray(lo, hi)
+
+    def astuple(self) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+        return self.lo, self.hi
+
+    # -- host conversion (tests / benchmarks) --------------------------------
+    @staticmethod
+    def from_u64(arr) -> "KeyArray":
+        """Build from a host numpy uint64 array (64-bit key set)."""
+        arr = np.asarray(arr, dtype=np.uint64)
+        return KeyArray(
+            lo=jnp.asarray((arr & np.uint64(0xFFFFFFFF)).astype(np.uint32)),
+            hi=jnp.asarray((arr >> np.uint64(32)).astype(np.uint32)),
+        )
+
+    @staticmethod
+    def from_u32(arr) -> "KeyArray":
+        arr = np.asarray(arr, dtype=np.uint32)
+        return KeyArray(lo=jnp.asarray(arr), hi=None)
+
+    def to_numpy(self) -> np.ndarray:
+        """Back to host uint64 (or uint32) for test oracles."""
+        lo = np.asarray(self.lo, dtype=np.uint64)
+        if self.hi is None:
+            return lo.astype(np.uint32)
+        hi = np.asarray(self.hi, dtype=np.uint64)
+        return (hi << np.uint64(32)) | lo
+
+
+# ---------------------------------------------------------------------------
+# Elementwise comparisons (broadcasting).
+# ---------------------------------------------------------------------------
+
+def key_lt(a: KeyArray, b: KeyArray) -> jnp.ndarray:
+    if a.is64 or b.is64:
+        ahi = a.hi if a.is64 else jnp.zeros_like(a.lo)
+        bhi = b.hi if b.is64 else jnp.zeros_like(b.lo)
+        return (ahi < bhi) | ((ahi == bhi) & (a.lo < b.lo))
+    return a.lo < b.lo
+
+
+def key_le(a: KeyArray, b: KeyArray) -> jnp.ndarray:
+    if a.is64 or b.is64:
+        ahi = a.hi if a.is64 else jnp.zeros_like(a.lo)
+        bhi = b.hi if b.is64 else jnp.zeros_like(b.lo)
+        return (ahi < bhi) | ((ahi == bhi) & (a.lo <= b.lo))
+    return a.lo <= b.lo
+
+
+def key_eq(a: KeyArray, b: KeyArray) -> jnp.ndarray:
+    if a.is64 or b.is64:
+        ahi = a.hi if a.is64 else jnp.zeros_like(a.lo)
+        bhi = b.hi if b.is64 else jnp.zeros_like(b.lo)
+        return (ahi == bhi) & (a.lo == b.lo)
+    return a.lo == b.lo
+
+
+def key_gt(a: KeyArray, b: KeyArray) -> jnp.ndarray:
+    return key_lt(b, a)
+
+
+def key_ge(a: KeyArray, b: KeyArray) -> jnp.ndarray:
+    return key_le(b, a)
+
+
+def key_where(pred: jnp.ndarray, a: KeyArray, b: KeyArray) -> KeyArray:
+    hi = None
+    if a.is64 or b.is64:
+        ahi = a.hi if a.is64 else jnp.zeros_like(a.lo)
+        bhi = b.hi if b.is64 else jnp.zeros_like(b.lo)
+        hi = jnp.where(pred, ahi, bhi)
+    return KeyArray(jnp.where(pred, a.lo, b.lo), hi)
+
+
+def key_max_sentinel(like: KeyArray, shape=()) -> KeyArray:
+    """All-ones key: compares >= any real key.  Used to pad buckets."""
+    lo = jnp.full(shape, U32_MAX, dtype=jnp.uint32)
+    hi = jnp.full(shape, U32_MAX, dtype=jnp.uint32) if like.is64 else None
+    return KeyArray(lo, hi)
+
+
+def key_scalar(value: int, is64: bool) -> KeyArray:
+    if is64:
+        return KeyArray(
+            lo=jnp.uint32(value & 0xFFFFFFFF), hi=jnp.uint32((value >> 32) & 0xFFFFFFFF)
+        )
+    return KeyArray(lo=jnp.uint32(value & 0xFFFFFFFF), hi=None)
+
+
+# ---------------------------------------------------------------------------
+# Sorting and searching.
+# ---------------------------------------------------------------------------
+
+def sort_with_payload(keys: KeyArray, *payloads: jnp.ndarray):
+    """Stable sort of keys, carrying payload arrays along.
+
+    Uses ``lax.sort`` with ``num_keys=2`` for 64-bit keys (hi major) which is
+    the TPU-native multi-operand sort (the analogue of CUB DeviceRadixSort the
+    paper uses for its construction pipeline).
+    """
+    if keys.is64:
+        operands = (keys.hi, keys.lo) + payloads
+        out = jax.lax.sort(operands, num_keys=2, is_stable=True)
+        skeys = KeyArray(lo=out[1], hi=out[0])
+        return (skeys,) + tuple(out[2:])
+    operands = (keys.lo,) + payloads
+    out = jax.lax.sort(operands, num_keys=1, is_stable=True)
+    return (KeyArray(lo=out[0], hi=None),) + tuple(out[1:])
+
+
+def searchsorted(sorted_keys: KeyArray, queries: KeyArray, side: str = "left") -> jnp.ndarray:
+    """Vectorized binary search over a lexicographically sorted KeyArray.
+
+    Returns, per query, the insertion index in ``[0, n]``.  Pure-jnp oracle;
+    the Pallas successor kernel (kernels/successor.py) computes the same
+    quantity by tiled compare-count on the VPU.
+    """
+    n = sorted_keys.shape[0]
+    if n == 0:
+        return jnp.zeros(queries.shape, dtype=jnp.int32)
+    n_iter = max(1, int(np.ceil(np.log2(n + 1))))
+    cmp = key_lt if side == "right" else key_le
+
+    def body(_, lohi):
+        lo, hi = lohi
+        done = lo >= hi
+        mid = (lo + hi) // 2
+        mid_keys = sorted_keys.take(mid)
+        # side=left: first idx with sorted[idx] >= q  -> go left when q <= mid
+        go_left = cmp(queries, mid_keys)
+        lo = jnp.where(done, lo, jnp.where(go_left, lo, mid + 1))
+        hi = jnp.where(done, hi, jnp.where(go_left, mid, hi))
+        return lo, hi
+
+    lo = jnp.zeros(queries.shape, dtype=jnp.int32)
+    hi = jnp.full(queries.shape, n, dtype=jnp.int32)
+    lo, hi = jax.lax.fori_loop(0, n_iter, body, (lo, hi))
+    return lo
+
+
+def unique_mask(sorted_keys: KeyArray) -> jnp.ndarray:
+    """True at the first occurrence of each key in a sorted KeyArray."""
+    n = sorted_keys.shape[0]
+    prev = sorted_keys[jnp.maximum(jnp.arange(n) - 1, 0)]
+    first = jnp.arange(n) == 0
+    return first | ~key_eq(sorted_keys, prev)
+
+
+def concat_keys(a: KeyArray, b: KeyArray) -> KeyArray:
+    assert a.is64 == b.is64
+    lo = jnp.concatenate([a.lo, b.lo])
+    hi = jnp.concatenate([a.hi, b.hi]) if a.is64 else None
+    return KeyArray(lo, hi)

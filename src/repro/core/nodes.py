@@ -1,0 +1,452 @@
+"""Node-based updatable cgRX variant (paper Section 4).
+
+Each bucket is a linked list of fixed-size nodes living in one slab:
+a *representative node region* (node i = head of bucket i, contiguous, so
+the successor search result maps to a node address by multiplication) and a
+*linked node region* for nodes appended on splits.  Updates never touch the
+representatives or the search tree — the paper's whole point: RX's 78x
+post-update lookup regression cannot occur because the accelerated
+structure is immutable; growth happens in bucket-local chains.
+
+Batch updates, hardware adaptation: the paper dedicates one CUDA thread per
+bucket which walks its chain shifting keys one at a time.  A serial
+pointer-walk per lane is the wrong shape for the TPU VPU, so the same
+per-bucket work is expressed as a *masked merge*: every touched bucket
+gathers its chain contents + its slice of the sorted update batch (located
+by the same "two binary searches" the paper uses), drops deleted keys,
+merge-sorts, and writes the result back through its (possibly extended)
+chain.  Untouched buckets are not read or written.  Semantics (bucket-local
+cost, immutable reps, deletions-before-insertions, node reuse, split-like
+growth) are preserved; the per-key shift loop is not — recorded in
+DESIGN.md Sec. 2.
+
+Host/device split mirrors a real system: the host plans static shapes
+(touched-bucket count, per-bucket batch cap, chain-length bound) and the
+device executes fully-vectorized gathers/sorts/scatters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import fanout
+from .bucketing import build_buckets
+from .keys import (
+    KeyArray,
+    concat_keys,
+    key_eq,
+    key_le,
+    key_lt,
+    key_max_sentinel,
+    key_where,
+    searchsorted,
+    sort_with_payload,
+)
+
+NO_NODE = jnp.int32(-1)
+MISS = jnp.int32(-1)
+
+
+@dataclasses.dataclass
+class NodeStore:
+    """SoA slab of nodes + immutable successor-search structure."""
+
+    # --- device state ---
+    node_keys: KeyArray      # (C, N)
+    node_rows: jnp.ndarray   # (C, N) int32
+    node_next: jnp.ndarray   # (C,) int32, NO_NODE terminated
+    node_size: jnp.ndarray   # (C,) int32
+    node_maxkey: KeyArray    # (C,) largest valid key of the node
+    reps: KeyArray           # (num_buckets,) immutable representatives
+    tree: fanout.FanoutTree  # immutable successor-search tree
+    # --- host bookkeeping ---
+    num_buckets: int
+    node_cap: int            # N
+    capacity: int            # C
+    free_ptr: int            # next unused node in the linked region
+    max_chain: int           # upper bound on chain length (for bounded walks)
+    is64: bool
+
+    @property
+    def nbytes(self) -> dict:
+        out = {
+            "node_bytes": self.node_keys.nbytes + self.node_rows.nbytes
+            + self.node_next.nbytes + self.node_size.nbytes
+            + self.node_maxkey.nbytes,
+            "rep_bytes": self.reps.nbytes,
+            "tree_bytes": self.tree.nbytes,
+        }
+        out["total_bytes"] = sum(out.values())
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Initial bulk load (paper Sec. 4 "Initial construction").
+# ---------------------------------------------------------------------------
+
+def build(keys: KeyArray, row_ids: Optional[jnp.ndarray], node_cap: int,
+          *, fill: Optional[int] = None, slack: float = 1.0,
+          fanout_width: int = 128) -> NodeStore:
+    """Bulk load with buckets of ``fill`` keys (default N/2, paper's choice:
+    'divide them into buckets of size N/2 ... filled until a specified fill
+    state').  ``slack`` scales the linked-node region reservation."""
+    n = keys.shape[0]
+    fill = fill or node_cap // 2
+    buckets = build_buckets(keys, row_ids, fill)
+    nb = buckets.num_buckets
+
+    linked = max(int(nb * slack), 16)
+    C = nb + linked
+    N = node_cap
+
+    sent = key_max_sentinel(buckets.keys, (C, N))
+    nk_lo = sent.lo.at[:nb, :fill].set(buckets.keys.lo.reshape(nb, fill))
+    nk_hi = None
+    if buckets.keys.is64:
+        nk_hi = sent.hi.at[:nb, :fill].set(buckets.keys.hi.reshape(nb, fill))
+    node_keys = KeyArray(nk_lo, nk_hi)
+
+    node_rows = jnp.full((C, N), -1, jnp.int32)
+    node_rows = node_rows.at[:nb, :fill].set(buckets.row_ids.reshape(nb, fill))
+
+    # Sizes: last bucket may be partial (padded slots hold MAX sentinels).
+    sizes = jnp.zeros((C,), jnp.int32)
+    b = jnp.arange(nb, dtype=jnp.int32)
+    real = jnp.minimum(buckets.n - b * fill, fill)
+    sizes = sizes.at[:nb].set(jnp.maximum(real, 0))
+
+    maxkey = key_max_sentinel(buckets.keys, (C,))
+    maxkey = key_where(
+        jnp.arange(C) < nb,
+        _scatter_keys(maxkey, jnp.arange(nb), buckets.reps, C),
+        maxkey)
+
+    tree = fanout.build_tree(buckets.reps, fanout=fanout_width)
+    return NodeStore(
+        node_keys=node_keys, node_rows=node_rows,
+        node_next=jnp.full((C,), NO_NODE, jnp.int32),
+        node_size=sizes, node_maxkey=maxkey,
+        reps=buckets.reps, tree=tree,
+        num_buckets=nb, node_cap=N, capacity=C,
+        free_ptr=nb, max_chain=1, is64=keys.is64)
+
+
+def _scatter_keys(dst: KeyArray, idx, src: KeyArray, C) -> KeyArray:
+    lo = dst.lo.at[idx].set(src.lo)
+    hi = dst.hi.at[idx].set(src.hi) if dst.is64 else None
+    return KeyArray(lo, hi)
+
+
+# ---------------------------------------------------------------------------
+# Point lookup (rep search unchanged; then a bounded chain walk).
+# ---------------------------------------------------------------------------
+
+class NodeLookupResult(NamedTuple):
+    bucket_id: jnp.ndarray
+    row_id: jnp.ndarray
+    found: jnp.ndarray
+
+
+def lookup(store: NodeStore, queries: KeyArray) -> NodeLookupResult:
+    bid = fanout.descend(store.tree, queries, side="left")
+    # Keys beyond maxRep may exist after inserts: they live in the LAST
+    # bucket (the rep structure is immutable), so clamp instead of missing.
+    start = jnp.minimum(bid, store.num_buckets - 1).astype(jnp.int32)
+
+    # Walk: advance while this node's maxKey < q and a next node exists.
+    def step(_, node):
+        mk = store.node_maxkey.take(node)
+        nxt = store.node_next[node]
+        adv = key_lt(mk, queries) & (nxt != NO_NODE)
+        return jnp.where(adv, nxt, node)
+
+    node = jax.lax.fori_loop(0, max(store.max_chain - 1, 0), step, start)
+
+    # In-node binary-search-equivalent: count keys < q (sentinel-padded).
+    rows = store.node_keys.take(node[..., None] * store.node_cap
+                                + jnp.arange(store.node_cap, dtype=jnp.int32))
+    qb = KeyArray(queries.lo[..., None],
+                  None if queries.hi is None else queries.hi[..., None])
+    pos = jnp.sum(key_lt(rows, qb).astype(jnp.int32), axis=-1)
+    limit = store.node_size[node]
+    safe = jnp.minimum(pos, store.node_cap - 1)
+    hit_key = KeyArray(
+        jnp.take_along_axis(rows.lo, safe[..., None], axis=-1)[..., 0],
+        None if rows.hi is None else
+        jnp.take_along_axis(rows.hi, safe[..., None], axis=-1)[..., 0])
+    found = (pos < limit) & key_eq(hit_key, queries)
+    flat = node * store.node_cap + safe
+    row = jnp.where(found, store.node_rows.reshape(-1)[flat], MISS)
+    return NodeLookupResult(bucket_id=start, row_id=row.astype(jnp.int32),
+                            found=found)
+
+
+# ---------------------------------------------------------------------------
+# Batch insert/delete (paper Sec. 4 "Insertion and deletion").
+# ---------------------------------------------------------------------------
+
+def _walk_chains(store: NodeStore, bucket_ids: np.ndarray) -> np.ndarray:
+    """Host: chain node-id lists (T, max_chain), NO_NODE padded."""
+    nxt = np.asarray(store.node_next)
+    T = len(bucket_ids)
+    out = np.full((T, store.max_chain), -1, np.int32)
+    cur = bucket_ids.astype(np.int32).copy()
+    alive = np.ones(T, bool)
+    for i in range(store.max_chain):
+        out[:, i] = np.where(alive, cur, -1)
+        nx = np.where(alive, nxt[np.maximum(cur, 0)], -1)
+        alive = alive & (nx != -1)
+        cur = np.where(nx != -1, nx, cur)
+    return out
+
+
+def apply_batch(store: NodeStore,
+                ins_keys: Optional[KeyArray], ins_rows: Optional[jnp.ndarray],
+                del_keys: Optional[KeyArray],
+                *, fill_target: Optional[int] = None) -> NodeStore:
+    """Apply one update batch; returns a new NodeStore (functional update).
+
+    Paper order of operations: sort the batch, cancel insert∩delete pairs,
+    deletions first (frees space), then insertions with split-like growth.
+    """
+    N = store.node_cap
+    nb = store.num_buckets
+    fill_target = fill_target or N
+
+    is64 = store.is64
+    empty = KeyArray(jnp.zeros((0,), jnp.uint32),
+                     jnp.zeros((0,), jnp.uint32) if is64 else None)
+    if ins_keys is None:
+        ins_keys, ins_rows = empty, jnp.zeros((0,), jnp.int32)
+    if del_keys is None:
+        del_keys = empty
+
+    # Sort both batches; cancel keys appearing in both (paper).
+    if ins_keys.shape[0]:
+        ins_keys, ins_rows = sort_with_payload(ins_keys, ins_rows.astype(jnp.int32))
+    if del_keys.shape[0]:
+        (del_keys,) = sort_with_payload(del_keys)
+    if ins_keys.shape[0] and del_keys.shape[0]:
+        p = searchsorted(del_keys, ins_keys, side="left")
+        ps = jnp.minimum(p, del_keys.shape[0] - 1)
+        cancelled = key_eq(del_keys.take(ps), ins_keys) & (p < del_keys.shape[0])
+        # Cancelled inserts become MAX sentinels (sorted to the tail & masked).
+        ins_keys = key_where(cancelled, key_max_sentinel(ins_keys, ins_keys.shape), ins_keys)
+        ins_rows = jnp.where(cancelled, -1, ins_rows)
+        ins_keys, ins_rows = sort_with_payload(ins_keys, ins_rows)
+        n_ins = int(jnp.sum(~cancelled))
+    else:
+        n_ins = ins_keys.shape[0]
+
+    # Target bucket per key: successor over immutable reps; keys beyond the
+    # last rep go to the last bucket.
+    def targets(k: KeyArray) -> jnp.ndarray:
+        t = fanout.descend(store.tree, k, side="left")
+        return jnp.minimum(t, nb - 1).astype(jnp.int32)
+
+    ins_b = targets(ins_keys) if ins_keys.shape[0] else jnp.zeros((0,), jnp.int32)
+    del_b = targets(del_keys) if del_keys.shape[0] else jnp.zeros((0,), jnp.int32)
+    if n_ins < ins_keys.shape[0]:  # keep cancelled sentinels out of buckets
+        ins_b = jnp.where(jnp.arange(ins_keys.shape[0]) < n_ins, ins_b, nb)
+
+    # ---- host planning: touched buckets + static caps ----
+    ins_b_np = np.asarray(ins_b)[:n_ins]
+    del_b_np = np.asarray(del_b)
+    touched = np.unique(np.concatenate([ins_b_np, del_b_np])).astype(np.int32)
+    if len(touched) == 0:
+        return store
+    T = len(touched)
+    ins_start = np.searchsorted(ins_b_np, touched, side="left").astype(np.int32)
+    ins_end = np.searchsorted(ins_b_np, touched, side="right").astype(np.int32)
+    del_start = np.searchsorted(del_b_np, touched, side="left").astype(np.int32)
+    del_end = np.searchsorted(del_b_np, touched, side="right").astype(np.int32)
+    cap_ins = max(int((ins_end - ins_start).max()) if T else 0, 1)
+    cap_del = max(int((del_end - del_start).max()) if T else 0, 1)
+
+    chains = _walk_chains(store, touched)                  # (T, max_chain)
+    chain_valid = chains >= 0
+    old_slots = store.max_chain * N
+    L = old_slots + cap_ins
+
+    # ---- device: gather -> filter -> merge -> redistribute ----
+    chains_j = jnp.asarray(chains)
+    cv = jnp.asarray(chain_valid)
+
+    gidx = jnp.maximum(chains_j, 0)[..., None] * N + jnp.arange(N)  # (T, mc, N)
+    old_keys = store.node_keys.take(gidx.reshape(T, -1))            # (T, mc*N)
+    old_rows = jnp.take(store.node_rows.reshape(-1), gidx.reshape(T, -1), mode="clip")
+    slot_ok = (jnp.arange(N) < store.node_size[jnp.maximum(chains_j, 0)][..., None])
+    slot_ok = (slot_ok & cv[..., None]).reshape(T, -1)
+
+    # Deletions first (paper): membership test against this bucket's slice
+    # of the sorted delete batch.
+    if del_keys.shape[0]:
+        doffs = jnp.asarray(del_start)[:, None] + jnp.arange(cap_del)
+        dvalid = doffs < jnp.asarray(del_end)[:, None]
+        dk = del_keys.take(jnp.minimum(doffs, del_keys.shape[0] - 1))
+        # old_keys (T, mc*N) vs dk (T, cap_del): equality any
+        eq = (old_keys.lo[:, :, None] == dk.lo[:, None, :])
+        if is64:
+            eq &= (old_keys.hi[:, :, None] == dk.hi[:, None, :])
+        deleted = jnp.any(eq & dvalid[:, None, :], axis=-1)
+        # Delete each key at most once per duplicate (paper deletes one per
+        # delete-batch entry); we delete all duplicates of a deleted key —
+        # matching the benchmark workloads where keys are unique.
+        slot_ok = slot_ok & ~deleted
+
+    keep = slot_ok
+    sent = key_max_sentinel(old_keys, old_keys.shape)
+    old_keys = key_where(keep, old_keys, sent)
+    old_rows = jnp.where(keep, old_rows, -1)
+
+    ioffs = jnp.asarray(ins_start)[:, None] + jnp.arange(cap_ins)
+    ivalid = ioffs < jnp.asarray(ins_end)[:, None]
+    if ins_keys.shape[0]:
+        ik = ins_keys.take(jnp.minimum(ioffs, ins_keys.shape[0] - 1))
+        ik = key_where(ivalid, ik, key_max_sentinel(ik, ik.shape))
+        ir = jnp.where(ivalid, jnp.take(ins_rows, jnp.minimum(
+            ioffs, ins_rows.shape[0] - 1), mode="clip"), -1)
+    else:  # delete-only batch
+        ik = key_max_sentinel(store.node_keys, ioffs.shape)
+        ir = jnp.full(ioffs.shape, -1, jnp.int32)
+
+    merged = KeyArray(
+        jnp.concatenate([old_keys.lo, ik.lo], axis=1),
+        jnp.concatenate([old_keys.hi, ik.hi], axis=1) if is64 else None)
+    mrows = jnp.concatenate([old_rows, ir], axis=1)
+    if is64:
+        ops = jax.lax.sort((merged.hi, merged.lo, mrows), num_keys=2,
+                           is_stable=True, dimension=1)
+        merged, mrows = KeyArray(ops[1], ops[0]), ops[2]
+    else:
+        ops = jax.lax.sort((merged.lo, mrows), num_keys=1, is_stable=True,
+                           dimension=1)
+        merged, mrows = KeyArray(ops[0], None), ops[1]
+    counts = jnp.sum(keep, axis=1) + jnp.sum(ivalid, axis=1)       # (T,)
+
+    # ---- chain layout: reuse rep node + old linked nodes, then alloc ----
+    need_nodes = jnp.maximum(-(-counts // fill_target), 1)          # ceil
+    have_nodes = jnp.sum(cv, axis=1)
+    extra = jnp.maximum(need_nodes - have_nodes, 0)
+    extra_np = np.asarray(extra)
+    alloc_off = np.concatenate([[0], np.cumsum(extra_np)[:-1]]).astype(np.int32)
+    total_new = int(extra_np.sum())
+    new_max_chain = int(np.asarray(need_nodes).max())
+    mc2 = max(store.max_chain, new_max_chain)
+
+    if store.free_ptr + total_new > store.capacity:
+        store = _grow(store, store.free_ptr + total_new)
+
+    # chain2[t, j] = j-th node of bucket t's new chain.
+    j_idx = jnp.arange(mc2)
+    old_part = jnp.pad(chains_j, ((0, 0), (0, mc2 - store.max_chain)),
+                       constant_values=-1)
+    new_ids = store.free_ptr + jnp.asarray(alloc_off)[:, None] + (j_idx - have_nodes[:, None])
+    chain2 = jnp.where(j_idx < have_nodes[:, None], old_part,
+                       jnp.where(j_idx < need_nodes[:, None], new_ids, -1))
+    chain2 = chain2.astype(jnp.int32)
+
+    # Distribute merged keys: node j of bucket t gets merged[t, j*F:(j+1)*F]
+    # (F = fill_target), except full-pack tails; sizes + maxKey follow.
+    F = fill_target
+    take_pos = j_idx[:, None] * F + jnp.arange(N)                  # (mc2, N)
+    valid_pos = (jnp.arange(N) < F) & (take_pos < L)
+    tp = jnp.minimum(take_pos, L - 1)
+    tp_full = jnp.broadcast_to(tp.reshape(1, mc2 * N), (T, mc2 * N))
+    nk_lo = jnp.take_along_axis(merged.lo, tp_full, axis=1)
+    nk_hi = jnp.take_along_axis(merged.hi, tp_full, axis=1) if is64 else None
+    nr = jnp.take_along_axis(mrows, tp_full, axis=1)
+    in_count = (take_pos.reshape(-1)[None] < counts[:, None]) & valid_pos.reshape(-1)[None]
+    sentinel32 = jnp.uint32(0xFFFFFFFF)
+    nk_lo = jnp.where(in_count, nk_lo, sentinel32)
+    if is64:
+        nk_hi = jnp.where(in_count, nk_hi, sentinel32)
+    nr = jnp.where(in_count, nr, -1)
+
+    nk_lo = nk_lo.reshape(T, mc2, N)
+    nk_hi = nk_hi.reshape(T, mc2, N) if is64 else None
+    nr = nr.reshape(T, mc2, N)
+    node_counts = jnp.clip(counts[:, None] - j_idx[None, :] * F, 0, F)  # (T, mc2)
+
+    # maxKey: largest real key in the node; the chain's last occupied node
+    # keeps the bucket representative as maxKey so walks terminate exactly
+    # like the paper's (rep is an upper bound of the bucket by construction
+    # — except the LAST bucket, which absorbs > maxRep inserts; its tail
+    # node's maxKey is its true max key, and the walk's "next exists" guard
+    # handles it).
+    last_slot = jnp.maximum(node_counts - 1, 0)
+    mk_lo = jnp.take_along_axis(nk_lo, last_slot[..., None], axis=2)[..., 0]
+    mk_hi = (jnp.take_along_axis(nk_hi, last_slot[..., None], axis=2)[..., 0]
+             if is64 else None)
+
+    # ---- scatter back ----
+    valid_nodes = chain2 >= 0
+    ids = jnp.where(valid_nodes, chain2, store.capacity - 1)  # dummy, masked below
+    flat_ids = ids.reshape(-1)
+    m = valid_nodes.reshape(-1)
+
+    def scat(dst, upd):
+        return dst.at[flat_ids].set(jnp.where(m[:, None] if upd.ndim == 2 else m,
+                                              upd, dst[flat_ids]))
+
+    store_nk_lo = scat(store.node_keys.lo, nk_lo.reshape(-1, N))
+    store_nk_hi = (scat(store.node_keys.hi, nk_hi.reshape(-1, N)) if is64 else None)
+    store_nr = scat(store.node_rows, nr.reshape(-1, N))
+    store_sz = scat(store.node_size, node_counts.reshape(-1))
+    store_mk_lo = scat(store.node_maxkey.lo, mk_lo.reshape(-1))
+    store_mk_hi = (scat(store.node_maxkey.hi, mk_hi.reshape(-1)) if is64 else None)
+
+    nxt = jnp.where(j_idx[None, :] + 1 < need_nodes[:, None],
+                    jnp.roll(chain2, -1, axis=1), NO_NODE).astype(jnp.int32)
+    store_nx = scat(store.node_next, nxt.reshape(-1))
+
+    return dataclasses.replace(
+        store,
+        node_keys=KeyArray(store_nk_lo, store_nk_hi),
+        node_rows=store_nr, node_next=store_nx, node_size=store_sz,
+        node_maxkey=KeyArray(store_mk_lo, store_mk_hi),
+        free_ptr=store.free_ptr + total_new,
+        max_chain=mc2)
+
+
+def _grow(store: NodeStore, needed: int) -> NodeStore:
+    """Enlarge the linked-node region (paper: 'once this region has been
+    entirely used, we enlarge it by allocating additional memory')."""
+    new_cap = max(needed, int(store.capacity * 1.5) + 1)
+    add = new_cap - store.capacity
+    N = store.node_cap
+    pad_keys = key_max_sentinel(store.node_keys, (add, N))
+    nk = concat_keys(store.node_keys.reshape(-1), pad_keys.reshape(-1)).reshape(new_cap, N)
+    nr = jnp.concatenate([store.node_rows, jnp.full((add, N), -1, jnp.int32)])
+    nx = jnp.concatenate([store.node_next, jnp.full((add,), NO_NODE, jnp.int32)])
+    sz = jnp.concatenate([store.node_size, jnp.zeros((add,), jnp.int32)])
+    mk = concat_keys(store.node_maxkey, key_max_sentinel(store.node_maxkey, (add,)))
+    return dataclasses.replace(store, node_keys=nk, node_rows=nr, node_next=nx,
+                               node_size=sz, node_maxkey=mk, capacity=new_cap)
+
+
+# ---------------------------------------------------------------------------
+# Full rebuild (paper's baseline for Fig. 15): extract + bulk-load.
+# ---------------------------------------------------------------------------
+
+def extract(store: NodeStore) -> Tuple[KeyArray, jnp.ndarray, int]:
+    """All live key/rowID pairs, sorted, plus the live count."""
+    flat_keys = store.node_keys.reshape(-1)
+    flat_rows = store.node_rows.reshape(-1)
+    slot = jnp.arange(store.capacity * store.node_cap) % store.node_cap
+    owner = jnp.arange(store.capacity * store.node_cap) // store.node_cap
+    live = slot < store.node_size[owner]
+    keys = key_where(live, flat_keys, key_max_sentinel(flat_keys, flat_keys.shape))
+    rows = jnp.where(live, flat_rows, -1)
+    skeys, srows, slive = sort_with_payload(keys, rows, live.astype(jnp.int32))
+    n_live = int(jnp.sum(live))
+    return skeys, srows, n_live
+
+
+def rebuild(store: NodeStore) -> NodeStore:
+    skeys, srows, n_live = extract(store)
+    return build(skeys[:n_live], srows[:n_live], store.node_cap)

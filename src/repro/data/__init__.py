@@ -1,0 +1,1 @@
+from . import keygen, tokens  # noqa: F401

@@ -1,0 +1,111 @@
+"""Paper workload generators (Sec. 5.1 setup).
+
+Key sets: the first part is dense (all keys 0..d-1), the second is drawn
+uniformly from the remaining range; ``uniformity`` is the percentage drawn
+uniformly.  The set is shuffled and a key's final position is its rowID.
+Lookup batches: uniform over the key set, Zipf-skewed (Sec. 6.4), and
+hit-ratio mixes with in-range / out-of-range misses (Sec. 6.3).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.keys import KeyArray
+
+
+def keyset(n: int, uniformity: float, bits: int = 32,
+           seed: int = 0) -> Tuple[KeyArray, np.ndarray, np.ndarray]:
+    """Returns (keys (shuffled), row_ids, raw_np_u64)."""
+    rng = np.random.default_rng(seed)
+    space = (1 << bits) - 1
+    n_uniform = int(round(n * uniformity))
+    n_dense = n - n_uniform
+    dense = np.arange(n_dense, dtype=np.uint64)
+    if n_uniform:
+        # Draw without replacement from [n_dense, space); oversample+unique.
+        need = n_uniform
+        picked = []
+        while need > 0:
+            cand = rng.integers(n_dense, space, int(need * 1.3) + 16,
+                                dtype=np.uint64)
+            cand = np.unique(cand)
+            picked.append(cand[:need])
+            got = len(picked[-1])
+            need -= got
+        uni = np.concatenate(picked)[:n_uniform]
+        raw = np.concatenate([dense, uni])
+    else:
+        raw = dense
+    raw = np.unique(raw)
+    rng.shuffle(raw)                    # position after shuffle = rowID
+    keys = (KeyArray.from_u64(raw) if bits > 32
+            else KeyArray.from_u32(raw.astype(np.uint32)))
+    row_ids = np.arange(len(raw), dtype=np.int32)
+    return keys, row_ids, raw
+
+
+def uniform_lookups(raw: np.ndarray, q: int, seed: int = 1) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return raw[rng.integers(0, len(raw), q)]
+
+
+def zipf_lookups(raw: np.ndarray, q: int, theta: float,
+                 seed: int = 1) -> np.ndarray:
+    """Zipf over key-set ranks (theta = paper's coefficient; 0 = uniform)."""
+    rng = np.random.default_rng(seed)
+    if theta <= 0:
+        return uniform_lookups(raw, q, seed)
+    n = len(raw)
+    ranks = np.arange(1, n + 1, dtype=np.float64)
+    w = ranks ** (-theta)
+    w /= w.sum()
+    idx = rng.choice(n, size=q, p=w)
+    return raw[idx]
+
+
+def hit_ratio_lookups(raw: np.ndarray, q: int, hit_ratio: float,
+                      out_of_range: bool, bits: int,
+                      seed: int = 1) -> np.ndarray:
+    """Misses either inside the indexed value range or beyond it (Fig. 13)."""
+    rng = np.random.default_rng(seed)
+    n_hit = int(round(q * hit_ratio))
+    hits = raw[rng.integers(0, len(raw), n_hit)]
+    n_miss = q - n_hit
+    if n_miss == 0:
+        return hits
+    lo, hi = int(raw.min()), int(raw.max())
+    key_set = set(raw.tolist())
+    misses = []
+    while len(misses) < n_miss:
+        if out_of_range:
+            cand = rng.integers(hi + 1, (1 << bits) - 1, n_miss * 2,
+                                dtype=np.uint64)
+        else:
+            cand = rng.integers(lo, hi, n_miss * 2, dtype=np.uint64)
+        for c in cand:
+            if int(c) not in key_set:
+                misses.append(c)
+                if len(misses) == n_miss:
+                    break
+    out = np.concatenate([hits, np.array(misses, dtype=np.uint64)])
+    rng.shuffle(out)
+    return out
+
+
+def as_keys(raw: np.ndarray, bits: int) -> KeyArray:
+    return (KeyArray.from_u64(raw) if bits > 32
+            else KeyArray.from_u32(raw.astype(np.uint32)))
+
+
+def range_lookups(raw_sorted: np.ndarray, q: int, hits_per_range: int,
+                  seed: int = 1) -> Tuple[np.ndarray, np.ndarray]:
+    """Dense-range bounds with an expected number of hits (Fig. 12 setup:
+    dense 0% -uniformity key range)."""
+    rng = np.random.default_rng(seed)
+    n = len(raw_sorted)
+    starts = rng.integers(0, max(n - hits_per_range, 1), q)
+    lo = raw_sorted[starts]
+    hi = raw_sorted[np.minimum(starts + hits_per_range - 1, n - 1)]
+    return lo, hi

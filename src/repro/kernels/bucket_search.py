@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: in-bucket rank (the paper's bucket post-filter).
+
+After the successor search yields a bucketID, the paper searches the
+bucket's key slice with linear or binary search per thread (Sec. 3.4,
+Table 1).  Per-lane binary search is hostile to the VPU (divergent gather
+per step), so the TPU formulation is a *rank count*: the bucket row is a
+(B,)-slice in VMEM and
+
+    pos(q) = #{ keys_in_bucket (<|<=) q }
+
+is one vector compare + reduce — the vectorized equivalent of the paper's
+upper-bound binary search (it returns the identical index).  For large B
+the count streams bucket chunks, giving the same
+compute/footprint trade-off the paper tunes with the bucket size.
+
+Inputs are pre-gathered bucket rows (Q, B) (an XLA gather — the TPU's
+analogue of the coalesced per-thread bucket read) plus the queries (Q,).
+Grid: (q_blocks, chunk_blocks), chunks innermost, accumulated in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _rank_kernel(q_lo_ref, q_hi_ref, b_lo_ref, b_hi_ref, out_ref, *,
+                 side: str, bucket_b: int, block_b: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    ql = q_lo_ref[...]                     # (BQ, 1)
+    bl = b_lo_ref[...]                     # (BQ, BB)
+    if q_hi_ref is not None:
+        qh = q_hi_ref[...]
+        bh = b_hi_ref[...]
+        if side == "left":
+            below = (bh < qh) | ((bh == qh) & (bl < ql))
+        else:
+            below = (bh < qh) | ((bh == qh) & (bl <= ql))
+    else:
+        below = (bl < ql) if side == "left" else (bl <= ql)
+
+    base = j * block_b
+    gidx = base + jax.lax.broadcasted_iota(jnp.int32, below.shape, 1)
+    below &= gidx < bucket_b
+
+    out_ref[...] += jnp.sum(below.astype(jnp.int32), axis=-1, keepdims=True)
+
+
+def bucket_rank_kernel(rows_lo: jnp.ndarray, rows_hi: Optional[jnp.ndarray],
+                       q_lo: jnp.ndarray, q_hi: Optional[jnp.ndarray],
+                       side: str = "left", *, block_q: int = 256,
+                       block_b: int = 512, interpret: bool = True) -> jnp.ndarray:
+    """rows: (Q, B) gathered bucket keys; queries: (Q,).  Returns (Q,) int32."""
+    n_q, B = rows_lo.shape
+    is64 = rows_hi is not None
+    block_b = min(block_b, _cdiv(B, 128) * 128 if B >= 128 else B)
+    block_b = max(block_b, 1)
+
+    qp = _cdiv(n_q, block_q) * block_q
+    bp = _cdiv(B, block_b) * block_b
+
+    def pad2(a):
+        return jnp.pad(a, ((0, qp - n_q), (0, bp - B)))
+
+    def pad1(a):
+        return jnp.pad(a, (0, qp - n_q)).reshape(-1, 1)
+
+    rows_lo2 = pad2(rows_lo)
+    q_lo2 = pad1(q_lo)
+    rows_hi2 = pad2(rows_hi) if is64 else None
+    q_hi2 = pad1(q_hi) if is64 else None
+
+    grid = (qp // block_q, bp // block_b)
+    qspec = pl.BlockSpec((block_q, 1), lambda i, j: (i, 0))
+    bspec = pl.BlockSpec((block_q, block_b), lambda i, j: (i, j))
+    ospec = pl.BlockSpec((block_q, 1), lambda i, j: (i, 0))
+
+    kern = functools.partial(_rank_kernel, side=side, bucket_b=B,
+                             block_b=block_b)
+    if is64:
+        def kernel(ql, qh, bl, bh, o):
+            kern(ql, qh, bl, bh, o)
+        in_specs = [qspec, qspec, bspec, bspec]
+        args = (q_lo2, q_hi2, rows_lo2, rows_hi2)
+    else:
+        def kernel(ql, bl, o):
+            kern(ql, None, bl, None, o)
+        in_specs = [qspec, bspec]
+        args = (q_lo2, rows_lo2)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=ospec,
+        out_shape=jax.ShapeDtypeStruct((qp, 1), jnp.int32),
+        interpret=interpret,
+    )(*args)
+    return out.reshape(-1)[:n_q]

@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: the "ray" — lexicographic successor over (z,y,x).
+
+In the grid scene (core/grid.py) every xCast/yCast/zCast of the paper's
+Algorithm 2 is a successor search over a coordinate-sorted triangle
+directory.  This kernel computes the lexicographic rank
+
+    rank(q) = #{ i : (z_i, y_i, x_i) <lex (qz, qy, qx) }
+
+by streaming coordinate tiles through the VPU, identically shaped to the
+successor kernel but with a 3-term compare — one kernel models all three
+ray types (y-rays pass x=0, z-rays pass y=x=0).
+
+Coordinates are int32 (the paper's 23/23/18-bit mapping guarantees fit).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _lex3_kernel(qz_ref, qy_ref, qx_ref, tz_ref, ty_ref, tx_ref, out_ref, *,
+                 n_tri: int, block_t: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    qz = qz_ref[...][..., None]            # (BQ, 128, 1)
+    qy = qy_ref[...][..., None]
+    qx = qx_ref[...][..., None]
+    tz = tz_ref[...].reshape(1, 1, -1)     # (1, 1, BT*128)
+    ty = ty_ref[...].reshape(1, 1, -1)
+    tx = tx_ref[...].reshape(1, 1, -1)
+
+    below = (tz < qz) | ((tz == qz) & ((ty < qy) | ((ty == qy) & (tx < qx))))
+
+    base = j * block_t * LANES
+    gidx = base + jax.lax.broadcasted_iota(jnp.int32, below.shape, 2)
+    below &= gidx < n_tri
+
+    out_ref[...] += jnp.sum(below.astype(jnp.int32), axis=-1)
+
+
+def lex3_count(tz, ty, tx, qz, qy, qx, *, block_q: int = 8, block_t: int = 8,
+               interpret: bool = True) -> jnp.ndarray:
+    """Lexicographic rank of each (qz,qy,qx) in the sorted triangle set."""
+    n_tri = tz.shape[0]
+    n_q = qz.shape[0]
+
+    qp = _cdiv(n_q, block_q * LANES) * block_q * LANES
+    tp = _cdiv(max(n_tri, 1), block_t * LANES) * block_t * LANES
+
+    def padq(a):
+        return jnp.pad(a, (0, qp - n_q)).reshape(-1, LANES)
+
+    def padt(a):
+        return jnp.pad(a, (0, tp - n_tri)).reshape(-1, LANES)
+
+    grid = (qp // (block_q * LANES), tp // (block_t * LANES))
+    qspec = pl.BlockSpec((block_q, LANES), lambda i, j: (i, 0))
+    tspec = pl.BlockSpec((block_t, LANES), lambda i, j: (j, 0))
+    ospec = pl.BlockSpec((block_q, LANES), lambda i, j: (i, 0))
+
+    out = pl.pallas_call(
+        functools.partial(_lex3_kernel, n_tri=n_tri, block_t=block_t),
+        grid=grid,
+        in_specs=[qspec, qspec, qspec, tspec, tspec, tspec],
+        out_specs=ospec,
+        out_shape=jax.ShapeDtypeStruct((qp // LANES, LANES), jnp.int32),
+        interpret=interpret,
+    )(padq(qz), padq(qy), padq(qx), padt(tz), padt(ty), padt(tx))
+    return out.reshape(-1)[:n_q]

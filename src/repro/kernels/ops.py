@@ -1,0 +1,96 @@
+"""jit'd public wrappers around the Pallas kernels, with backend dispatch.
+
+On CPU (this container) kernels run in interpret mode — the kernel body
+executes in Python per grid step, which validates correctness but is slow;
+pure-jnp fallbacks therefore back the benchmarks unless kernels are
+explicitly requested.  On TPU the compiled kernels are the hardware path.
+
+``successor_search`` composes the streaming count kernel hierarchically:
+for large rep arrays a first pass ranks queries against the 1/128-rate
+*splitter* subsequence (reps[127::128] — the last rep of each lane tile,
+mirroring how fanout.py builds its tree), then a second pass ranks within
+the gathered 128-wide candidate tile.  Work per query drops from O(R) to
+O(R/128 + 128) while every step stays a dense VPU compare.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bucketing import BucketedSet
+from repro.core.keys import KeyArray
+
+from . import bucket_search, grid_probe, successor
+
+LANES = 128
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Successor search (flat + hierarchical).
+# ---------------------------------------------------------------------------
+
+def successor_search_flat(reps: KeyArray, queries: KeyArray,
+                          side: str = "left") -> jnp.ndarray:
+    return successor.successor_count(
+        reps.lo, reps.hi, queries.lo, queries.hi, side,
+        interpret=_interpret())
+
+
+def successor_search(reps: KeyArray, queries: KeyArray, side: str = "left",
+                     two_level_threshold: int = 4096) -> jnp.ndarray:
+    n = reps.shape[0]
+    if n <= two_level_threshold:
+        return successor_search_flat(reps, queries, side)
+
+    # Level 1: rank against splitters (last rep of each 128-lane tile).
+    spl = reps[LANES - 1::LANES]
+    tile = successor.successor_count(
+        spl.lo, spl.hi, queries.lo, queries.hi, side, interpret=_interpret())
+    tile = jnp.minimum(tile, (n - 1) // LANES)
+
+    # Level 2: rank inside the gathered candidate tile.
+    offs = tile[:, None] * LANES + jnp.arange(LANES, dtype=jnp.int32)
+    offs = jnp.minimum(offs, n - 1)
+    rows = reps.take(offs)
+    # Mask tail-tile padding (clamped gathers duplicate the last rep).
+    valid = tile[:, None] * LANES + jnp.arange(LANES, dtype=jnp.int32) < n
+    inb = bucket_search.bucket_rank_kernel(
+        jnp.where(valid, rows.lo, jnp.uint32(0xFFFFFFFF)),
+        None if rows.hi is None else jnp.where(valid, rows.hi, jnp.uint32(0xFFFFFFFF)),
+        queries.lo, queries.hi, side, interpret=_interpret())
+    # Sentinel masking breaks for q == MAX; correct those by the validity
+    # count directly (rank can never exceed the number of valid slots).
+    inb = jnp.minimum(inb, jnp.sum(valid, axis=-1))
+    return jnp.minimum(tile * LANES + inb, n).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Bucket post-filter.
+# ---------------------------------------------------------------------------
+
+def bucket_rank(buckets: BucketedSet, bucket_id: jnp.ndarray,
+                queries: KeyArray, side: str = "left") -> jnp.ndarray:
+    B = buckets.bucket_size
+    nb = buckets.num_buckets
+    offs = (jnp.minimum(bucket_id, nb - 1)[..., None] * B
+            + jnp.arange(B, dtype=jnp.int32))
+    rows = buckets.keys.take(offs)
+    return bucket_search.bucket_rank_kernel(
+        rows.lo, rows.hi, queries.lo, queries.hi, side,
+        interpret=_interpret())
+
+
+# ---------------------------------------------------------------------------
+# Grid ray probe.
+# ---------------------------------------------------------------------------
+
+def ray_probe(tz, ty, tx, qz, qy, qx) -> jnp.ndarray:
+    return grid_probe.lex3_count(tz, ty, tx, qz, qy, qx,
+                                 interpret=_interpret())

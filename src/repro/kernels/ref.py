@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for every Pallas kernel (tested with assert_allclose)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.grid import searchsorted_lex
+from repro.core.keys import KeyArray, searchsorted
+
+
+def successor_count_ref(reps_lo, reps_hi, q_lo, q_hi, side: str = "left"):
+    reps = KeyArray(reps_lo, reps_hi)
+    q = KeyArray(q_lo, q_hi)
+    return searchsorted(reps, q, side=side).astype(jnp.int32)
+
+
+def bucket_rank_ref(rows_lo, rows_hi, q_lo, q_hi, side: str = "left"):
+    """rows: (Q, B); per-row rank of q."""
+    if rows_hi is not None:
+        ql, qh = q_lo[:, None], q_hi[:, None]
+        if side == "left":
+            below = (rows_hi < qh) | ((rows_hi == qh) & (rows_lo < ql))
+        else:
+            below = (rows_hi < qh) | ((rows_hi == qh) & (rows_lo <= ql))
+    else:
+        ql = q_lo[:, None]
+        below = (rows_lo < ql) if side == "left" else (rows_lo <= ql)
+    return jnp.sum(below.astype(jnp.int32), axis=-1)
+
+
+def lex3_count_ref(tz, ty, tx, qz, qy, qx):
+    return searchsorted_lex((tz, ty, tx), (qz, qy, qx), side="left")

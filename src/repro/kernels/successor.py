@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: batched successor search over a sorted rep array.
+
+The paper's hot loop is "find the smallest representative >= k" — on the
+GPU it is a hardware BVH traversal.  The TPU-native formulation exploits
+that the rep array is *sorted*, so the successor index equals
+
+    rank(q) = #{ reps < q }          (side='left';  <= for 'right')
+
+which is an associative reduction: stream rep tiles HBM->VMEM and
+accumulate per-query counts with full-lane vector compares on the VPU.
+One grid step compares a (BQ, 128) query tile against a (BR, 128) rep tile
+(BQ*128 x BR*128 predicate evaluations, reduced on the fly), i.e. the
+kernel is compute-shaped like a small matmul and memory-shaped like a
+single streaming pass over the reps.
+
+Grid layout: (query_blocks, rep_blocks) with rep_blocks innermost, so the
+output tile stays resident in VMEM while rep tiles stream past it
+(the canonical TPU accumulator pattern).  Rep padding is masked with a
+global-index iota, not sentinels, so 0xFFFF.. keys stay valid.
+
+For large rep arrays ops.py composes this kernel hierarchically
+(splitter level -> tile level), turning the O(R) stream into O(sqrt R)
+per query tile while keeping every step a dense vector op.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+LANES = 128
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _count_kernel(q_lo_ref, q_hi_ref, r_lo_ref, r_hi_ref, out_ref, *,
+                  side: str, n_reps: int, block_r: int):
+    """One (query-tile, rep-tile) step: out += #{rep (<|<=) q} per query."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    q_lo = q_lo_ref[...]                       # (BQ, 128) uint32
+    r_lo = r_lo_ref[...].reshape(1, 1, -1)     # (1, 1, BR*128)
+    ql = q_lo[..., None]                       # (BQ, 128, 1)
+
+    if q_hi_ref is not None:
+        q_hi = q_hi_ref[...][..., None]
+        r_hi = r_hi_ref[...].reshape(1, 1, -1)
+        if side == "left":
+            below = (r_hi < q_hi) | ((r_hi == q_hi) & (r_lo < ql))
+        else:
+            below = (r_hi < q_hi) | ((r_hi == q_hi) & (r_lo <= ql))
+    else:
+        below = (r_lo < ql) if side == "left" else (r_lo <= ql)
+
+    # Mask rep padding by global index (no sentinel ambiguity).
+    base = j * block_r * LANES
+    gidx = base + jax.lax.broadcasted_iota(jnp.int32, below.shape, 2)
+    below &= gidx < n_reps
+
+    out_ref[...] += jnp.sum(below.astype(jnp.int32), axis=-1)
+
+
+def successor_count(reps_lo: jnp.ndarray, reps_hi: Optional[jnp.ndarray],
+                    q_lo: jnp.ndarray, q_hi: Optional[jnp.ndarray],
+                    side: str = "left", *, block_q: int = 8, block_r: int = 8,
+                    interpret: bool = True) -> jnp.ndarray:
+    """rank(q) over the full rep array.  1-D in, 1-D int32 out."""
+    n_reps = reps_lo.shape[0]
+    n_q = q_lo.shape[0]
+    is64 = reps_hi is not None
+
+    qp = _cdiv(n_q, block_q * LANES) * block_q * LANES
+    rp = _cdiv(max(n_reps, 1), block_r * LANES) * block_r * LANES
+
+    def pad(a, n, c=0):
+        return jnp.pad(a, (0, n - a.shape[0]), constant_values=c)
+
+    q_lo2 = pad(q_lo, qp).reshape(-1, LANES)
+    r_lo2 = pad(reps_lo, rp).reshape(-1, LANES)
+    q_hi2 = pad(q_hi, qp).reshape(-1, LANES) if is64 else None
+    r_hi2 = pad(reps_hi, rp).reshape(-1, LANES) if is64 else None
+
+    grid = (qp // (block_q * LANES), rp // (block_r * LANES))
+
+    qspec = pl.BlockSpec((block_q, LANES), lambda i, j: (i, 0))
+    rspec = pl.BlockSpec((block_r, LANES), lambda i, j: (j, 0))
+    ospec = pl.BlockSpec((block_q, LANES), lambda i, j: (i, 0))
+
+    kern = functools.partial(_count_kernel, side=side, n_reps=n_reps,
+                             block_r=block_r)
+    if is64:
+        def kernel(ql, qh, rl, rh, o):
+            kern(ql, qh, rl, rh, o)
+        in_specs = [qspec, qspec, rspec, rspec]
+        args = (q_lo2, q_hi2, r_lo2, r_hi2)
+    else:
+        def kernel(ql, rl, o):
+            kern(ql, None, rl, None, o)
+        in_specs = [qspec, rspec]
+        args = (q_lo2, r_lo2)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=ospec,
+        out_shape=jax.ShapeDtypeStruct((qp // LANES, LANES), jnp.int32),
+        interpret=interpret,
+    )(*args)
+    return out.reshape(-1)[:n_q]

@@ -1,0 +1,326 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# (dry-run only: 512 placeholder host devices so jax.make_mesh can build the
+# production meshes; smoke tests and benches must NOT import this module.)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+"""Multi-pod dry-run: prove every (arch x shape x mesh) cell lowers,
+SPMD-partitions and compiles, and extract the roofline inputs.
+
+For each cell:
+  train_4k                -> train_step (grad + AdamW, microbatched)
+  prefill_32k             -> prefill_step (blockwise attention forward)
+  decode_32k / long_500k  -> serve_step (one token vs seq_len cache)
+
+All model/optimizer/batch/cache arguments are ShapeDtypeStructs (zero
+allocation); in_shardings come from the rule engine (parallel/sharding).
+Results (cost_analysis, memory_analysis, parsed collective bytes, op
+census, analytic per-device byte accounting) land in one JSON per cell
+under experiments/dryrun/<mesh>/ — resumable, and the roofline reader
+(launch/roofline.py) consumes them.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-6b --shape train_4k --mesh pod1
+  python -m repro.launch.dryrun --all --mesh pod1
+  python -m repro.launch.dryrun --all --mesh pod2   # 2x16x16 multi-pod
+"""
+import argparse
+import dataclasses
+import functools
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (ARCH_IDS, SHAPES, SHAPES_BY_NAME, cell_applicable,
+                           get_config, input_specs)
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.launch import hlo_stats
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.parallel import sharding
+from repro.training import optim, step as step_mod
+
+OUT_ROOT = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                        "experiments", "dryrun")
+
+
+# ---------------------------------------------------------------------------
+# Parameter accounting (MODEL_FLOPS and analytic bytes).
+# ---------------------------------------------------------------------------
+
+def count_params(params_shape) -> Dict[str, int]:
+    total = 0
+    expert = 0
+    flat = jax.tree_util.tree_flatten_with_path(params_shape)[0]
+    for path, leaf in flat:
+        n = int(np.prod(leaf.shape))
+        total += n
+        pstr = sharding._path_str(path)
+        if re.search(r"moe/(wi_gate|wi_up|wo)$", pstr):
+            expert += n
+    return {"total": total, "expert": expert}
+
+
+def active_params(cfg: ArchConfig, counts: Dict[str, int]) -> int:
+    if cfg.moe is None or counts["expert"] == 0:
+        return counts["total"]
+    frac = cfg.moe.top_k / cfg.moe.num_experts
+    return counts["total"] - counts["expert"] + int(counts["expert"] * frac)
+
+
+def tree_bytes_per_device(tree_shape, specs, mesh) -> int:
+    total = 0
+    flat_s, _ = jax.tree_util.tree_flatten(tree_shape)
+    flat_p, _ = jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    for leaf, spec in zip(flat_s, flat_p):
+        n = int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+        div = 1
+        for ax in spec:
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            for a in axes:
+                div *= mesh.shape[a]
+        total += n // max(div, 1)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Per-cell lowering.
+# ---------------------------------------------------------------------------
+
+def microbatches_for(cfg: ArchConfig, cell: ShapeCell) -> int:
+    if cell.kind != "train":
+        return 1
+    big = cfg.d_model >= 5120 or (cfg.moe is not None) or cfg.num_layers >= 48
+    return 8 if big else 4
+
+
+def lower_cell(cfg: ArchConfig, cell: ShapeCell, mesh,
+               num_microbatches: Optional[int] = None,
+               donate: bool = True, kv_shard: str = "auto",
+               cache_dtype: str = "bf16") -> Dict[str, Any]:
+    rec: Dict[str, Any] = {}
+    policy = sharding.activation_policy(mesh)
+    key = jax.random.PRNGKey(0)
+    params_shape = jax.eval_shape(functools.partial(lm.init_params, cfg), key)
+    pspecs = sharding.param_specs(params_shape, mesh)
+    psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+    counts = count_params(params_shape)
+    rec["params_total"] = counts["total"]
+    rec["params_active"] = active_params(cfg, counts)
+    rec["param_bytes_per_dev"] = tree_bytes_per_device(params_shape, pspecs, mesh)
+
+    specs_in = input_specs(cfg, cell)
+
+    if cell.kind == "train":
+        mb = num_microbatches or microbatches_for(cfg, cell)
+        rec["num_microbatches"] = mb
+        opt_cfg = optim.AdamWConfig()
+        opt_shape = jax.eval_shape(optim.init_state, params_shape)
+        # opt specs: step replicated; moments mirror params
+        ospec_tree = optim.AdamWState(
+            step=P(), m=pspecs, v=jax.tree.map(lambda s: s, pspecs))
+        osh = jax.tree.map(lambda s: NamedSharding(mesh, s), ospec_tree)
+        bspecs = sharding.batch_specs(specs_in, mesh)
+        bsh = jax.tree.map(lambda s: NamedSharding(mesh, s), bspecs)
+        rec["opt_bytes_per_dev"] = tree_bytes_per_device(
+            opt_shape, ospec_tree, mesh)
+        rec["batch_bytes_per_dev"] = tree_bytes_per_device(
+            specs_in, bspecs, mesh)
+
+        fn = step_mod.make_train_step(cfg, opt_cfg, mb, policy)
+        jitted = jax.jit(fn, in_shardings=(psh, osh, bsh),
+                         donate_argnums=(0, 1) if donate else ())
+        t0 = time.time()
+        lowered = jitted.lower(params_shape, opt_shape, specs_in)
+        rec["seconds_lower"] = time.time() - t0
+    elif cell.kind == "prefill":
+        bspecs = sharding.batch_specs(specs_in, mesh)
+        bsh = jax.tree.map(lambda s: NamedSharding(mesh, s), bspecs)
+        rec["batch_bytes_per_dev"] = tree_bytes_per_device(
+            specs_in, bspecs, mesh)
+        fn = step_mod.make_prefill_step(cfg, policy)
+        jitted = jax.jit(fn, in_shardings=(psh, bsh))
+        t0 = time.time()
+        lowered = jitted.lower(params_shape, specs_in)
+        rec["seconds_lower"] = time.time() - t0
+    else:  # decode
+        B = cell.global_batch
+        cdt = jnp.int8 if cache_dtype == "int8" else jnp.bfloat16
+        caches_shape = jax.eval_shape(
+            functools.partial(lm.init_decode_caches, cfg, B, cell.seq_len,
+                              dtype=cdt))
+        cspecs = sharding.cache_specs(caches_shape, cfg, mesh,
+                                      strategy=kv_shard)
+        csh = jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs)
+        rec["cache_bytes_per_dev"] = tree_bytes_per_device(
+            caches_shape, cspecs, mesh)
+        tok_shape = specs_in["token"]
+        tok_spec = sharding.batch_specs({"token": tok_shape}, mesh)["token"]
+        tsh = NamedSharding(mesh, tok_spec)
+        fn = step_mod.make_serve_step(cfg, policy)
+        jitted = jax.jit(
+            fn, in_shardings=(psh, csh, tsh, NamedSharding(mesh, P())),
+            donate_argnums=(1,) if donate else ())
+        t0 = time.time()
+        lowered = jitted.lower(params_shape, caches_shape, tok_shape,
+                               jax.ShapeDtypeStruct((), jnp.int32))
+        rec["seconds_lower"] = time.time() - t0
+
+    # Global (pre-partition) analysis: useful-FLOPs denominator for the
+    # MODEL_FLOPS / HLO_FLOPs ratio.
+    try:
+        gca = lowered.cost_analysis()
+        rec["global_cost_analysis"] = {
+            k: float(v) for k, v in gca.items()
+            if isinstance(v, (int, float)) and k in ("flops", "bytes accessed")}
+    except Exception as e:                                    # noqa: BLE001
+        rec["global_cost_analysis"] = {"error": str(e)}
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["seconds_compile"] = time.time() - t0
+
+    # --- extract roofline inputs (per-device: SPMD-partitioned module) ---
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        rec["cost_analysis"] = {k: float(v) for k, v in ca.items()
+                                if isinstance(v, (int, float))}
+    except Exception as e:                                    # noqa: BLE001
+        rec["cost_analysis"] = {"error": str(e)}
+    try:
+        ma = compiled.memory_analysis()
+        if ma is None:
+            rec["memory_analysis"] = None
+        else:
+            rec["memory_analysis"] = {
+                k: int(getattr(ma, k)) for k in dir(ma)
+                if k.endswith("size_in_bytes") and not k.startswith("_")}
+    except Exception as e:                                    # noqa: BLE001
+        rec["memory_analysis"] = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    rec["collectives"] = hlo_stats.collective_stats(hlo)
+    rec["collective_bytes"] = hlo_stats.total_collective_bytes(hlo)
+    rec["op_census"] = hlo_stats.op_census(hlo)
+    rec["hlo_chars"] = len(hlo)
+    rec["sharding_drops"] = sharding.explain_drops()
+    # Loop-trip-corrected analysis (cost_analysis counts while bodies once).
+    from repro.launch import hlo_loops
+    try:
+        rec["loop_corrected"] = hlo_loops.analyze(hlo)
+    except Exception as e:                                    # noqa: BLE001
+        rec["loop_corrected"] = {"error": str(e)}
+    return rec
+
+
+def run_cell(arch: str, shape: str, mesh_name: str, out_dir: str,
+             force: bool = False,
+             num_microbatches: Optional[int] = None,
+             remat_policy: Optional[str] = None,
+             kv_shard: str = "auto",
+             cache_dtype: str = "bf16",
+             tag: str = "") -> Dict[str, Any]:
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    out_path = os.path.join(out_dir, f"{arch}__{shape}{suffix}.json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+
+    cfg = get_config(arch)
+    if remat_policy:
+        cfg = dataclasses.replace(cfg, remat_policy=remat_policy)
+    if os.environ.get("REPRO_PROBS_BF16"):
+        cfg = dataclasses.replace(cfg, attn_probs_bf16=True)
+    cell = SHAPES_BY_NAME[shape]
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape, "mesh": mesh_name,
+        "seq_len": cell.seq_len, "global_batch": cell.global_batch,
+        "kind": cell.kind, "family": cfg.family, "tag": tag,
+        "remat_policy": cfg.remat_policy, "kv_shard": kv_shard,
+        "cache_dtype": cache_dtype,
+    }
+    ok, why = cell_applicable(cfg, cell)
+    if not ok:
+        rec["status"] = "SKIP"
+        rec["reason"] = why
+    else:
+        mesh = make_production_mesh(multi_pod=(mesh_name == "pod2"))
+        try:
+            rec.update(lower_cell(cfg, cell, mesh, num_microbatches,
+                                  kv_shard=kv_shard,
+                                  cache_dtype=cache_dtype))
+            rec["status"] = "OK"
+        except Exception as e:                                # noqa: BLE001
+            rec["status"] = "ERROR"
+            rec["reason"] = f"{type(e).__name__}: {e}"
+            rec["traceback"] = traceback.format_exc()[-4000:]
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=[s.name for s in SHAPES])
+    ap.add_argument("--mesh", choices=["pod1", "pod2"], default="pod1")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--remat-policy", choices=["full", "dots", "none"],
+                    default=None)
+    ap.add_argument("--kv-shard", choices=["auto", "heads", "seq"],
+                    default="auto")
+    ap.add_argument("--cache-dtype", choices=["bf16", "int8"],
+                    default="bf16")
+    ap.add_argument("--tag", default="",
+                    help="variant tag for §Perf experiments (names the "
+                         "output JSON <arch>__<shape>__<tag>.json)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    out_dir = args.out or os.path.abspath(
+        os.path.join(OUT_ROOT, args.mesh))
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                cells.append((a, s.name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    for arch, shape in cells:
+        t0 = time.time()
+        rec = run_cell(arch, shape, args.mesh, out_dir, args.force,
+                       args.microbatches, args.remat_policy, args.kv_shard,
+                       args.cache_dtype, args.tag)
+        status = rec.get("status")
+        extra = ""
+        if status == "OK":
+            ca = rec.get("cost_analysis", {})
+            extra = (f" flops/dev={ca.get('flops', 0):.3e}"
+                     f" coll={rec.get('collective_bytes', 0):.3e}B"
+                     f" lower={rec.get('seconds_lower', 0):.0f}s"
+                     f" compile={rec.get('seconds_compile', 0):.0f}s")
+        elif status == "ERROR":
+            extra = " " + rec.get("reason", "")[:160]
+        print(f"[{args.mesh}] {arch:24s} {shape:12s} {status}{extra}",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""HLO text analysis: collective bytes + op census for the roofline.
+
+``cost_analysis()`` does not expose collective traffic, so we parse the
+post-SPMD HLO: every all-reduce / all-gather / reduce-scatter /
+all-to-all / collective-permute instruction's *result* shape is summed
+(an upper bound on bytes-on-the-wire per device; ring algorithms move
+(n-1)/n of it — noted in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# result shape(s) then " <op-name>(" — ops may be wrapped in fusion names,
+# so match on "= <shape> opname(" and "= (<shapes>) opname(".
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[\w\[\],{}\s/#*]+?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """{op: {count, bytes}} per collective type (result-shape bytes)."""
+    out: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"count": 0, "bytes": 0})
+    seen_done = set()
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, op = m.group(1), m.group(2)
+        # async pairs appear as -start/-done; count each logical op once
+        # (the -done result shape equals the transferred buffer).
+        full = m.group(0)
+        if "-done(" in full:
+            continue
+        b = shape_bytes(shape_str)
+        out[op]["count"] += 1
+        out[op]["bytes"] += b
+    return dict(out)
+
+
+def total_collective_bytes(hlo_text: str) -> int:
+    return int(sum(v["bytes"] for v in collective_stats(hlo_text).values()))
+
+
+def op_census(hlo_text: str, ops=("fusion", "all-reduce", "all-gather",
+                                  "reduce-scatter", "all-to-all",
+                                  "collective-permute", "custom-call",
+                                  "while", "dot", "convolution")) -> Dict[str, int]:
+    out = {}
+    for op in ops:
+        out[op] = len(re.findall(rf"\b{re.escape(op)}\(", hlo_text))
+    return out

@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+A function, not a module-level constant: importing this module never
+touches jax device state (device count is locked at first backend init,
+so only dryrun.py — which sets XLA_FLAGS first — may build the 512-way
+meshes).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips (data, model).
+    Multi-pod: 2 pods x 256 = 512 chips (pod, data, model); the pod axis
+    carries pure DP (one grad all-reduce per step over the weak link)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 2, model: int = 4, pod: int = 0):
+    """Small mesh for CPU tests (requires >= data*model*max(pod,1) host
+    devices via --xla_force_host_platform_device_count)."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))

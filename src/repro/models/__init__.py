@@ -1,0 +1,1 @@
+from . import attention, layers, lm, mla, moe, ssm  # noqa: F401

@@ -1,0 +1,247 @@
+"""Attention: GQA/MQA/MHA with blockwise-causal prefill and cached decode.
+
+Prefill/training uses a blockwise (FlashAttention-style) online-softmax
+formulation: the (S x S) score matrix is never materialized — queries are
+processed in blocks and KV blocks stream through a ``lax.scan`` carrying
+running (max, denominator, accumulator).  This is what lets 32k-prefill
+shapes compile inside a v5e's HBM budget; on CPU it also keeps the smoke
+tests from allocating quadratic buffers.
+
+Decode attends one new query position against the full KV cache (a matvec
+per head), supporting caches sharded over heads or over sequence (the
+contraction over a sequence-sharded cache lowers to a cheap partial-sum
+all-reduce — the flash-decode pattern).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import _init, apply_rope, init_linear, linear, rmsnorm
+
+NEG_INF = -1e30
+
+
+def init_attention(key, d_model: int, num_heads: int, num_kv_heads: int,
+                   head_dim: int, qkv_bias: bool = False,
+                   qk_norm: bool = False, dtype=jnp.float32) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": init_linear(k1, d_model, num_heads * head_dim, qkv_bias, dtype),
+        "wk": init_linear(k2, d_model, num_kv_heads * head_dim, qkv_bias, dtype),
+        "wv": init_linear(k3, d_model, num_kv_heads * head_dim, qkv_bias, dtype),
+        "wo": init_linear(k4, num_heads * head_dim, d_model, False, dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = {"scale": jnp.ones((head_dim,), dtype)}
+        p["k_norm"] = {"scale": jnp.ones((head_dim,), dtype)}
+    return p
+
+
+def _qkv(p: dict, x: jnp.ndarray, num_heads: int, num_kv_heads: int,
+         head_dim: int, positions: jnp.ndarray, rope_theta: float,
+         qk_norm: bool, dtype):
+    B, S, _ = x.shape
+    q = linear(p["wq"], x, dtype).reshape(B, S, num_heads, head_dim)
+    k = linear(p["wk"], x, dtype).reshape(B, S, num_kv_heads, head_dim)
+    v = linear(p["wv"], x, dtype).reshape(B, S, num_kv_heads, head_dim)
+    if qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    if rope_theta:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def blockwise_causal_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                               block_q: int = 512, block_kv: int = 512,
+                               probs_bf16: bool = False) -> jnp.ndarray:
+    """Online-softmax causal attention.
+
+    q: (B, S, H, D); k/v: (B, S, KV, D) with H % KV == 0.
+    Returns (B, S, H, D).  O(S^2) compute, O(S * block) memory.
+    """
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = 1.0 / np.sqrt(D)
+
+    nq = -(-S // block_q)
+    nk = -(-S // block_kv)
+    Sq, Sk = nq * block_q, nk * block_kv
+    qp = jnp.pad(q, ((0, 0), (0, Sq - S), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, Sk - S), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Sk - S), (0, 0), (0, 0)))
+
+    # (B, nq, bq, H, D) -> blocks of queries
+    qb = qp.reshape(B, nq, block_q, H, D)
+    kb = kp.reshape(B, nk, block_kv, KV, D)
+    vb = vp.reshape(B, nk, block_kv, KV, D)
+
+    q_pos = jnp.arange(Sq).reshape(nq, block_q)
+    k_pos = jnp.arange(Sk).reshape(nk, block_kv)
+
+    def per_qblock(qi, q_blk):
+        # q_blk: (B, bq, H, D)
+        q_idx = q_pos[qi]                            # (bq,)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry                        # (B,bq,H), (B,bq,H), (B,bq,H,D)
+            k_blk, v_blk, k_idx = inp                # (B,bk,KV,D), ..., (bk,)
+            # scores: (B, bq, H, bk)
+            qg = q_blk.reshape(B, block_q, KV, G, D)
+            s = jnp.einsum("bqkgd,bpkd->bqkgp", qg.astype(jnp.float32),
+                           k_blk.astype(jnp.float32)) * scale
+            s = s.reshape(B, block_q, H, block_kv)
+            causal = (k_idx[None, :] <= q_idx[:, None])  # (bq, bk)
+            valid = (k_idx < S)[None, :] & (q_idx < S)[:, None]
+            mask = (causal & valid)[None, :, None, :]
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            # Optional bf16 probability tile: halves the bytes of the
+            # second-matmul input streaming through HBM (softmax stats and
+            # the accumulator stay f32) — §Perf memory-term knob.
+            p_mm = (p.astype(jnp.bfloat16) if probs_bf16 else p)
+            pv = jnp.einsum("bqkgp,bpkd->bqkgd",
+                            p_mm.reshape(B, block_q, KV, G, block_kv),
+                            v_blk.astype(jnp.bfloat16 if probs_bf16
+                                         else jnp.float32))
+            pv = pv.astype(jnp.float32)
+            pv = pv.reshape(B, block_q, H, D)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((B, block_q, H), NEG_INF, jnp.float32),
+                jnp.zeros((B, block_q, H), jnp.float32),
+                jnp.zeros((B, block_q, H, D), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, init,
+            (kb.transpose(1, 0, 2, 3, 4), vb.transpose(1, 0, 2, 3, 4), k_pos))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    out = jax.lax.map(lambda i: per_qblock(i, qb[:, i]), jnp.arange(nq))
+    # out: (nq, B, bq, H, D) -> (B, S, H, D)
+    out = out.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, D)[:, :S]
+    return out.astype(q.dtype)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     cache_len: jnp.ndarray) -> jnp.ndarray:
+    """One-position attention against the cache.
+
+    q: (B, 1, H, D); k_cache/v_cache: (B, S, KV, D); cache_len: () int32 —
+    number of valid cache positions (including the newly written one).
+    """
+    B, S, KV, D = k_cache.shape
+    H = q.shape[2]
+    G = H // KV
+    scale = 1.0 / np.sqrt(D)
+    qg = q.reshape(B, KV, G, D)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    valid = jnp.arange(S)[None, None, None, :] < cache_len
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def attention_decode_block_q8(p: dict, x: jnp.ndarray, k_cache, v_cache,
+                              k_scale, v_scale, pos: jnp.ndarray, *,
+                              num_heads: int, num_kv_heads: int,
+                              head_dim: int, rope_theta: float,
+                              qk_norm: bool, dtype=jnp.bfloat16):
+    """int8 KV-cache decode: halves cache bytes (the cgRX 'bang per byte'
+    thesis applied to the KV cache).  Values are stored symmetric-int8 with
+    a per-(position, head) f32 scale; dequantization happens at the
+    attention matvec (fused into the contraction on TPU, so HBM traffic is
+    the int8 payload).  Returns (out, k_cache, v_cache, k_scale, v_scale).
+    """
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _qkv(p, x, num_heads, num_kv_heads, head_dim, positions,
+                   rope_theta, qk_norm, dtype)
+
+    def quant(t):
+        s = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1,
+                    keepdims=True) / 127.0 + 1e-8       # (B,1,KV,1)
+        qt = jnp.clip(jnp.round(t.astype(jnp.float32) / s),
+                      -127, 127).astype(jnp.int8)
+        return qt, s
+
+    k_q, k_s = quant(k)
+    v_q, v_s = quant(v)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k_q, (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v_q, (0, pos, 0, 0))
+    k_scale = jax.lax.dynamic_update_slice(k_scale, k_s, (0, pos, 0, 0))
+    v_scale = jax.lax.dynamic_update_slice(v_scale, v_s, (0, pos, 0, 0))
+
+    Bq, S, KV, D = k_cache.shape
+    H = q.shape[2]
+    G = H // KV
+    scale = 1.0 / np.sqrt(D)
+    qg = q.reshape(B, KV, G, D).astype(jnp.float32)
+    # scores: contract int8 keys in f32, then apply the per-position scale
+    s = jnp.einsum("bkgd,bskd->bkgs", qg,
+                   k_cache.astype(jnp.float32)) * k_scale[..., 0].transpose(
+                       0, 2, 1)[:, :, None, :] * scale
+    valid = jnp.arange(S)[None, None, None, :] < (pos + 1)
+    s = jnp.where(valid, s, NEG_INF)
+    pattn = jax.nn.softmax(s, axis=-1)
+    # weight values by (prob x per-position scale) before the int8 contract
+    pv = pattn * v_scale[..., 0].transpose(0, 2, 1)[:, :, None, :]
+    o = jnp.einsum("bkgs,bskd->bkgd", pv, v_cache.astype(jnp.float32))
+    out = linear(p["wo"], o.reshape(B, 1, H * D).astype(dtype), dtype)
+    return out, k_cache, v_cache, k_scale, v_scale
+
+
+# ---------------------------------------------------------------------------
+# Full attention block (pre-norm residual).
+# ---------------------------------------------------------------------------
+
+def attention_block(p: dict, x: jnp.ndarray, *, num_heads: int,
+                    num_kv_heads: int, head_dim: int, rope_theta: float,
+                    qk_norm: bool, positions: jnp.ndarray,
+                    dtype=jnp.bfloat16, block_q: int = 512,
+                    block_kv: int = 512, policy=None,
+                    probs_bf16: bool = False) -> jnp.ndarray:
+    """Training / prefill path (no cache)."""
+    q, k, v = _qkv(p, x, num_heads, num_kv_heads, head_dim, positions,
+                   rope_theta, qk_norm, dtype)
+    if policy is not None:
+        q = policy(q, "heads")
+        k = policy(k, "heads")
+        v = policy(v, "heads")
+    o = blockwise_causal_attention(q, k, v, block_q, block_kv,
+                                   probs_bf16=probs_bf16)
+    if policy is not None:
+        o = policy(o, "heads")
+    B, S = x.shape[:2]
+    return linear(p["wo"], o.reshape(B, S, num_heads * head_dim), dtype)
+
+
+def attention_decode_block(p: dict, x: jnp.ndarray, k_cache, v_cache,
+                           pos: jnp.ndarray, *, num_heads: int,
+                           num_kv_heads: int, head_dim: int,
+                           rope_theta: float, qk_norm: bool,
+                           dtype=jnp.bfloat16):
+    """Decode path: x (B, 1, d); returns (out, new_k_cache, new_v_cache)."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = _qkv(p, x, num_heads, num_kv_heads, head_dim, positions,
+                   rope_theta, qk_norm, dtype)
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k.astype(k_cache.dtype), (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v.astype(v_cache.dtype), (0, pos, 0, 0))
+    o = decode_attention(q, k_cache, v_cache, pos + 1)
+    out = linear(p["wo"], o.reshape(B, 1, num_heads * head_dim), dtype)
+    return out, k_cache, v_cache

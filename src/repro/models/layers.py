@@ -1,0 +1,142 @@
+"""Shared model layers: norms, RoPE, linears, MLPs, embeddings.
+
+Pure-JAX parameter-pytree style (init_* returns a dict of arrays; apply
+functions are pure).  All matmuls take an explicit ``dtype`` so bf16
+compute / f32 accumulate policies are uniform across architectures.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _init(key, shape, scale=None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) > 1 else 1
+    scale = scale if scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms.
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def init_layernorm(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+def init_gated_rmsnorm(d: int, dtype=jnp.float32) -> dict:
+    """Mamba2's gated RMSNorm: y = rmsnorm(x * silu(z)) * scale."""
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def gated_rmsnorm(p: dict, x: jnp.ndarray, z: jnp.ndarray,
+                  eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Linear / embedding.
+# ---------------------------------------------------------------------------
+
+def init_linear(key, d_in: int, d_out: int, bias: bool = False,
+                dtype=jnp.float32) -> dict:
+    p = {"w": _init(key, (d_in, d_out), dtype=dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p: dict, x: jnp.ndarray, dtype=jnp.bfloat16) -> jnp.ndarray:
+    y = jnp.einsum("...d,df->...f", x.astype(dtype), p["w"].astype(dtype))
+    if "b" in p:
+        y = y + p["b"].astype(dtype)
+    return y
+
+
+def init_embedding(key, vocab: int, d: int, dtype=jnp.float32) -> dict:
+    return {"w": _init(key, (vocab, d), scale=1.0, dtype=dtype)}
+
+
+def embed(p: dict, tokens: jnp.ndarray, dtype=jnp.bfloat16) -> jnp.ndarray:
+    return jnp.take(p["w"], tokens, axis=0).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE.
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                           # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., s, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                     # (..., s, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs.
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, f: int, gated: bool, act: str = "silu",
+             dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"wo": _init(k2, (f, d), dtype=dtype)}
+    if gated:
+        p["wi_gate"] = _init(k1, (d, f), dtype=dtype)
+        p["wi_up"] = _init(k3, (d, f), dtype=dtype)
+    else:
+        p["wi"] = _init(k1, (d, f), dtype=dtype)
+    return p
+
+
+def mlp(p: dict, x: jnp.ndarray, act: str = "silu",
+        dtype=jnp.bfloat16) -> jnp.ndarray:
+    actfn = {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+             "relu": jax.nn.relu}[act]
+    x = x.astype(dtype)
+    if "wi_gate" in p:
+        h = actfn(jnp.einsum("...d,df->...f", x, p["wi_gate"].astype(dtype)))
+        h = h * jnp.einsum("...d,df->...f", x, p["wi_up"].astype(dtype))
+    else:
+        h = actfn(jnp.einsum("...d,df->...f", x, p["wi"].astype(dtype)))
+    return jnp.einsum("...f,fd->...d", h, p["wo"].astype(dtype))

@@ -1,0 +1,457 @@
+"""Unified causal LM over all assigned architecture families.
+
+One parameter pytree + three pure functions per config:
+
+  init_params(cfg, key)                      -> params
+  forward(cfg, params, batch, policy)        -> logits (chunked head)
+  loss_fn(cfg, params, batch, policy)        -> (loss, metrics)
+  init_decode_caches(cfg, B, S)              -> caches
+  decode_step(cfg, params, caches, tok, pos) -> (logits, caches)
+
+Layers are *scanned* (stacked params, ``lax.scan`` over the layer axis)
+so the lowered HLO contains each distinct block once — essential to keep
+40-cell x 512-device dry-run compiles tractable.  Hybrid (Zamba2-style)
+architectures scan homogeneous Mamba2 layers and apply a *shared*
+attention block every ``attn_every`` layers via ``lax.cond`` inside the
+scan body (both branches compile once).
+
+The LM head is applied in sequence chunks (``cfg.loss_chunks``) so the
+(B, S, V) logits tensor is never fully materialized — with 100k-250k
+vocabularies this is the difference between fitting HBM or not.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from . import attention as attn
+from . import mla as mla_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import (
+    embed,
+    init_embedding,
+    init_layernorm,
+    init_linear,
+    init_mlp,
+    init_rmsnorm,
+    layernorm,
+    linear,
+    mlp,
+    rmsnorm,
+)
+
+DTYPE = jnp.bfloat16
+
+
+class ShardingPolicy:
+    """Optional activation-sharding constraints (set by the launcher)."""
+
+    def __init__(self, constrain=None):
+        self._c = constrain or (lambda x, kind: x)
+
+    def __call__(self, x, kind: str):
+        return self._c(x, kind)
+
+
+NO_POLICY = ShardingPolicy()
+
+
+def _norm_init(cfg: ArchConfig):
+    return init_layernorm if cfg.norm == "ln" else init_rmsnorm
+
+
+def _norm_apply(cfg: ArchConfig):
+    if cfg.norm == "ln":
+        return lambda p, x: layernorm(p, x, cfg.norm_eps)
+    return lambda p, x: rmsnorm(p, x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Init.
+# ---------------------------------------------------------------------------
+
+def _init_block(cfg: ArchConfig, key) -> dict:
+    ninit = _norm_init(cfg)
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"ln1": ninit(cfg.d_model)}
+    if cfg.family in ("ssm", "hybrid"):
+        s = cfg.ssm
+        p["mamba"] = ssm_mod.init_mamba2(
+            ks[0], cfg.d_model, d_state=s.d_state, expand=s.expand,
+            head_dim=s.head_dim, n_groups=s.n_groups, conv_k=s.conv_k)
+        return p
+    if cfg.mla:
+        m = cfg.mla
+        p["attn"] = mla_mod.init_mla(
+            ks[0], cfg.d_model, cfg.num_heads, m.kv_lora_rank,
+            m.qk_nope_dim, m.qk_rope_dim, m.v_head_dim)
+    else:
+        p["attn"] = attn.init_attention(
+            ks[0], cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd,
+            qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm)
+    p["ln2"] = ninit(cfg.d_model)
+    if cfg.moe:
+        m = cfg.moe
+        p["moe"] = moe_mod.init_moe(ks[1], cfg.d_model, m.d_ff_expert,
+                                    m.num_experts, m.num_shared)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.gated_mlp,
+                            cfg.act)
+    return p
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    keys = jax.random.split(key, cfg.num_layers + 4)
+    blocks = [_init_block(cfg, keys[i]) for i in range(cfg.num_layers)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+    params: Dict[str, Any] = {
+        "embed": init_embedding(keys[-1], cfg.vocab_size, cfg.d_model),
+        "blocks": stacked,
+        "final_norm": _norm_init(cfg)(cfg.d_model),
+        "lm_head": init_linear(keys[-2], cfg.d_model, cfg.vocab_size),
+    }
+    if cfg.family == "hybrid":
+        ka, kb = jax.random.split(keys[-3])
+        params["shared_attn"] = {
+            "ln1": _norm_init(cfg)(cfg.d_model),
+            "attn": attn.init_attention(ka, cfg.d_model, cfg.num_heads,
+                                        cfg.num_kv_heads, cfg.hd),
+            "ln2": _norm_init(cfg)(cfg.d_model),
+            "mlp": init_mlp(kb, cfg.d_model, cfg.d_ff, cfg.gated_mlp, cfg.act),
+        }
+    if cfg.num_patches:
+        params["patch_proj"] = init_linear(keys[-4], cfg.d_model, cfg.d_model)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill).
+# ---------------------------------------------------------------------------
+
+def _attn_mlp_body(cfg: ArchConfig, bp, x, positions, policy):
+    napply = _norm_apply(cfg)
+    h = napply(bp["ln1"], x)
+    if cfg.mla:
+        m = cfg.mla
+        a = mla_mod.mla_block(
+            bp["attn"], h, num_heads=cfg.num_heads,
+            kv_lora_rank=m.kv_lora_rank, qk_nope_dim=m.qk_nope_dim,
+            qk_rope_dim=m.qk_rope_dim, v_head_dim=m.v_head_dim,
+            positions=positions, rope_theta=cfg.rope_theta, dtype=DTYPE,
+            block_q=cfg.attn_block_q, block_kv=cfg.attn_block_kv)
+    else:
+        a = attn.attention_block(
+            bp["attn"], h, num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads, head_dim=cfg.hd,
+            rope_theta=cfg.rope_theta, qk_norm=cfg.qk_norm,
+            positions=positions, dtype=DTYPE,
+            block_q=cfg.attn_block_q, block_kv=cfg.attn_block_kv,
+            policy=policy, probs_bf16=cfg.attn_probs_bf16)
+    x = policy(x + a, "residual")
+    h = napply(bp["ln2"], x)
+    if cfg.moe:
+        m = cfg.moe
+        f = moe_mod.moe_block(bp["moe"], h, num_experts=m.num_experts,
+                              top_k=m.top_k,
+                              capacity_factor=m.capacity_factor, dtype=DTYPE,
+                              ep_axis=None)
+    else:
+        f = mlp(bp["mlp"], h, cfg.act, DTYPE)
+    return policy(x + f, "residual")
+
+
+def _mamba_body(cfg: ArchConfig, bp, x, policy):
+    napply = _norm_apply(cfg)
+    s = cfg.ssm
+    h = napply(bp["ln1"], x)
+    y = ssm_mod.mamba2_block(bp["mamba"], h, d_state=s.d_state,
+                             expand=s.expand, head_dim=s.head_dim,
+                             n_groups=s.n_groups, chunk=s.chunk, dtype=DTYPE)
+    return policy(x + y, "residual")
+
+
+def _shared_attn_body(cfg: ArchConfig, sp, x, positions, policy):
+    napply = _norm_apply(cfg)
+    h = napply(sp["ln1"], x)
+    a = attn.attention_block(
+        sp["attn"], h, num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads, head_dim=cfg.hd,
+        rope_theta=cfg.rope_theta, qk_norm=False, positions=positions,
+        dtype=DTYPE, block_q=cfg.attn_block_q, block_kv=cfg.attn_block_kv,
+        policy=policy)
+    x = policy(x + a, "residual")
+    h = napply(sp["ln2"], x)
+    return policy(x + mlp(sp["mlp"], h, cfg.act, DTYPE), "residual")
+
+
+def forward(cfg: ArchConfig, params: dict, batch: Dict[str, jnp.ndarray],
+            policy: ShardingPolicy = NO_POLICY) -> jnp.ndarray:
+    """Returns final hidden states (B, S, d) — the head is applied by
+    loss_fn / logits() in chunks."""
+    tokens = batch["tokens"]
+    B, S_text = tokens.shape
+    x = embed(params["embed"], tokens, DTYPE)
+    if cfg.num_patches:
+        pe = batch["patch_embeds"].astype(DTYPE)
+        pe = linear(params["patch_proj"], pe, DTYPE)
+        x = jnp.concatenate([pe, x], axis=1)
+    S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = policy(x, "residual")
+
+    shared = params.get("shared_attn")
+
+    def body(carry, xs):
+        x = carry
+        bp, idx = xs
+        if cfg.family in ("ssm", "hybrid"):
+            x = _mamba_body(cfg, bp, x, policy)
+            if cfg.family == "hybrid":
+                x = jax.lax.cond(
+                    (idx + 1) % cfg.attn_every == 0,
+                    lambda v: _shared_attn_body(cfg, shared, v, positions,
+                                                policy),
+                    lambda v: v, x)
+        else:
+            x = _attn_mlp_body(cfg, bp, x, positions, policy)
+        return x, None
+
+    if not cfg.remat or cfg.remat_policy == "none":
+        body_fn = body
+    elif cfg.remat_policy == "dots":
+        # Save matmul outputs across the scan boundary: backward re-runs
+        # only the cheap elementwise work, trading activation bytes for
+        # ~1/3 less recomputed flops vs full remat (§Perf knob).
+        body_fn = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    else:
+        body_fn = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body_fn, x,
+                        (params["blocks"],
+                         jnp.arange(cfg.num_layers, dtype=jnp.int32)))
+    return _norm_apply(cfg)(params["final_norm"], x)
+
+
+def logits_chunked(cfg: ArchConfig, params: dict, hidden: jnp.ndarray
+                   ) -> jnp.ndarray:
+    """Full logits (only for small smoke configs / sampling)."""
+    return linear(params["lm_head"], hidden, DTYPE)
+
+
+def loss_fn(cfg: ArchConfig, params: dict, batch: Dict[str, jnp.ndarray],
+            policy: ShardingPolicy = NO_POLICY) -> Tuple[jnp.ndarray, dict]:
+    """Next-token cross entropy; the head+xent run per sequence chunk so the
+    (B, S, V) tensor never materializes."""
+    hidden = forward(cfg, params, batch, policy)
+    labels = batch["labels"]
+    if cfg.num_patches:   # loss only over text positions
+        hidden = hidden[:, cfg.num_patches:]
+    B, S, d = hidden.shape
+    nc = cfg.loss_chunks
+    while S % nc:
+        nc -= 1
+    hc = hidden.reshape(B, nc, S // nc, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, nc, S // nc).transpose(1, 0, 2)
+
+    w = params["lm_head"]["w"]
+
+    def chunk_loss(args):
+        h, l = args
+        lg = jnp.einsum("bsd,dv->bsv", h.astype(DTYPE), w.astype(DTYPE))
+        lg = lg.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        tgt = jnp.take_along_axis(lg, l[..., None], axis=-1)[..., 0]
+        return jnp.sum(lse - tgt)
+
+    per_chunk = jax.lax.map(jax.checkpoint(chunk_loss) if cfg.remat
+                            else chunk_loss, (hc, lc))
+    total = jnp.sum(per_chunk)
+    ntok = B * S
+    loss = total / ntok
+    return loss, {"loss": loss, "tokens": ntok}
+
+
+# ---------------------------------------------------------------------------
+# Decode.
+# ---------------------------------------------------------------------------
+
+class DecodeCaches(NamedTuple):
+    kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]]          # (L,B,S,KV,hd) x2
+    mla: Optional[Tuple[jnp.ndarray, jnp.ndarray]]         # latent, rope
+    ssm: Optional[Tuple[jnp.ndarray, jnp.ndarray]]         # (L,B,h,p,n), conv
+    shared_kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]]   # (sites,B,S,KV,hd)
+    kv_scale: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None
+    # int8 cache: per-(layer,batch,position,head) symmetric scales f32
+    # (L,B,S,KV,1); bf16 caches carry kv_scale=None.
+
+
+def init_decode_caches(cfg: ArchConfig, batch: int, max_seq: int,
+                       dtype=jnp.bfloat16) -> DecodeCaches:
+    L = cfg.num_layers
+    kv = mla_c = ssm_c = shared = None
+    if cfg.family in ("ssm", "hybrid"):
+        s = cfg.ssm
+        d_inner = s.expand * cfg.d_model
+        nh = d_inner // s.head_dim
+        conv_dim = d_inner + 2 * s.n_groups * s.d_state
+        ssm_c = (jnp.zeros((L, batch, nh, s.head_dim, s.d_state), jnp.float32),
+                 jnp.zeros((L, batch, s.conv_k - 1, conv_dim), dtype))
+        if cfg.family == "hybrid":
+            sites = cfg.num_layers // cfg.attn_every
+            shared = (jnp.zeros((sites, batch, max_seq, cfg.num_kv_heads,
+                                 cfg.hd), dtype),
+                      jnp.zeros((sites, batch, max_seq, cfg.num_kv_heads,
+                                 cfg.hd), dtype))
+    elif cfg.mla:
+        m = cfg.mla
+        mla_c = (jnp.zeros((L, batch, max_seq, m.kv_lora_rank), dtype),
+                 jnp.zeros((L, batch, max_seq, m.qk_rope_dim), dtype))
+    else:
+        kv = (jnp.zeros((L, batch, max_seq, cfg.num_kv_heads, cfg.hd), dtype),
+              jnp.zeros((L, batch, max_seq, cfg.num_kv_heads, cfg.hd), dtype))
+        if dtype == jnp.int8:
+            scales = (jnp.ones((L, batch, max_seq, cfg.num_kv_heads, 1),
+                               jnp.float32),
+                      jnp.ones((L, batch, max_seq, cfg.num_kv_heads, 1),
+                               jnp.float32))
+            return DecodeCaches(kv=kv, mla=mla_c, ssm=ssm_c,
+                                shared_kv=shared, kv_scale=scales)
+    return DecodeCaches(kv=kv, mla=mla_c, ssm=ssm_c, shared_kv=shared)
+
+
+def decode_step(cfg: ArchConfig, params: dict, caches: DecodeCaches,
+                token: jnp.ndarray, pos: jnp.ndarray,
+                policy: ShardingPolicy = NO_POLICY
+                ) -> Tuple[jnp.ndarray, DecodeCaches]:
+    """token: (B, 1) int32; pos: () int32 — write position (= cache len)."""
+    B = token.shape[0]
+    x = embed(params["embed"], token, DTYPE)
+    napply = _norm_apply(cfg)
+    shared = params.get("shared_attn")
+
+    if cfg.family in ("ssm", "hybrid"):
+        s = cfg.ssm
+
+        def body(carry, xs):
+            x, sh_k, sh_v = carry
+            bp, ssm_s, conv_s, idx = xs
+            h = napply(bp["ln1"], x)
+            y, new_state = ssm_mod.mamba2_decode_block(
+                bp["mamba"], h, ssm_mod.Mamba2State(ssm_s, conv_s),
+                d_state=s.d_state, expand=s.expand, head_dim=s.head_dim,
+                n_groups=s.n_groups, dtype=DTYPE)
+            x = x + y
+
+            if cfg.family == "hybrid":
+                site = idx // cfg.attn_every
+
+                def do_attn(op):
+                    x, sh_k, sh_v = op
+                    h = napply(shared["ln1"], x)
+                    a, nk, nv = attn.attention_decode_block(
+                        shared["attn"], h, sh_k[site], sh_v[site], pos,
+                        num_heads=cfg.num_heads,
+                        num_kv_heads=cfg.num_kv_heads, head_dim=cfg.hd,
+                        rope_theta=cfg.rope_theta, qk_norm=False, dtype=DTYPE)
+                    x = x + a
+                    h2 = napply(shared["ln2"], x)
+                    x = x + mlp(shared["mlp"], h2, cfg.act, DTYPE)
+                    return x, sh_k.at[site].set(nk), sh_v.at[site].set(nv)
+
+                x, sh_k, sh_v = jax.lax.cond(
+                    (idx + 1) % cfg.attn_every == 0, do_attn,
+                    lambda op: op, (x, sh_k, sh_v))
+            return (x, sh_k, sh_v), (new_state.ssm, new_state.conv)
+
+        sh_k, sh_v = (caches.shared_kv if caches.shared_kv is not None
+                      else (jnp.zeros((1,)), jnp.zeros((1,))))
+        (x, sh_k, sh_v), (new_ssm, new_conv) = jax.lax.scan(
+            body, (x, sh_k, sh_v),
+            (params["blocks"], caches.ssm[0], caches.ssm[1],
+             jnp.arange(cfg.num_layers, dtype=jnp.int32)))
+        new_caches = caches._replace(
+            ssm=(new_ssm, new_conv),
+            shared_kv=(sh_k, sh_v) if cfg.family == "hybrid" else None)
+    elif cfg.mla:
+        m = cfg.mla
+
+        def body(x, xs):
+            bp, lat, rope = xs
+            h = napply(bp["ln1"], x)
+            a, lat, rope = mla_mod.mla_decode_block(
+                bp["attn"], h, lat, rope, pos, num_heads=cfg.num_heads,
+                kv_lora_rank=m.kv_lora_rank, qk_nope_dim=m.qk_nope_dim,
+                qk_rope_dim=m.qk_rope_dim, v_head_dim=m.v_head_dim,
+                rope_theta=cfg.rope_theta, dtype=DTYPE)
+            x = x + a
+            h = napply(bp["ln2"], x)
+            if cfg.moe:
+                mo = cfg.moe
+                f = moe_mod.moe_block(bp["moe"], h,
+                                      num_experts=mo.num_experts,
+                                      top_k=mo.top_k,
+                                      capacity_factor=mo.capacity_factor,
+                                      dtype=DTYPE)
+            else:
+                f = mlp(bp["mlp"], h, cfg.act, DTYPE)
+            return x + f, (lat, rope)
+
+        x, (lat, rope) = jax.lax.scan(
+            body, x, (params["blocks"], caches.mla[0], caches.mla[1]))
+        new_caches = caches._replace(mla=(lat, rope))
+    else:
+        quantized = caches.kv_scale is not None
+
+        def ffn(bp, x):
+            h = napply(bp["ln2"], x)
+            if cfg.moe:
+                mo = cfg.moe
+                return moe_mod.moe_block(bp["moe"], h,
+                                         num_experts=mo.num_experts,
+                                         top_k=mo.top_k,
+                                         capacity_factor=mo.capacity_factor,
+                                         dtype=DTYPE)
+            return mlp(bp["mlp"], h, cfg.act, DTYPE)
+
+        if quantized:
+            def body(x, xs):
+                bp, kc, vc, ks, vs = xs
+                h = napply(bp["ln1"], x)
+                a, kc, vc, ks, vs = attn.attention_decode_block_q8(
+                    bp["attn"], h, kc, vc, ks, vs, pos,
+                    num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                    head_dim=cfg.hd, rope_theta=cfg.rope_theta,
+                    qk_norm=cfg.qk_norm, dtype=DTYPE)
+                x = x + a
+                return x + ffn(bp, x), (kc, vc, ks, vs)
+
+            x, (kc, vc, ks, vs) = jax.lax.scan(
+                body, x, (params["blocks"], caches.kv[0], caches.kv[1],
+                          caches.kv_scale[0], caches.kv_scale[1]))
+            new_caches = caches._replace(kv=(kc, vc), kv_scale=(ks, vs))
+        else:
+            def body(x, xs):
+                bp, kc, vc = xs
+                h = napply(bp["ln1"], x)
+                a, kc, vc = attn.attention_decode_block(
+                    bp["attn"], h, kc, vc, pos, num_heads=cfg.num_heads,
+                    num_kv_heads=cfg.num_kv_heads, head_dim=cfg.hd,
+                    rope_theta=cfg.rope_theta, qk_norm=cfg.qk_norm,
+                    dtype=DTYPE)
+                x = x + a
+                return x + ffn(bp, x), (kc, vc)
+
+            x, (kc, vc) = jax.lax.scan(
+                body, x, (params["blocks"], caches.kv[0], caches.kv[1]))
+            new_caches = caches._replace(kv=(kc, vc))
+
+    x = napply(params["final_norm"], x)
+    logits = linear(params["lm_head"], x, DTYPE)
+    return logits.astype(jnp.float32), new_caches

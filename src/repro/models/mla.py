@@ -1,0 +1,139 @@
+"""Multi-head Latent Attention (DeepSeek-V2), with compressed KV cache.
+
+MLA down-projects keys/values into a small latent (kv_lora_rank) plus a
+shared rotary key; the decode cache stores only (latent, rope_key) per
+position — the architecture's entire point is the cache-footprint
+reduction, which is also why paged-cgRX paging (serving/paged.py) pairs
+well with it: pages are ~9x smaller than GQA pages at equal seq.
+
+Shapes follow DeepSeek-V2-Lite: no q compression, qk_nope 128 + qk_rope 64
+per head, v_head 128.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .attention import NEG_INF, blockwise_causal_attention
+from .layers import _init, apply_rope, init_linear, linear, rmsnorm
+
+
+def init_mla(key, d_model: int, num_heads: int, kv_lora_rank: int,
+             qk_nope_dim: int, qk_rope_dim: int, v_head_dim: int,
+             dtype=jnp.float32) -> dict:
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    H = num_heads
+    qd = qk_nope_dim + qk_rope_dim
+    return {
+        "wq": init_linear(k1, d_model, H * qd, False, dtype),
+        # joint down-projection: latent + shared rope key
+        "wkv_down": init_linear(k2, d_model, kv_lora_rank + qk_rope_dim,
+                                False, dtype),
+        "kv_norm": {"scale": jnp.ones((kv_lora_rank,), dtype)},
+        "wkv_up": init_linear(k3, kv_lora_rank,
+                              H * (qk_nope_dim + v_head_dim), False, dtype),
+        "wo": init_linear(k4, H * v_head_dim, d_model, False, dtype),
+    }
+
+
+def _project(p, x, *, num_heads, kv_lora_rank, qk_nope_dim, qk_rope_dim,
+             v_head_dim, positions, rope_theta, dtype):
+    B, S, _ = x.shape
+    H = num_heads
+    q = linear(p["wq"], x, dtype).reshape(B, S, H, qk_nope_dim + qk_rope_dim)
+    q_nope, q_rope = jnp.split(q, [qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+
+    down = linear(p["wkv_down"], x, dtype)
+    latent, k_rope = jnp.split(down, [kv_lora_rank], axis=-1)
+    latent = rmsnorm(p["kv_norm"], latent)
+    k_rope = apply_rope(k_rope.reshape(B, S, 1, qk_rope_dim), positions,
+                        rope_theta)
+    return q_nope, q_rope, latent, k_rope
+
+
+def _expand_kv(p, latent, *, num_heads, qk_nope_dim, v_head_dim, dtype):
+    B, S = latent.shape[:2]
+    H = num_heads
+    up = linear(p["wkv_up"], latent, dtype).reshape(
+        B, S, H, qk_nope_dim + v_head_dim)
+    k_nope, v = jnp.split(up, [qk_nope_dim], axis=-1)
+    return k_nope, v
+
+
+def mla_block(p: dict, x: jnp.ndarray, *, num_heads: int, kv_lora_rank: int,
+              qk_nope_dim: int, qk_rope_dim: int, v_head_dim: int,
+              positions: jnp.ndarray, rope_theta: float = 10000.0,
+              dtype=jnp.bfloat16, block_q: int = 512,
+              block_kv: int = 512) -> jnp.ndarray:
+    """Training / prefill (no cache)."""
+    B, S, _ = x.shape
+    H = num_heads
+    q_nope, q_rope, latent, k_rope = _project(
+        p, x, num_heads=num_heads, kv_lora_rank=kv_lora_rank,
+        qk_nope_dim=qk_nope_dim, qk_rope_dim=qk_rope_dim,
+        v_head_dim=v_head_dim, positions=positions, rope_theta=rope_theta,
+        dtype=dtype)
+    k_nope, v = _expand_kv(p, latent, num_heads=num_heads,
+                           qk_nope_dim=qk_nope_dim, v_head_dim=v_head_dim,
+                           dtype=dtype)
+    # Assemble full q/k with the shared rope key broadcast over heads, then
+    # reuse the blockwise kernel (KV = H here; pad v to qk dim is avoided by
+    # separate v width).
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(
+        k_rope, (B, S, H, qk_rope_dim))], axis=-1)
+    # blockwise expects equal q/k head dim and v may differ: pad v then slice.
+    qd = qk_nope_dim + qk_rope_dim
+    if v_head_dim < qd:
+        v_p = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, qd - v_head_dim)))
+    else:
+        v_p = v
+    o = blockwise_causal_attention(q, k, v_p, block_q, block_kv)
+    o = o[..., :v_head_dim]
+    return linear(p["wo"], o.reshape(B, S, H * v_head_dim), dtype)
+
+
+def mla_decode_block(p: dict, x: jnp.ndarray, latent_cache: jnp.ndarray,
+                     rope_cache: jnp.ndarray, pos: jnp.ndarray, *,
+                     num_heads: int, kv_lora_rank: int, qk_nope_dim: int,
+                     qk_rope_dim: int, v_head_dim: int,
+                     rope_theta: float = 10000.0, dtype=jnp.bfloat16):
+    """Decode with the *compressed* cache.
+
+    latent_cache: (B, S, kv_lora_rank); rope_cache: (B, S, qk_rope_dim).
+    The latent is re-expanded per step (the paper's absorbed-matmul trick is
+    a further optimization; we expand explicitly, trading flops for cache
+    bytes exactly as MLA intends).
+    """
+    B = x.shape[0]
+    H = num_heads
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_rope, latent, k_rope = _project(
+        p, x, num_heads=num_heads, kv_lora_rank=kv_lora_rank,
+        qk_nope_dim=qk_nope_dim, qk_rope_dim=qk_rope_dim,
+        v_head_dim=v_head_dim, positions=positions, rope_theta=rope_theta,
+        dtype=dtype)
+    latent_cache = jax.lax.dynamic_update_slice(
+        latent_cache, latent.astype(latent_cache.dtype), (0, pos, 0))
+    rope_cache = jax.lax.dynamic_update_slice(
+        rope_cache, k_rope[:, :, 0].astype(rope_cache.dtype), (0, pos, 0))
+
+    S = latent_cache.shape[1]
+    k_nope, v = _expand_kv(p, latent_cache.astype(dtype), num_heads=H,
+                           qk_nope_dim=qk_nope_dim, v_head_dim=v_head_dim,
+                           dtype=dtype)                     # (B, S, H, *)
+    scale = 1.0 / np.sqrt(qk_nope_dim + qk_rope_dim)
+    s = (jnp.einsum("bhd,bshd->bhs", q_nope[:, 0].astype(jnp.float32),
+                    k_nope.astype(jnp.float32))
+         + jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(jnp.float32),
+                      rope_cache.astype(jnp.float32))) * scale
+    valid = jnp.arange(S)[None, None, :] < (pos + 1)
+    s = jnp.where(valid, s, NEG_INF)
+    pattn = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhs,bshd->bhd", pattn, v.astype(jnp.float32))
+    out = linear(p["wo"], o.reshape(B, 1, H * v_head_dim).astype(dtype), dtype)
+    return out, latent_cache, rope_cache

@@ -1,0 +1,134 @@
+"""Mixture-of-Experts with sort-based bucketed dispatch.
+
+Token->expert dispatch is the same sorted-bucket problem the paper's index
+solves: sort the (expert_id, token) pairs, then each expert's slice is
+delimited by two binary searches over the sorted ids — exactly the
+per-bucket batch-update pattern of cgRX Sec. 4 (and it reuses
+``core.bucketing.segment_bounds``).  Tokens beyond an expert's capacity
+are dropped (their combine weight contributes nothing), standard
+capacity-factor semantics.
+
+Experts are laid out as stacked (E, d, f) weights so expert parallelism is
+a single sharding annotation on the E axis; the gathered (E, C, d) token
+buffers all-to-all across the mesh when EP is active.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bucketing import segment_bounds
+
+from .layers import _init
+
+
+def init_moe(key, d: int, f_expert: int, num_experts: int,
+             num_shared: int = 0, f_shared: Optional[int] = None,
+             dtype=jnp.float32) -> dict:
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    E = num_experts
+    p = {
+        "router": {"w": _init(k1, (d, E), dtype=jnp.float32)},  # router in f32
+        "wi_gate": _init(k2, (E, d, f_expert), dtype=dtype),
+        "wi_up": _init(k3, (E, d, f_expert), dtype=dtype),
+        "wo": _init(k4, (E, f_expert, d), dtype=dtype),
+    }
+    if num_shared:
+        fs = f_shared or f_expert
+        ks = jax.random.split(k5, 3)
+        p["shared"] = {
+            "wi_gate": _init(ks[0], (d, num_shared * fs), dtype=dtype),
+            "wi_up": _init(ks[1], (d, num_shared * fs), dtype=dtype),
+            "wo": _init(ks[2], (num_shared * fs, d), dtype=dtype),
+        }
+    return p
+
+
+def moe_block(p: dict, x: jnp.ndarray, *, num_experts: int, top_k: int,
+              capacity_factor: float = 1.25, dtype=jnp.bfloat16,
+              ep_axis: Optional[str] = None) -> jnp.ndarray:
+    """x: (B, S, d) -> (B, S, d).  Dropless up to the capacity factor."""
+    B, S, d = x.shape
+    T = B * S
+    E = num_experts
+    xt = x.reshape(T, d)
+
+    # --- routing (f32 for numerics) ---
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"]["w"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(probs, top_k)            # (T, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # --- bucketed dispatch: sort (expert, flat position) pairs ---
+    # NB: only integer operands are sorted (the permutation); float gates
+    # are gathered afterwards.  Differentiating lax.sort with a float
+    # payload trips a broken gather-batching path in this jax build, and
+    # an int-only sort is also the cheaper radix-sort shape on TPU.
+    flat_e = experts.reshape(-1).astype(jnp.int32)          # (T*k,)
+    flat_g = gates.reshape(-1).astype(jnp.float32)
+    flat_pos = jnp.arange(T * top_k, dtype=jnp.int32)
+    se, sp = jax.lax.sort((flat_e, flat_pos), num_keys=1, is_stable=True)
+    st = sp // top_k                                        # token of entry
+    sg = jnp.take(flat_g, sp)                               # differentiable
+    starts, _ends = segment_bounds(se, E)                   # two binary searches
+    # Position of each entry within its expert segment.
+    pos_in_e = jnp.arange(T * top_k, dtype=jnp.int32) - starts[se]
+
+    C = int(np.ceil(T * top_k / E * capacity_factor))
+    C = max(8, -(-C // 8) * 8)
+    keep = pos_in_e < C
+
+    # Scatter token ids into per-expert slots; empty slots point at token 0
+    # with weight 0 (contributes nothing on combine).
+    slot = se * C + pos_in_e
+    slot = jnp.where(keep, slot, E * C)                      # drop slot
+    slot_tok = jnp.zeros((E * C + 1,), jnp.int32).at[slot].set(st, mode="drop")
+    slot_gate = jnp.zeros((E * C + 1,), jnp.float32).at[slot].set(sg, mode="drop")
+    slot_tok, slot_gate = slot_tok[:-1], slot_gate[:-1]
+    slot_used = jnp.zeros((E * C + 1,), jnp.bool_).at[slot].set(True, mode="drop")[:-1]
+
+    # Gather expert inputs (E, C, d); EP shards the E axis.
+    xe = jnp.take(xt, slot_tok, axis=0).reshape(E, C, d).astype(dtype)
+    xe = xe * slot_used.reshape(E, C, 1).astype(dtype)
+    if ep_axis:
+        xe = jax.lax.with_sharding_constraint(
+            xe, jax.sharding.PartitionSpec(ep_axis, None, None))
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["wi_gate"].astype(dtype)))
+    h = h * jnp.einsum("ecd,edf->ecf", xe, p["wi_up"].astype(dtype))
+    ye = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(dtype))  # (E, C, d)
+
+    # Combine: weighted scatter-add back to tokens.
+    yflat = (ye.reshape(E * C, d).astype(jnp.float32)
+             * slot_gate[:, None])
+    out = jnp.zeros((T, d), jnp.float32).at[slot_tok].add(
+        jnp.where(slot_used[:, None], yflat, 0.0))
+
+    if "shared" in p:
+        sh = p["shared"]
+        g = jax.nn.silu(jnp.einsum("td,df->tf", xt.astype(dtype),
+                                   sh["wi_gate"].astype(dtype)))
+        g = g * jnp.einsum("td,df->tf", xt.astype(dtype),
+                           sh["wi_up"].astype(dtype))
+        out = out + jnp.einsum("tf,fd->td", g,
+                               sh["wo"].astype(dtype)).astype(jnp.float32)
+
+    return out.reshape(B, S, d).astype(x.dtype)
+
+
+def aux_load_balance_loss(p: dict, x: jnp.ndarray, num_experts: int,
+                          top_k: int) -> jnp.ndarray:
+    """Switch-style load-balancing auxiliary loss (mean over tokens)."""
+    B, S, d = x.shape
+    xt = x.reshape(-1, d)
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"]["w"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, experts = jax.lax.top_k(probs, top_k)
+    counts = jnp.zeros((num_experts,), jnp.float32).at[experts.reshape(-1)].add(1.0)
+    frac_tokens = counts / counts.sum()
+    frac_probs = probs.mean(axis=0)
+    return num_experts * jnp.sum(frac_tokens * frac_probs)

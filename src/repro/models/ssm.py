@@ -1,0 +1,222 @@
+"""Mamba2 / SSD (state-space duality) blocks.
+
+Training uses the chunked SSD algorithm (Dao & Gu 2024, Sec. 6): the
+sequence is split into chunks; within a chunk the recurrence is computed
+as a masked quadratic form (MXU-friendly), across chunks a linear
+recurrence over per-chunk states runs in a ``lax.scan``.  Decode is the
+O(1) per-token recurrence over the (heads, head_dim, d_state) state.
+
+Depthwise causal conv (k=4) is expressed as a sum of shifts (k is tiny),
+with a rolling (k-1)-deep conv state for decode.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import _init, gated_rmsnorm, init_gated_rmsnorm, init_linear, linear
+
+
+def init_mamba2(key, d_model: int, *, d_state: int = 128, expand: int = 2,
+                head_dim: int = 64, n_groups: int = 1, conv_k: int = 4,
+                dtype=jnp.float32) -> dict:
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    conv_dim = d_inner + 2 * n_groups * d_state
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    # in_proj emits [z (gate), x, B, C, dt]
+    d_in_proj = 2 * d_inner + 2 * n_groups * d_state + n_heads
+    return {
+        "in_proj": init_linear(k1, d_model, d_in_proj, False, dtype),
+        "conv_w": _init(k2, (conv_k, conv_dim), scale=0.5, dtype=dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),   # A = -exp(A_log) = -1
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm": init_gated_rmsnorm(d_inner, dtype),
+        "out_proj": init_linear(k3, d_inner, d_model, False, dtype),
+    }
+
+
+def _split_proj(zxbcdt, d_inner, n_groups, d_state, n_heads):
+    z, x, B, C, dt = jnp.split(
+        zxbcdt,
+        [d_inner, 2 * d_inner, 2 * d_inner + n_groups * d_state,
+         2 * d_inner + 2 * n_groups * d_state],
+        axis=-1)
+    return z, x, B, C, dt
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, L, C); w: (k, C) depthwise; sum-of-shifts formulation."""
+    k = w.shape[0]
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        shift = k - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :x.shape[1]]
+        out = out + xi * w[i]
+    return out + b
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """Stable 'segment sum': L[i, j] = sum_{j < k <= i} a[k]  (i >= j)."""
+    T = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray, B: jnp.ndarray,
+             C: jnp.ndarray, chunk: int = 128,
+             init_state: Optional[jnp.ndarray] = None
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD.
+
+    x: (b, L, h, p); dt: (b, L, h) (post-softplus); A: (h,) negative;
+    B, C: (b, L, g, n) with h % g == 0.
+    Returns (y (b, L, h, p), final_state (b, h, p, n)).
+    """
+    b, L, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    nc = -(-L // chunk)
+    Lp = nc * chunk
+    if Lp != L:
+        x = jnp.pad(x, ((0, 0), (0, Lp - L), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, Lp - L), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, Lp - L), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, Lp - L), (0, 0), (0, 0)))
+
+    rep = h // g
+    xc = x.reshape(b, nc, chunk, h, p).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    Bc = B.reshape(b, nc, chunk, g, n).astype(jnp.float32)
+    Cc = C.reshape(b, nc, chunk, g, n).astype(jnp.float32)
+    Bh = jnp.repeat(Bc, rep, axis=3)                    # (b,c,q,h,n)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    dA = dtc * A[None, None, None, :]                   # (b,c,q,h) <= 0
+    dA_cs = jnp.cumsum(dA, axis=2)                      # within-chunk cumsum
+
+    # 1. Intra-chunk (diagonal blocks): masked quadratic attention-form.
+    Lmat = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))   # (b,c,h,q,q)
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Ch, Bh)   # (b,c,h,q,k)
+    y_diag = jnp.einsum("bchqk,bchqk,bckh,bckhp->bcqhp",
+                        scores, Lmat, dtc, xc)
+
+    # 2. Per-chunk final states.
+    decay_states = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)  # (b,c,q,h)
+    states = jnp.einsum("bcqhn,bcqh,bcqh,bcqhp->bchpn",
+                        Bh, decay_states, dtc, xc)       # (b,c,h,p,n)
+
+    # 3. Inter-chunk recurrence (scan over chunks).
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])            # (b,c,h)
+
+    def step(carry, inp):
+        s_prev = carry                                   # (b,h,p,n)
+        s_c, dec = inp                                   # (b,h,p,n), (b,h)
+        s_new = s_c + dec[..., None, None] * s_prev
+        return s_new, s_prev
+
+    s0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    final, prev_states = jax.lax.scan(
+        step, s0, (states.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)   # (b,c,h,p,n)
+
+    # 4. Inter-chunk contribution to outputs.
+    state_decay = jnp.exp(dA_cs)                         # (b,c,q,h)
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp",
+                       Ch, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(b, Lp, h, p)[:, :L]
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(state: jnp.ndarray, x: jnp.ndarray, dt: jnp.ndarray,
+                    A: jnp.ndarray, B: jnp.ndarray, C: jnp.ndarray
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One-token recurrence.  state: (b,h,p,n); x: (b,h,p); dt: (b,h);
+    B, C: (b,g,n)."""
+    h = x.shape[1]
+    g = B.shape[1]
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=1)                      # (b,h,n)
+    Ch = jnp.repeat(C, rep, axis=1)
+    dA = jnp.exp(dt * A[None, :])                        # (b,h)
+    state = (state * dA[..., None, None]
+             + jnp.einsum("bh,bhn,bhp->bhpn", dt, Bh, x))
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, state)
+    return y, state
+
+
+class Mamba2State(NamedTuple):
+    ssm: jnp.ndarray    # (b, h, p, n) f32
+    conv: jnp.ndarray   # (b, k-1, conv_dim)
+
+
+def mamba2_block(p: dict, u: jnp.ndarray, *, d_state: int, expand: int,
+                 head_dim: int, n_groups: int = 1, chunk: int = 128,
+                 dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Training / prefill.  u: (B, L, d_model)."""
+    Bsz, L, d_model = u.shape
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+
+    zxbcdt = linear(p["in_proj"], u, dtype)
+    z, xBC_x, Bc, Cc, dt = _split_proj(zxbcdt, d_inner, n_groups, d_state,
+                                       n_heads)
+    xBC = jnp.concatenate([xBC_x, Bc, Cc], axis=-1)
+    xBC = jax.nn.silu(_causal_conv(xBC, p["conv_w"].astype(dtype),
+                                   p["conv_b"].astype(dtype)))
+    x, Bc, Cc = jnp.split(xBC, [d_inner, d_inner + n_groups * d_state], -1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, _ = ssd_scan(x.reshape(Bsz, L, n_heads, head_dim), dt, A,
+                    Bc.reshape(Bsz, L, n_groups, d_state),
+                    Cc.reshape(Bsz, L, n_groups, d_state), chunk=chunk)
+    y = y + x.reshape(Bsz, L, n_heads, head_dim) * p["D"][None, None, :, None]
+    y = y.reshape(Bsz, L, d_inner)
+    y = gated_rmsnorm(p["norm"], y, z)
+    return linear(p["out_proj"], y.astype(dtype), dtype)
+
+
+def mamba2_decode_block(p: dict, u: jnp.ndarray, state: Mamba2State, *,
+                        d_state: int, expand: int, head_dim: int,
+                        n_groups: int = 1, dtype=jnp.bfloat16
+                        ) -> Tuple[jnp.ndarray, Mamba2State]:
+    """Decode one token.  u: (B, 1, d_model)."""
+    Bsz, _, d_model = u.shape
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    conv_k = p["conv_w"].shape[0]
+
+    zxbcdt = linear(p["in_proj"], u[:, 0], dtype)          # (B, d_in_proj)
+    z, xBC_x, Bc, Cc, dt = _split_proj(zxbcdt, d_inner, n_groups, d_state,
+                                       n_heads)
+    xBC = jnp.concatenate([xBC_x, Bc, Cc], axis=-1)        # (B, conv_dim)
+
+    # Rolling conv state: window = [conv_state, current].
+    window = jnp.concatenate([state.conv, xBC[:, None, :]], axis=1)  # (B,k,C)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    xBC = jax.nn.silu(conv_out).astype(dtype)
+    new_conv = window[:, 1:]
+
+    x, Bc, Cc = jnp.split(xBC, [d_inner, d_inner + n_groups * d_state], -1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, new_ssm = ssd_decode_step(
+        state.ssm, x.reshape(Bsz, n_heads, head_dim).astype(jnp.float32),
+        dt, A, Bc.reshape(Bsz, n_groups, d_state).astype(jnp.float32),
+        Cc.reshape(Bsz, n_groups, d_state).astype(jnp.float32))
+    y = y + x.reshape(Bsz, n_heads, head_dim).astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(Bsz, 1, d_inner)
+    y = gated_rmsnorm(p["norm"], y, z[:, None, :])
+    out = linear(p["out_proj"], y.astype(dtype), dtype)
+    return out, Mamba2State(ssm=new_ssm, conv=new_conv)

@@ -1,0 +1,239 @@
+"""Sharding rules: parameter pytrees + activations -> PartitionSpecs.
+
+2-D sharding (FSDP x TP): every weight is sharded over the ``data`` axis on
+one dim (ZeRO-3 style — XLA inserts just-in-time all-gathers which the
+latency-hiding scheduler overlaps) *and* over the ``model`` axis on the
+Megatron-parallel dim (heads / ffn hidden / experts / vocab).  The ``pod``
+axis (multi-pod mesh) carries pure data parallelism: its only collective
+is the once-per-step gradient all-reduce, matching its lower bisection
+bandwidth.
+
+Rules are *suffix patterns* on the parameter path; resolution checks
+divisibility against the actual mesh and silently drops axes that do not
+divide (e.g. MQA's single KV head can't split 16 ways — it replicates),
+so every assigned architecture shards without per-arch hand-tuning.
+Dropped axes are reported by ``explain()`` for the dry-run log.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# (path-suffix regex, spec template) — first match wins.  Templates name
+# mesh axes per tensor dim; 'dp' expands to the data-parallel axis group
+# ('pod','data') when a pod axis exists, else 'data'.
+PARAM_RULES: List[Tuple[str, Tuple]] = [
+    (r"embed/w$",           ("model", "data")),
+    (r"lm_head/w$",         ("data", "model")),
+    (r"patch_proj/w$",      (None, "model")),
+    (r"patch_proj/b$",      ("model",)),
+    # attention
+    (r"attn/wq/w$",         ("data", "model")),
+    (r"attn/wk/w$",         ("data", "model")),
+    (r"attn/wv/w$",         ("data", "model")),
+    (r"attn/wo/w$",         ("model", "data")),
+    (r"attn/w[qkv]/b$",     ("model",)),
+    (r"attn/wo/b$",         (None,)),
+    # MLA
+    (r"attn/wkv_down/w$",   ("data", None)),
+    (r"attn/wkv_up/w$",     (None, "model")),
+    (r"attn/kv_norm/.*$",   (None,)),
+    # MoE (experts over model = EP; dense dims FSDP over data)
+    (r"moe/router/w$",      ("data", None)),
+    (r"moe/wi_gate$",       ("model", "data", None)),
+    (r"moe/wi_up$",         ("model", "data", None)),
+    (r"moe/wo$",            ("model", None, "data")),
+    (r"moe/shared/wi_gate$", ("data", "model")),
+    (r"moe/shared/wi_up$",  ("data", "model")),
+    (r"moe/shared/wo$",     ("model", "data")),
+    # dense MLP (init_mlp stores bare arrays, no /w wrapper)
+    (r"mlp/wi(_gate|_up)?$", ("data", "model")),
+    (r"mlp/wo$",            ("model", "data")),
+    # Mamba2
+    (r"mamba/in_proj/w$",   ("data", "model")),
+    (r"mamba/out_proj/w$",  ("model", "data")),
+    (r"mamba/conv_w$",      (None, "model")),
+    (r"mamba/conv_b$",      ("model",)),
+    (r"mamba/(A_log|D|dt_bias)$", (None,)),
+    # norms & everything else: replicated
+    (r".*",                 None),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, jax.tree_util.GetAttrKey):
+            parts.append(k.name)
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+@dataclasses.dataclass
+class MeshAxes:
+    data: str = "data"
+    model: str = "model"
+    pod: Optional[str] = None
+
+    @property
+    def dp(self) -> Tuple[str, ...]:
+        return (self.pod, self.data) if self.pod else (self.data,)
+
+
+def infer_axes(mesh: Mesh) -> MeshAxes:
+    names = mesh.axis_names
+    return MeshAxes(pod="pod" if "pod" in names else None)
+
+
+def _fit_axis(axis, dim: int, mesh: Mesh):
+    """Return axis (or axis tuple) if it divides dim, else None."""
+    if axis is None:
+        return None
+    axes = axis if isinstance(axis, tuple) else (axis,)
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    return axis if dim % size == 0 else None
+
+
+_DROPPED: List[str] = []
+
+
+def spec_for_param(path_str: str, shape: Tuple[int, ...], mesh: Mesh,
+                   axes: MeshAxes) -> P:
+    template = None
+    for pat, tpl in PARAM_RULES:
+        if re.search(pat, path_str):
+            template = tpl
+            break
+    if template is None:
+        return P()
+    # Stacked per-layer params ('blocks/...') carry a leading layer dim.
+    ndim = len(shape)
+    tpl = list(template)
+    if len(tpl) < ndim:
+        tpl = [None] * (ndim - len(tpl)) + tpl
+    tpl = tpl[:ndim]
+    out = []
+    for d, ax in enumerate(tpl):
+        fit = _fit_axis(ax, shape[d], mesh)
+        if ax is not None and fit is None:
+            _DROPPED.append(f"{path_str}[{d}] {shape[d]} !% {ax}")
+        out.append(fit)
+    return P(*out)
+
+
+def param_specs(params_shape, mesh: Mesh) -> Any:
+    """PartitionSpec tree for a params (or ShapeDtypeStruct) pytree."""
+    axes = infer_axes(mesh)
+
+    def leaf(path, x):
+        return spec_for_param(_path_str(path), x.shape, mesh, axes)
+
+    return jax.tree_util.tree_map_with_path(leaf, params_shape)
+
+
+def shardings(params_shape, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params_shape, mesh))
+
+
+def explain_drops(clear: bool = True) -> List[str]:
+    out = list(_DROPPED)
+    if clear:
+        _DROPPED.clear()
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Activation policy.
+# ---------------------------------------------------------------------------
+
+def activation_policy(mesh: Mesh):
+    """ShardingPolicy callable: batch over dp axes, sequence over model
+    (Megatron sequence parallelism for the residual stream), with automatic
+    axis dropping for non-dividing dims (e.g. batch=1 long-context)."""
+    axes = infer_axes(mesh)
+    dp = axes.dp if len(axes.dp) > 1 else axes.dp[0]
+
+    def constrain(x, kind: str):
+        if x.ndim < 2:
+            return x
+        dims = [None] * x.ndim
+        dims[0] = _fit_axis(dp, x.shape[0], mesh)
+        if kind == "residual" and x.ndim >= 3:
+            dims[1] = _fit_axis(axes.model, x.shape[1], mesh)
+        elif kind == "heads" and x.ndim >= 4:
+            # (B, S, H, hd): keep attention head-parallel over the model
+            # axis.  Without this the partitioner loses the projection's
+            # output sharding at the reshape into the attention scan and
+            # replicates score tiles across all model shards (observed in
+            # the dry-run HLO — §Perf iteration 1).
+            dims[2] = _fit_axis(axes.model, x.shape[2], mesh)
+        elif kind == "latent" and x.ndim >= 3:
+            # MLA compressed cache (B, S, lora): lora over model.
+            dims[-1] = _fit_axis(axes.model, x.shape[-1], mesh)
+        spec = P(*dims)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    from repro.models.lm import ShardingPolicy
+
+    return ShardingPolicy(constrain)
+
+
+def batch_specs(batch_shape, mesh: Mesh) -> Any:
+    """Input batch: leading dim over the dp axes (dropped if indivisible)."""
+    axes = infer_axes(mesh)
+    dp = axes.dp if len(axes.dp) > 1 else axes.dp[0]
+
+    def leaf(x):
+        dims = [None] * len(x.shape)
+        if len(x.shape) >= 1:
+            dims[0] = _fit_axis(dp, x.shape[0], mesh)
+        return P(*dims)
+
+    return jax.tree.map(leaf, batch_shape)
+
+
+def cache_specs(caches_shape, cfg, mesh: Mesh, strategy: str = "auto") -> Any:
+    """Decode caches: layer dim unsharded, batch over dp, and
+      strategy='auto'/'heads': heads (or latent) over model, falling back
+                               to sequence when heads don't divide;
+      strategy='seq':          sequence over model (flash-decode layout —
+                               the §Perf knob that turns per-step head
+                               all-gathers into small partial-sum
+                               all-reduces)."""
+    axes = infer_axes(mesh)
+    dp = axes.dp if len(axes.dp) > 1 else axes.dp[0]
+
+    def leaf(x):
+        shape = x.shape
+        dims = [None] * len(shape)
+        if len(shape) >= 2:
+            dims[1] = _fit_axis(dp, shape[1], mesh)
+        if len(shape) == 5:          # (L, B, S, KV, hd) or ssm (L,B,h,p,n)
+            if strategy == "seq":
+                dims[2] = _fit_axis(axes.model, shape[2], mesh)
+                if dims[2] is None:
+                    dims[3] = _fit_axis(axes.model, shape[3], mesh)
+            else:
+                dims[3] = _fit_axis(axes.model, shape[3], mesh)
+                if dims[3] is None:
+                    dims[2] = _fit_axis(axes.model, shape[2], mesh)
+        elif len(shape) == 4:        # (L, B, S, lora/rope) or conv
+            if strategy == "seq":
+                dims[2] = _fit_axis(axes.model, shape[2], mesh)
+            else:
+                dims[3] = _fit_axis(axes.model, shape[3], mesh)
+        return P(*dims)
+
+    return jax.tree.map(leaf, caches_shape)

@@ -1,0 +1,1 @@
+from .ft import ElasticMesh, Heartbeat, PreemptionGuard, StragglerMonitor  # noqa: F401

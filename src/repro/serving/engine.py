@@ -1,0 +1,173 @@
+"""Continuous-batching serving engine over the paged cgRX cache.
+
+Request lifecycle: queued -> prefill (chunked full forward, KV written
+into freshly allocated pages) -> decode (one token per engine tick for
+every active sequence, pages gathered via the cgRX table) -> retired
+(pages freed = index deletions).  Admission keeps the decode batch full
+whenever the page pool allows — the standard continuous-batching loop,
+here driving the paper's updatable index as its page table.
+
+This engine targets functional correctness + index-churn realism on CPU
+with tiny configs (tests/examples); the dry-run serve path lowers the
+dense-cache decode step (launch/dryrun.py) for the production shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import lm
+
+from . import paged
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    prompt: np.ndarray          # (prompt_len,) int32
+    max_new_tokens: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+    state: str = "queued"       # queued | active | done
+
+
+@dataclasses.dataclass
+class EngineStats:
+    prefills: int = 0
+    decode_steps: int = 0
+    tokens_out: int = 0
+    index_inserts: int = 0
+    index_deletes: int = 0
+
+
+class Engine:
+    """Single-host reference engine (tiny configs)."""
+
+    def __init__(self, cfg: ArchConfig, params, max_batch: int = 4,
+                 max_seq: int = 256, page_size: int = 16,
+                 num_pages: int = 512):
+        assert cfg.family not in ("ssm", "hybrid"), \
+            "paged engine serves attention caches; SSM state is O(1)"
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.page_size = page_size
+        self.kv_heads = cfg.num_kv_heads
+        self.hd = cfg.hd
+        self.cache = paged.create(cfg.num_layers, num_pages, page_size,
+                                  cfg.num_kv_heads, cfg.hd)
+        self.queue: List[Request] = []
+        self.active: Dict[int, Request] = {}
+        self.stats = EngineStats()
+        self._next_seq = 0
+        # Dense per-seq fallback caches for attention math (gathered from
+        # pages each step); jitted once per shape.
+        self._decode = jax.jit(
+            lambda p, c, t, pos: lm.decode_step(cfg, p, c, t, pos))
+
+    # -- public API ---------------------------------------------------------
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int) -> int:
+        rid = self._next_seq
+        self._next_seq += 1
+        self.queue.append(Request(rid, prompt.astype(np.int32),
+                                  max_new_tokens))
+        return rid
+
+    def step(self) -> None:
+        """One engine tick: admit + prefill new requests, decode actives."""
+        self._admit()
+        self._decode_tick()
+        self._retire()
+
+    def run_to_completion(self, max_ticks: int = 10000) -> Dict[int, List[int]]:
+        t = 0
+        while (self.queue or self.active) and t < max_ticks:
+            self.step()
+            t += 1
+        return {r.req_id: r.generated for r in self._done}
+
+    # -- internals ------------------------------------------------------------
+
+    _done: List[Request] = []
+
+    def _admit(self) -> None:
+        while self.queue and len(self.active) < self.max_batch:
+            req = self.queue.pop(0)
+            self._prefill(req)
+            self.active[req.req_id] = req
+            req.state = "active"
+
+    def _pages_for(self, length: int) -> int:
+        return -(-length // self.page_size)
+
+    def _prefill(self, req: Request) -> None:
+        """Run the prompt through decode steps (reference implementation
+        favors simplicity; chunked prefill is the serve-path optimization
+        measured in the dry-run)."""
+        L = len(req.prompt)
+        # allocate pages for the whole prompt + generation budget
+        total = min(L + req.max_new_tokens, self.max_seq)
+        nblocks = self._pages_for(total)
+        self.cache, pages = paged.alloc_blocks(
+            self.cache, [req.req_id] * nblocks, list(range(nblocks)))
+        self.stats.index_inserts += nblocks
+        self.cache.seq_len[req.req_id] = 0
+        # per-request dense scratch cache for the model step
+        req._dense = lm.init_decode_caches(self.cfg, 1, self.max_seq)
+        for i, tok in enumerate(req.prompt):
+            logits, req._dense = self._decode(
+                self.params, req._dense,
+                jnp.asarray([[int(tok)]], jnp.int32), jnp.int32(i))
+            self._mirror_to_pages(req, i)
+        req._last_logits = logits
+        self.cache.seq_len[req.req_id] = L
+        self.stats.prefills += 1
+
+    def _mirror_to_pages(self, req: Request, pos: int) -> None:
+        """Mirror the dense step's new KV into the paged pool through the
+        cgRX table (the table lookup is the load-bearing part)."""
+        blk = pos // self.page_size
+        page, found = paged.lookup_pages(
+            self.cache, np.array([req.req_id]), np.array([blk]))
+        assert bool(np.asarray(found)[0]), "page table miss on own block"
+        if self.cache.k_pages.size and req._dense.kv is not None:
+            kc, vc = req._dense.kv          # (L,1,S,KV,hd)
+            slot = pos % self.page_size
+            self.cache = paged.write_token(
+                self.cache,
+                (kc[:, 0, pos][:, None], vc[:, 0, pos][:, None]),
+                jnp.asarray(np.asarray(page)), jnp.asarray([slot]))
+
+    def _decode_tick(self) -> None:
+        for req in list(self.active.values()):
+            pos = self.cache.seq_len[req.req_id]
+            if pos >= self.max_seq or len(req.generated) >= req.max_new_tokens:
+                req.state = "done"
+                continue
+            last = req._last_logits
+            tok = int(np.argmax(np.asarray(last[0, -1])))
+            logits, req._dense = self._decode(
+                self.params, req._dense,
+                jnp.asarray([[tok]], jnp.int32), jnp.int32(pos))
+            self._mirror_to_pages(req, pos)
+            req._last_logits = logits
+            req.generated.append(tok)
+            self.cache.seq_len[req.req_id] = pos + 1
+            self.stats.decode_steps += 1
+            self.stats.tokens_out += 1
+
+    def _retire(self) -> None:
+        for rid, req in list(self.active.items()):
+            if req.state == "done":
+                nb = self._pages_for(self.cache.seq_len.get(rid, 0))
+                self.cache = paged.free_sequence(self.cache, rid)
+                self.stats.index_deletes += nb
+                del self.active[rid]
+                self._done.append(req)

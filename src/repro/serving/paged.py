@@ -1,0 +1,148 @@
+"""Paged KV cache whose page table is a cgRX node-store index.
+
+Serving with continuous batching is an insert/delete-heavy key->value
+workload: logical cache blocks (seq_id, block_idx) map to physical pages
+that are allocated as sequences grow and freed when they retire — exactly
+the paper's Section 4 use case.  The page table here *is* the updatable
+cgRX variant (core/nodes.py):
+
+    key    = seq_id << BLOCK_BITS | block_idx        (uint32/uint64)
+    rowID  = physical page index
+
+  * page allocation  -> nodes.apply_batch(insert)    (reps/BVH untouched)
+  * sequence retire  -> nodes.apply_batch(delete)
+  * decode gather    -> batched successor lookup + post-filter
+
+so lookup throughput does not degrade as the serving mix churns — the
+property Fig. 15b demonstrates against the rebuild baseline.
+
+The KV pages themselves are a (L, num_pages, page, KV, hd) pool; decode
+gathers each sequence's pages by table lookup and attends over the
+gathered window.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import nodes
+from repro.core.keys import KeyArray
+
+BLOCK_BITS = 20   # up to 2^20 blocks per sequence
+MAX_SEQS = 1 << 11
+
+
+def block_key(seq_id, block_idx):
+    return (np.uint64(seq_id) << np.uint64(BLOCK_BITS)) | np.uint64(block_idx)
+
+
+@dataclasses.dataclass
+class PagedKVCache:
+    """Physical page pool + cgRX page table."""
+
+    k_pages: jnp.ndarray     # (L, P, page_size, KV, hd)
+    v_pages: jnp.ndarray
+    page_size: int
+    num_pages: int
+    table: nodes.NodeStore   # cgRX updatable index: block key -> page id
+    free_pages: List[int]
+    seq_len: Dict[int, int]  # live sequences -> current length (host)
+
+    @property
+    def num_layers(self) -> int:
+        return self.k_pages.shape[0]
+
+
+def create(num_layers: int, num_pages: int, page_size: int, kv_heads: int,
+           head_dim: int, dtype=jnp.bfloat16, node_cap: int = 32
+           ) -> PagedKVCache:
+    shape = (num_layers, num_pages, page_size, kv_heads, head_dim)
+    # Bootstrap table with a sentinel mapping so the structure is non-empty.
+    boot = KeyArray.from_u64(np.array([np.uint64((MAX_SEQS + 1) << BLOCK_BITS)]))
+    table = nodes.build(boot, jnp.array([-1], jnp.int32), node_cap=node_cap)
+    return PagedKVCache(
+        k_pages=jnp.zeros(shape, dtype), v_pages=jnp.zeros(shape, dtype),
+        page_size=page_size, num_pages=num_pages, table=table,
+        free_pages=list(range(num_pages)), seq_len={})
+
+
+# ---------------------------------------------------------------------------
+# Table maintenance (host orchestration + device index updates).
+# ---------------------------------------------------------------------------
+
+def alloc_blocks(cache: PagedKVCache, seq_ids: List[int],
+                 blocks: List[int]) -> Tuple[PagedKVCache, List[int]]:
+    """Allocate physical pages for (seq, block) pairs; insert into table."""
+    assert len(cache.free_pages) >= len(seq_ids), "page pool exhausted"
+    pages = [cache.free_pages.pop() for _ in seq_ids]
+    keys = KeyArray.from_u64(np.array(
+        [block_key(s, b) for s, b in zip(seq_ids, blocks)], dtype=np.uint64))
+    rows = jnp.asarray(np.array(pages, dtype=np.int32))
+    table = nodes.apply_batch(cache.table, keys, rows, None)
+    return dataclasses.replace(cache, table=table), pages
+
+
+def free_sequence(cache: PagedKVCache, seq_id: int) -> PagedKVCache:
+    """Retire a sequence: delete all its block keys, reclaim pages."""
+    length = cache.seq_len.pop(seq_id, 0)
+    nblocks = -(-length // cache.page_size) if length else 0
+    if nblocks == 0:
+        return cache
+    keys_np = np.array([block_key(seq_id, b) for b in range(nblocks)],
+                       dtype=np.uint64)
+    keys = KeyArray.from_u64(keys_np)
+    # Look up pages before deleting so we can reclaim them.
+    res = nodes.lookup(cache.table, keys)
+    pages = np.asarray(res.row_id)
+    found = np.asarray(res.found)
+    table = nodes.apply_batch(cache.table, None, None, keys)
+    free = cache.free_pages + [int(p) for p, f in zip(pages, found) if f]
+    return dataclasses.replace(cache, table=table, free_pages=free)
+
+
+def lookup_pages(cache: PagedKVCache, seq_ids: np.ndarray,
+                 block_idx: np.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched (seq, block) -> physical page via the cgRX index."""
+    keys_np = (seq_ids.astype(np.uint64) << np.uint64(BLOCK_BITS)) \
+        | block_idx.astype(np.uint64)
+    res = nodes.lookup(cache.table, KeyArray.from_u64(keys_np))
+    return res.row_id, res.found
+
+
+# ---------------------------------------------------------------------------
+# Device-side cache ops.
+# ---------------------------------------------------------------------------
+
+def write_token(cache: PagedKVCache, layer_kv: Tuple[jnp.ndarray, jnp.ndarray],
+                page_ids: jnp.ndarray, slot_in_page: jnp.ndarray
+                ) -> PagedKVCache:
+    """Write one token's K/V for all layers.
+
+    layer_kv: (k, v) each (L, B, KV, hd); page_ids/slot: (B,) int32.
+    """
+    k_new, v_new = layer_kv
+    L, B = k_new.shape[0], k_new.shape[1]
+    kp = cache.k_pages.at[:, page_ids, slot_in_page].set(
+        k_new.transpose(0, 1, 2, 3))
+    vp = cache.v_pages.at[:, page_ids, slot_in_page].set(v_new)
+    return dataclasses.replace(cache, k_pages=kp, v_pages=vp)
+
+
+def gather_window(cache: PagedKVCache, page_table_rows: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Gather each sequence's pages into a contiguous attention window.
+
+    page_table_rows: (B, max_blocks) physical page ids (-1 padded).
+    Returns k, v: (L, B, max_blocks * page_size, KV, hd); invalid pages
+    read page 0 and must be masked by cache length in the attention.
+    """
+    safe = jnp.maximum(page_table_rows, 0)                    # (B, nb)
+    k = cache.k_pages[:, safe]                                # (L,B,nb,ps,KV,hd)
+    v = cache.v_pages[:, safe]
+    L, B, nb, ps, KV, hd = k.shape
+    return (k.reshape(L, B, nb * ps, KV, hd),
+            v.reshape(L, B, nb * ps, KV, hd))

@@ -1,0 +1,92 @@
+"""Gradient compression for the cross-pod all-reduce.
+
+The pod axis of the production mesh is the lowest-bandwidth link (DCN /
+inter-pod ICI), and its only traffic is the once-per-step gradient
+all-reduce.  Two cooperating pieces:
+
+  * ``ef_quantize`` — int8 quantization with *error feedback*: the
+    quantization residual is carried to the next step, so the compressed
+    SGD provably tracks the uncompressed trajectory (Karimireddy et al.,
+    2019).  Pure pytree->pytree numerics, usable as a grad_transform.
+
+  * ``compressed_pod_mean`` — the bytes-on-the-wire path: a shard_map over
+    the pod axis that all-gathers int8 payloads + f32 scales instead of
+    f32 gradients (4x fewer bytes over the weak link), then dequantizes
+    and averages locally.  Model/data axes stay in auto mode so XLA keeps
+    managing intra-pod sharding.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+
+def _quant_leaf(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    g32 = g.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(g32)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant_leaf(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_quantize(grads: Any, error: Any) -> Tuple[Any, Any]:
+    """Error-feedback int8 round trip.  Returns (dequantized, new_error)."""
+
+    def leaf(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = _quant_leaf(corrected)
+        deq = _dequant_leaf(q, s)
+        return deq, corrected - deq
+
+    pairs = jax.tree.map(leaf, grads, error)
+    deq = jax.tree.map(lambda p: p[0], pairs,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree.map(lambda p: p[1], pairs,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    return deq, new_err
+
+
+def init_error(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_pod_mean(mesh: Mesh, grads: Any) -> Any:
+    """Mean-reduce a gradient pytree over the 'pod' axis with int8 payloads.
+
+    Call with per-pod gradients whose intra-pod (data/model) layout is
+    replicated at this boundary (the train driver reduces intra-pod
+    first).  Fully-manual shard_map: every axis is manual, the pytree is
+    unsharded per device, and the only collective is the int8 all-gather
+    over 'pod' — 4x fewer bytes over the weak inter-pod link than an f32
+    all-reduce.  (This jax build rejects partial-manual specs that don't
+    name every auto axis, so the partial-auto formulation is avoided.)
+    """
+
+    def body(g):
+        def leaf(x):
+            q, s = _quant_leaf(x)
+            qg = jax.lax.all_gather(q, "pod")          # (npod, ...)
+            sg = jax.lax.all_gather(s, "pod")
+            deq = qg.astype(jnp.float32) * sg.reshape(
+                (-1,) + (1,) * (qg.ndim - 1))
+            return jnp.mean(deq, axis=0).astype(x.dtype)
+
+        return jax.tree.map(leaf, g)
+
+    fn = jax.shard_map(body, mesh=mesh, in_specs=P(), out_specs=P(),
+                       check_vma=False)
+    return fn(grads)
+
+
+def estimate_allreduce_bytes(params: Any, compressed: bool) -> int:
+    """Napkin accounting used by EXPERIMENTS.md: bytes per pod-axis reduce."""
+    n = sum(int(jnp.size(p)) for p in jax.tree.leaves(params))
+    return n * (1 if compressed else 4)

@@ -1,0 +1,100 @@
+"""Train / serve step factories: jit-able, shardable, microbatched.
+
+``make_train_step`` builds the function the launcher jits with explicit
+in/out shardings:
+
+    (params, opt_state, batch) -> (params, opt_state, metrics)
+
+Microbatch gradient accumulation runs as a ``lax.scan`` over microbatch
+slices (f32 accumulators), keeping activation peaks at 1/num_microbatches
+of the global batch — the knob §Perf uses against memory-bound cells.
+
+``make_serve_step`` builds the decode step (one token against a cache of
+``seq_len``) used by the decode_* / long_* dry-run cells.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import lm
+from repro.models.lm import NO_POLICY, ShardingPolicy
+
+from . import optim
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: optim.AdamWConfig,
+                    num_microbatches: int = 1,
+                    policy: ShardingPolicy = NO_POLICY,
+                    grad_transform: Optional[Callable] = None) -> Callable:
+    """grad_transform: optional pytree->pytree hook (e.g. int8 compression
+    with error feedback) applied to the summed gradients before AdamW."""
+
+    def loss_for(params, batch):
+        loss, metrics = lm.loss_fn(cfg, params, batch, policy)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_for, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if num_microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def slice_mb(x, i):
+                mb = x.shape[0] // num_microbatches
+                return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+
+            def mb_step(acc, i):
+                mb_batch = jax.tree.map(lambda x: slice_mb(x, i), batch)
+                (l, _), g = grad_fn(params, mb_batch)
+                acc_g, acc_l = acc
+                return (jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), acc_g, g),
+                    acc_l + l), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), _ = jax.lax.scan(
+                mb_step, (zero, jnp.zeros((), jnp.float32)),
+                jnp.arange(num_microbatches))
+            grads = jax.tree.map(lambda g: g / num_microbatches, grads)
+            loss = loss_sum / num_microbatches
+            metrics = {"loss": loss}
+
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+
+        params, opt_state, opt_metrics = optim.apply_updates(
+            opt_cfg, params, opt_state, grads)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, policy: ShardingPolicy = NO_POLICY
+                      ) -> Callable:
+    """Prefill: full forward returning last-position logits (sampling seed)."""
+
+    def prefill_step(params, batch):
+        hidden = lm.forward(cfg, params, batch, policy)
+        last = hidden[:, -1:]
+        logits = lm.logits_chunked(cfg, params, last)
+        return logits.astype(jnp.float32)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, policy: ShardingPolicy = NO_POLICY
+                    ) -> Callable:
+    """Decode: (params, caches, token, pos) -> (logits, caches)."""
+
+    def serve_step(params, caches, token, pos):
+        return lm.decode_step(cfg, params, caches, token, pos, policy)
+
+    return serve_step

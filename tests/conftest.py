@@ -1,0 +1,9 @@
+import os
+import sys
+
+# Force the CPU platform: skips third-party PJRT plugin discovery (a
+# partially-installed neuron plugin in this image can corrupt jax internals)
+# and keeps tests seeing exactly ONE device (the dry-run sets its own flags).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

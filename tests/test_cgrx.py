@@ -1,0 +1,116 @@
+"""cgRX index invariants vs the sorted-array oracle (paper Alg. 1-2)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cgrx
+from repro.core.keys import KeyArray
+
+
+def mk(raw, is64=True):
+    raw = np.asarray(raw, dtype=np.uint64)
+    return KeyArray.from_u64(raw) if is64 else KeyArray.from_u32(
+        raw.astype(np.uint32))
+
+
+def build_random(n, bucket, method, is64=True, seed=0, space=1 << 48):
+    rng = np.random.default_rng(seed)
+    raw = np.unique(rng.integers(0, space, int(2.5 * n), dtype=np.uint64))[:n]
+    keys = mk(raw, is64)
+    idx = cgrx.build(keys, jnp.arange(len(raw), dtype=jnp.int32), bucket,
+                     method=method)
+    return raw, keys, idx
+
+
+@pytest.mark.parametrize("method", ["tree", "binary", "kernel"])
+@pytest.mark.parametrize("bucket", [2, 16, 64])
+def test_point_lookup_hits(method, bucket):
+    raw, keys, idx = build_random(3000, bucket, method)
+    rng = np.random.default_rng(1)
+    sel = rng.integers(0, len(raw), 700)
+    res = cgrx.lookup(idx, keys[sel])
+    assert bool(res.found.all())
+    assert (raw[np.asarray(res.row_id)] == raw[sel]).all()
+    # bucket id must contain the key's rank
+    order = np.argsort(raw, kind="stable")
+    rank = {int(raw[o]): i for i, o in enumerate(order)}
+    want_bucket = np.array([rank[int(raw[s])] // bucket for s in sel])
+    assert (np.asarray(res.bucket_id) == want_bucket).all()
+
+
+@pytest.mark.parametrize("method", ["tree", "binary"])
+def test_point_lookup_misses(method):
+    raw, keys, idx = build_random(2000, 16, method)
+    rng = np.random.default_rng(2)
+    probe = rng.integers(0, 1 << 48, 3000, dtype=np.uint64)
+    misses = np.setdiff1d(probe, raw)[:500]
+    res = cgrx.lookup(idx, mk(misses))
+    assert not bool(res.found.any())
+    assert (np.asarray(res.row_id) == -1).all()
+
+
+@given(st.integers(2, 64), st.integers(10, 400), st.integers(0, 2**32))
+@settings(max_examples=15, deadline=None)
+def test_rank_equals_numpy_searchsorted(bucket, n, seed):
+    rng = np.random.default_rng(seed)
+    raw = np.unique(rng.integers(0, 1 << 40, 3 * n, dtype=np.uint64))[:n]
+    keys = mk(raw)
+    idx = cgrx.build(keys, None, bucket)
+    q = rng.integers(0, 1 << 40, 64, dtype=np.uint64)
+    q[:8] = raw[rng.integers(0, len(raw), 8)]
+    sraw = np.sort(raw)
+    for side in ("left", "right"):
+        got = np.asarray(cgrx.rank(idx, mk(q), side=side))
+        assert (got == np.searchsorted(sraw, q, side=side)).all()
+
+
+def test_duplicates_first_bucket():
+    # duplicate keys spanning buckets: lookup returns the FIRST occurrence.
+    raw = np.array([3, 7, 7, 7, 7, 7, 9, 12, 15, 20], np.uint64)
+    rows = jnp.arange(10, dtype=jnp.int32)
+    idx = cgrx.build(mk(raw), rows, 2)
+    res = cgrx.lookup(idx, mk(np.array([7], np.uint64)))
+    assert bool(res.found.all())
+    assert int(res.position[0]) == 1  # rank_left of 7
+    # range [7,7] returns all five duplicates
+    rr = cgrx.range_lookup(idx, mk(np.array([7], np.uint64)),
+                           mk(np.array([7], np.uint64)), max_hits=8)
+    assert int(rr.count[0]) == 5
+
+
+@pytest.mark.parametrize("method", ["tree", "binary", "kernel"])
+def test_range_lookup_vs_oracle(method):
+    raw, keys, idx = build_random(2500, 16, method, seed=5)
+    sraw = np.sort(raw)
+    rng = np.random.default_rng(3)
+    starts = rng.integers(0, len(raw) - 130, 40)
+    widths = rng.integers(1, 128, 40)
+    lo = sraw[starts]
+    hi = sraw[np.minimum(starts + widths, len(raw) - 1)]
+    rr = cgrx.range_lookup(idx, mk(lo), mk(hi), max_hits=160)
+    order = np.argsort(raw, kind="stable")
+    for i in range(len(starts)):
+        span = order[starts[i]:min(starts[i] + widths[i], len(raw) - 1) + 1]
+        got = set(np.asarray(rr.row_ids[i]).tolist()) - {-1}
+        assert got == set(span.tolist())
+        assert int(rr.count[i]) == len(span)
+
+
+def test_empty_range():
+    raw, keys, idx = build_random(500, 8, "tree")
+    hi_key = np.array([raw.max() + 10], np.uint64)
+    rr = cgrx.range_lookup(idx, mk(hi_key), mk(hi_key + 5), max_hits=4)
+    assert int(rr.count[0]) == 0
+
+
+def test_footprint_decreases_with_bucket_size():
+    raw, _, idx4 = build_random(4000, 4, "tree")
+    _, _, idx64 = build_random(4000, 64, "tree")
+    f4 = cgrx.index_nbytes(idx4)
+    f64 = cgrx.index_nbytes(idx64)
+    assert f64["rep_bytes"] < f4["rep_bytes"]
+    assert f64["tree_bytes"] <= f4["tree_bytes"]
+    # key-rowID array is the same data either way
+    assert abs(f64["key_rowid_bytes"] - f4["key_rowid_bytes"]) \
+        <= 64 * 12  # padding slack

@@ -1,0 +1,67 @@
+"""HLO parsers: collective bytes and loop-trip correction."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import hlo_loops, hlo_stats
+
+
+def test_shape_bytes():
+    assert hlo_stats.shape_bytes("f32[8,128]{1,0}") == 8 * 128 * 4
+    assert hlo_stats.shape_bytes("(bf16[4], s32[2,2])") == 8 + 16
+    assert hlo_stats.shape_bytes("pred[]") == 1
+
+
+def test_collective_stats_synthetic():
+    hlo = """
+  %ar = f32[1024]{0} all-reduce(%x), replica_groups={}
+  %ag.1 = bf16[8,256]{1,0} all-gather(%y), dimensions={0}
+  %d = f32[2]{0} all-reduce-done(%s)
+"""
+    st = hlo_stats.collective_stats(hlo)
+    assert st["all-reduce"]["bytes"] == 4096
+    assert st["all-gather"]["bytes"] == 8 * 256 * 2
+
+
+def test_loop_correction_counts_scan_trips():
+    """A jitted scan of matmuls: corrected flops ≈ trips x body flops."""
+    M = 64
+    TRIPS = 7
+
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, None, length=TRIPS)
+        return y
+
+    comp = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((M, M), jnp.float32),
+        jax.ShapeDtypeStruct((M, M), jnp.float32)).compile()
+    res = hlo_loops.analyze(comp.as_text())
+    want = 2 * M * M * M * TRIPS
+    got = res["corrected_flops"]
+    assert 0.9 * want <= got <= 1.1 * want, (got, want)
+    # flat cost_analysis undercounts by the trip factor
+    ca = comp.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    flat = ca.get("flops", 0)
+    assert flat < got / (TRIPS - 1)
+
+
+def test_nested_loops_multiply():
+    def f(x, w):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ w, None
+            c2, _ = jax.lax.scan(inner, c, None, length=3)
+            return c2, None
+        y, _ = jax.lax.scan(outer, x, None, length=5)
+        return y
+
+    comp = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((32, 32), jnp.float32),
+        jax.ShapeDtypeStruct((32, 32), jnp.float32)).compile()
+    res = hlo_loops.analyze(comp.as_text())
+    want = 2 * 32 ** 3 * 15
+    assert 0.85 * want <= res["corrected_flops"] <= 1.15 * want

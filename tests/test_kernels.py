@@ -1,0 +1,107 @@
+"""Per-kernel interpret-mode sweeps: shapes x dtypes vs ref.py oracles."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.core.keys import KeyArray
+from repro.kernels import bucket_search, grid_probe, ops, ref, successor
+
+
+def pack(raw, is64):
+    raw = np.asarray(raw, dtype=np.uint64)
+    if is64:
+        return (jnp.asarray((raw & 0xFFFFFFFF).astype(np.uint32)),
+                jnp.asarray((raw >> np.uint64(32)).astype(np.uint32)))
+    return jnp.asarray(raw.astype(np.uint32)), None
+
+
+@pytest.mark.parametrize("is64", [False, True])
+@pytest.mark.parametrize("n_reps", [1, 7, 129, 1000, 5000])
+@pytest.mark.parametrize("side", ["left", "right"])
+def test_successor_kernel_sweep(is64, n_reps, side):
+    rng = np.random.default_rng(n_reps)
+    space = (1 << 45) if is64 else (1 << 30)
+    raw = np.sort(rng.integers(0, space, n_reps, dtype=np.uint64))
+    q = rng.integers(0, space, 517, dtype=np.uint64)
+    q[:20] = raw[rng.integers(0, n_reps, 20)]
+    q[20] = 0
+    rl, rh = pack(raw, is64)
+    ql, qh = pack(q, is64)
+    got = successor.successor_count(rl, rh, ql, qh, side)
+    want = ref.successor_count_ref(rl, rh, ql, qh, side)
+    assert_allclose(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("block_q,block_r", [(8, 8), (1, 1), (2, 16)])
+def test_successor_kernel_block_shapes(block_q, block_r):
+    rng = np.random.default_rng(0)
+    raw = np.sort(rng.integers(0, 1 << 40, 2000, dtype=np.uint64))
+    q = rng.integers(0, 1 << 40, 300, dtype=np.uint64)
+    rl, rh = pack(raw, True)
+    ql, qh = pack(q, True)
+    got = successor.successor_count(rl, rh, ql, qh, "left",
+                                    block_q=block_q, block_r=block_r)
+    want = ref.successor_count_ref(rl, rh, ql, qh, "left")
+    assert_allclose(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("is64", [False, True])
+@pytest.mark.parametrize("B", [1, 4, 16, 130, 700])
+@pytest.mark.parametrize("side", ["left", "right"])
+def test_bucket_rank_kernel_sweep(is64, B, side):
+    rng = np.random.default_rng(B)
+    space = (1 << 45) if is64 else (1 << 30)
+    Q = 201
+    rows = np.sort(rng.integers(0, space, (Q, B), dtype=np.uint64), axis=1)
+    q = rng.integers(0, space, Q, dtype=np.uint64)
+    if is64:
+        rl = jnp.asarray((rows & 0xFFFFFFFF).astype(np.uint32))
+        rh = jnp.asarray((rows >> np.uint64(32)).astype(np.uint32))
+    else:
+        rl, rh = jnp.asarray(rows.astype(np.uint32)), None
+    ql, qh = pack(q, is64)
+    got = bucket_search.bucket_rank_kernel(rl, rh, ql, qh, side)
+    want = ref.bucket_rank_ref(rl, rh, ql, qh, side)
+    assert_allclose(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("T", [1, 100, 4000])
+@pytest.mark.parametrize("Q", [1, 333])
+def test_lex3_kernel_sweep(T, Q):
+    rng = np.random.default_rng(T + Q)
+    tz = rng.integers(0, 1 << 18, T).astype(np.int32)
+    ty = rng.integers(0, 1 << 23, T).astype(np.int32)
+    tx = rng.integers(0, 1 << 23, T).astype(np.int32)
+    o = np.lexsort((tx, ty, tz))
+    tz, ty, tx = tz[o], ty[o], tx[o]
+    qz = rng.integers(0, 1 << 18, Q).astype(np.int32)
+    qy = rng.integers(0, 1 << 23, Q).astype(np.int32)
+    qx = rng.integers(0, 1 << 23, Q).astype(np.int32)
+    args = tuple(map(jnp.asarray, (tz, ty, tx, qz, qy, qx)))
+    got = grid_probe.lex3_count(*args)
+    want = ref.lex3_count_ref(*args)
+    assert_allclose(np.asarray(got), np.asarray(want))
+
+
+def test_two_level_equals_flat():
+    rng = np.random.default_rng(5)
+    raw = np.sort(rng.integers(0, 1 << 50, 40000, dtype=np.uint64))
+    q = rng.integers(0, 1 << 50, 400, dtype=np.uint64)
+    reps = KeyArray.from_u64(raw)
+    queries = KeyArray.from_u64(q)
+    for side in ("left", "right"):
+        flat = np.asarray(ops.successor_search_flat(reps, queries, side))
+        two = np.asarray(ops.successor_search(reps, queries, side))
+        assert (flat == two).all()
+        assert (flat == np.searchsorted(raw, q, side=side)).all()
+
+
+def test_edge_max_key():
+    # 0xFFFF.. keys must not be confused with padding.
+    raw = np.array([5, 10, 0xFFFFFFFFFFFFFFFF], dtype=np.uint64)
+    reps = KeyArray.from_u64(raw)
+    q = KeyArray.from_u64(np.array([0xFFFFFFFFFFFFFFFF], dtype=np.uint64))
+    got_l = np.asarray(ops.successor_search_flat(reps, q, "left"))
+    got_r = np.asarray(ops.successor_search_flat(reps, q, "right"))
+    assert got_l[0] == 2 and got_r[0] == 3

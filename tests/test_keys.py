@@ -1,0 +1,70 @@
+"""Key arithmetic + searchsorted: property tests against numpy uint64."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.keys import (KeyArray, key_eq, key_le, key_lt, searchsorted,
+                             sort_with_payload, unique_mask)
+
+
+def mk(raw, is64):
+    raw = np.asarray(raw, dtype=np.uint64)
+    return KeyArray.from_u64(raw) if is64 else KeyArray.from_u32(
+        raw.astype(np.uint32))
+
+
+@given(st.lists(st.integers(0, 2**64 - 1), min_size=1, max_size=50),
+       st.lists(st.integers(0, 2**64 - 1), min_size=1, max_size=50))
+@settings(max_examples=40, deadline=None)
+def test_compare_ops_match_numpy_u64(a, b):
+    n = min(len(a), len(b))
+    a, b = np.array(a[:n], np.uint64), np.array(b[:n], np.uint64)
+    ka, kb = mk(a, True), mk(b, True)
+    assert (np.asarray(key_lt(ka, kb)) == (a < b)).all()
+    assert (np.asarray(key_le(ka, kb)) == (a <= b)).all()
+    assert (np.asarray(key_eq(ka, kb)) == (a == b)).all()
+
+
+@given(st.lists(st.integers(0, 2**64 - 1), min_size=1, max_size=80),
+       st.lists(st.integers(0, 2**64 - 1), min_size=1, max_size=40),
+       st.sampled_from(["left", "right"]))
+@settings(max_examples=40, deadline=None)
+def test_searchsorted_matches_numpy(keys, queries, side):
+    raw = np.sort(np.array(keys, np.uint64))
+    q = np.array(queries, np.uint64)
+    got = np.asarray(searchsorted(mk(raw, True), mk(q, True), side=side))
+    want = np.searchsorted(raw, q, side=side)
+    assert (got == want).all()
+
+
+@given(st.lists(st.integers(0, 2**32 - 1), min_size=1, max_size=80),
+       st.sampled_from(["left", "right"]))
+@settings(max_examples=30, deadline=None)
+def test_searchsorted_u32(keys, side):
+    raw = np.sort(np.array(keys, np.uint64) & np.uint64(0xFFFFFFFF))
+    q = np.concatenate([raw[:5], raw[-3:], np.array([0, 2**32 - 1], np.uint64)])
+    got = np.asarray(searchsorted(mk(raw, False), mk(q, False), side=side))
+    assert (got == np.searchsorted(raw, q, side=side)).all()
+
+
+def test_sort_with_payload_stable():
+    rng = np.random.default_rng(0)
+    raw = rng.integers(0, 1 << 50, 500, dtype=np.uint64)
+    payload = jnp.arange(500, dtype=jnp.int32)
+    sk, sp = sort_with_payload(mk(raw, True), payload)
+    order = np.argsort(raw, kind="stable")
+    assert (sk.to_numpy() == raw[order]).all()
+    assert (np.asarray(sp) == order).all()
+
+
+def test_unique_mask():
+    raw = np.array([1, 1, 2, 5, 5, 5, 9], np.uint64)
+    m = np.asarray(unique_mask(mk(raw, True)))
+    assert (m == [True, False, True, True, False, False, True]).all()
+
+
+def test_roundtrip_u64():
+    rng = np.random.default_rng(1)
+    raw = rng.integers(0, 2**63, 100, dtype=np.uint64)
+    assert (mk(raw, True).to_numpy() == raw).all()

@@ -1,0 +1,64 @@
+"""Bucketed (sort-based) MoE dispatch == dense masked reference."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models import moe as moe_mod
+
+
+def dense_reference(p, x, num_experts, top_k):
+    B, S, d = x.shape
+    xt = x.reshape(-1, d)
+    logits = jnp.einsum("td,de->te", xt, p["router"]["w"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(probs, top_k)
+    gates = gates / gates.sum(-1, keepdims=True)
+    out = jnp.zeros_like(xt)
+    for e in range(num_experts):
+        h = jax.nn.silu(xt @ p["wi_gate"][e]) * (xt @ p["wi_up"][e])
+        ye = h @ p["wo"][e]
+        for k in range(top_k):
+            w = jnp.where(experts[:, k] == e, gates[:, k], 0.0)
+            out = out + ye * w[:, None]
+    if "shared" in p:
+        sh = p["shared"]
+        g = jax.nn.silu(xt @ sh["wi_gate"]) * (xt @ sh["wi_up"])
+        out = out + g @ sh["wo"]
+    return out.reshape(B, S, d)
+
+
+def test_dispatch_matches_dense():
+    key = jax.random.PRNGKey(0)
+    E, k, d, f = 8, 2, 32, 48
+    p = moe_mod.init_moe(key, d, f, E, num_shared=1)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, d), jnp.float32)
+    got = moe_mod.moe_block(p, x, num_experts=E, top_k=k,
+                            capacity_factor=8.0,  # no drops
+                            dtype=jnp.float32)
+    want = dense_reference(p, x, E, k)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_capacity_drops_degrade_gracefully():
+    key = jax.random.PRNGKey(2)
+    E, k, d, f = 4, 2, 16, 16
+    p = moe_mod.init_moe(key, d, f, E)
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 64, d), jnp.float32)
+    tight = moe_mod.moe_block(p, x, num_experts=E, top_k=k,
+                              capacity_factor=0.5, dtype=jnp.float32)
+    loose = moe_mod.moe_block(p, x, num_experts=E, top_k=k,
+                              capacity_factor=8.0, dtype=jnp.float32)
+    assert np.isfinite(np.asarray(tight)).all()
+    # tight capacity must differ (tokens dropped) but stay bounded
+    assert float(jnp.max(jnp.abs(tight))) <= float(jnp.max(jnp.abs(loose))) * 4
+
+
+def test_aux_loss_balanced_router():
+    key = jax.random.PRNGKey(4)
+    E, d = 8, 16
+    p = moe_mod.init_moe(key, d, 16, E)
+    x = jax.random.normal(jax.random.PRNGKey(5), (4, 64, d), jnp.float32)
+    aux = moe_mod.aux_load_balance_loss(p, x, E, 2)
+    # perfectly balanced -> 1.0; random init should be near 1
+    assert 0.8 < float(aux) < 1.6

@@ -1,0 +1,135 @@
+"""Updatable node-chain variant (paper Sec. 4) vs a dict oracle."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import nodes
+from repro.core.keys import KeyArray
+
+
+def mk(raw, is64=True):
+    raw = np.asarray(raw, dtype=np.uint64)
+    return KeyArray.from_u64(raw) if is64 else KeyArray.from_u32(
+        raw.astype(np.uint32))
+
+
+def test_bulk_load_lookup():
+    rng = np.random.default_rng(0)
+    raw = np.unique(rng.integers(0, 1 << 44, 8000, dtype=np.uint64))[:6000]
+    store = nodes.build(mk(raw), jnp.arange(len(raw), dtype=jnp.int32), 32)
+    res = nodes.lookup(store, mk(raw))
+    assert bool(res.found.all())
+    assert (np.asarray(res.row_id) == np.arange(len(raw))).all()
+
+
+@pytest.mark.parametrize("is64", [False, True])
+def test_update_waves_match_oracle(is64):
+    rng = np.random.default_rng(1)
+    space = 1 << 44 if is64 else 1 << 30
+    raw = np.unique(rng.integers(0, space, 6000, dtype=np.uint64))[:4000]
+    store = nodes.build(mk(raw, is64), jnp.arange(len(raw), dtype=jnp.int32),
+                        node_cap=32)
+    live = {int(k): i for i, k in enumerate(raw)}
+    nxt = len(raw)
+    for wave in range(4):
+        live_arr = np.array(sorted(live.keys()), dtype=np.uint64)
+        ins = np.setdiff1d(
+            np.unique(rng.integers(0, space, 3000, dtype=np.uint64)),
+            live_arr)[:1000]
+        dels = live_arr[rng.choice(len(live_arr), 700, replace=False)]
+        ins_rows = np.arange(nxt, nxt + len(ins), dtype=np.int32)
+        nxt += len(ins)
+        store = nodes.apply_batch(store, mk(ins, is64), jnp.asarray(ins_rows),
+                                  mk(dels, is64))
+        for k, r in zip(ins, ins_rows):
+            live[int(k)] = int(r)
+        for k in dels:
+            live.pop(int(k))
+        la = np.array(list(live.keys()), dtype=np.uint64)
+        lr = np.array([live[int(k)] for k in la])
+        res = nodes.lookup(store, mk(la, is64))
+        assert bool(res.found.all()), f"wave {wave}"
+        assert (np.asarray(res.row_id) == lr).all()
+        resd = nodes.lookup(store, mk(dels, is64))
+        assert not bool(resd.found.any())
+
+
+def test_insert_beyond_max_rep_goes_to_last_bucket():
+    raw = np.arange(0, 1000, 2, dtype=np.uint64)
+    store = nodes.build(mk(raw), None, node_cap=16)
+    big = np.array([5000, 6000], dtype=np.uint64)
+    store = nodes.apply_batch(store, mk(big),
+                              jnp.asarray([7000, 7001], dtype=jnp.int32), None)
+    res = nodes.lookup(store, mk(big))
+    assert bool(res.found.all())
+    assert np.asarray(res.row_id).tolist() == [7000, 7001]
+
+
+def test_insert_delete_cancellation():
+    raw = np.arange(0, 512, dtype=np.uint64)
+    store = nodes.build(mk(raw), None, node_cap=16)
+    k = np.array([600], dtype=np.uint64)
+    store = nodes.apply_batch(store, mk(k), jnp.asarray([999], jnp.int32),
+                              mk(k))  # insert AND delete -> cancelled
+    res = nodes.lookup(store, mk(k))
+    assert not bool(res.found.any())
+
+
+def test_chain_growth_and_splits():
+    raw = np.arange(0, 256, dtype=np.uint64) * 1000
+    store = nodes.build(mk(raw), None, node_cap=8)
+    assert store.max_chain == 1
+    # insert a burst targeting one bucket -> chain must grow
+    burst = np.arange(1, 60, dtype=np.uint64)  # all in bucket 0
+    store = nodes.apply_batch(store, mk(burst),
+                              jnp.arange(1000, 1000 + len(burst), dtype=jnp.int32),
+                              None)
+    assert store.max_chain > 1
+    res = nodes.lookup(store, mk(burst))
+    assert bool(res.found.all())
+    # reps were never touched
+    assert store.num_buckets == len(store.reps.lo)
+
+
+def test_rebuild_equivalence():
+    rng = np.random.default_rng(3)
+    raw = np.unique(rng.integers(0, 1 << 40, 3000, dtype=np.uint64))[:2000]
+    store = nodes.build(mk(raw), None, node_cap=16)
+    ins = np.setdiff1d(np.unique(rng.integers(0, 1 << 40, 2000,
+                                              dtype=np.uint64)), raw)[:500]
+    store = nodes.apply_batch(store, mk(ins),
+                              jnp.arange(9000, 9000 + len(ins), dtype=jnp.int32),
+                              None)
+    rebuilt = nodes.rebuild(store)
+    assert rebuilt.max_chain == 1
+    la = np.concatenate([raw, ins])
+    r1 = nodes.lookup(store, mk(la))
+    r2 = nodes.lookup(rebuilt, mk(la))
+    assert bool(r1.found.all()) and bool(r2.found.all())
+    assert (np.asarray(r1.row_id) == np.asarray(r2.row_id)).all()
+
+
+@given(st.integers(0, 2**31), st.integers(8, 64))
+@settings(max_examples=8, deadline=None)
+def test_property_random_update_sequence(seed, node_cap):
+    rng = np.random.default_rng(seed)
+    raw = np.unique(rng.integers(0, 1 << 32, 800, dtype=np.uint64))[:500]
+    store = nodes.build(mk(raw), None, node_cap=int(node_cap))
+    live = {int(k): i for i, k in enumerate(raw)}
+    la = np.array(sorted(live), dtype=np.uint64)
+    ins = np.setdiff1d(np.unique(rng.integers(0, 1 << 32, 400,
+                                              dtype=np.uint64)), la)[:150]
+    dels = la[rng.choice(len(la), 100, replace=False)]
+    store = nodes.apply_batch(
+        store, mk(ins), jnp.arange(10_000, 10_000 + len(ins), dtype=jnp.int32),
+        mk(dels))
+    for k, r in zip(ins, range(10_000, 10_000 + len(ins))):
+        live[int(k)] = r
+    for k in dels:
+        live.pop(int(k))
+    la = np.array(list(live), dtype=np.uint64)
+    res = nodes.lookup(store, mk(la))
+    assert bool(res.found.all())
+    assert (np.asarray(res.row_id)
+            == np.array([live[int(k)] for k in la])).all()

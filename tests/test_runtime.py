@@ -1,0 +1,66 @@
+"""Fault-tolerance runtime: heartbeat, straggler, preemption, elastic mesh."""
+import os
+import time
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.runtime import ElasticMesh, Heartbeat, PreemptionGuard, StragglerMonitor
+
+
+def test_heartbeat_alive_and_stale(tmp_path):
+    p = str(tmp_path / "hb.json")
+    hb = Heartbeat(p, interval=0.05).start()
+    hb.update(7)
+    time.sleep(0.15)
+    assert Heartbeat.is_alive(p, stale_after=1.0)
+    hb.stop()
+    assert not Heartbeat.is_alive(p, stale_after=0.0)  # instantly stale
+    assert not Heartbeat.is_alive(str(tmp_path / "missing.json"), 10)
+
+
+def test_straggler_detection_and_recovery():
+    events = []
+    mon = StragglerMonitor(threshold=3.0,
+                           on_straggler=lambda s, d, e: events.append(s))
+    for i in range(10):
+        mon.record(i, 0.1)
+    assert mon.record(10, 0.9)          # 9x the EMA -> straggler
+    assert events == [10]
+    # straggler does not poison the EMA
+    assert abs(mon.ema - 0.1) < 1e-6
+    assert not mon.record(11, 0.11)
+
+
+def test_preemption_guard_checkpoint_path(tmp_path):
+    from repro.checkpoint import CheckpointManager
+    mgr = CheckpointManager(str(tmp_path / "ck"))
+    state = {"w": jnp.ones((4,))}
+    with PreemptionGuard() as guard:
+        for step in range(100):
+            state = {"w": state["w"] + 1}
+            if step == 5:
+                guard.trigger()          # simulated SIGTERM
+            if guard.preempted():
+                mgr.save(step, state, {"data_step": step})
+                break
+    assert mgr.latest_step() == 5
+    restored, meta = mgr.restore(5, state)
+    assert meta["data_step"] == 5
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.full((4,), 7.0))
+
+
+def test_elastic_mesh_shrinks_data_axis():
+    em = ElasticMesh(model_axis=16)
+    assert em.mesh_for(256) == (16, 16)
+    assert em.mesh_for(128) == (8, 16)     # lost half the pod
+    assert em.mesh_for(96) == (4, 16)      # odd counts -> pow2 data
+    em2 = ElasticMesh(model_axis=16, pod_axis=2)
+    assert em2.mesh_for(512) == (2, 16, 16)
+
+
+def test_elastic_mesh_model_fallback():
+    em = ElasticMesh(model_axis=16)
+    # so few devices the model axis must shrink too
+    assert em.mesh_for(8) == (1, 8)

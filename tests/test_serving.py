@@ -1,0 +1,90 @@
+"""Serving engine + cgRX paged KV cache: index churn under real lifecycle."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.serving import paged
+from repro.serving.engine import Engine
+
+
+def test_page_table_alloc_lookup_free():
+    cache = paged.create(num_layers=2, num_pages=64, page_size=8,
+                         kv_heads=2, head_dim=16)
+    # allocate blocks for 3 sequences
+    cache, p0 = paged.alloc_blocks(cache, [1, 1, 1], [0, 1, 2])
+    cache, p1 = paged.alloc_blocks(cache, [2, 2], [0, 1])
+    assert len(set(p0) | set(p1)) == 5      # distinct physical pages
+    rows, found = paged.lookup_pages(cache, np.array([1, 1, 2, 3]),
+                                     np.array([0, 2, 1, 0]))
+    found = np.asarray(found)
+    rows = np.asarray(rows)
+    assert found.tolist() == [True, True, True, False]
+    assert rows[0] == p0[0] and rows[1] == p0[2] and rows[2] == p1[1]
+    # free sequence 1 -> its pages return to the pool, lookups miss
+    cache.seq_len[1] = 24
+    cache = paged.free_sequence(cache, 1)
+    rows, found = paged.lookup_pages(cache, np.array([1, 2]),
+                                     np.array([0, 0]))
+    assert np.asarray(found).tolist() == [False, True]
+    assert len(cache.free_pages) == 64 - 2
+
+
+def test_page_table_survives_churn():
+    """Many alloc/free cycles: the successor structure never rebuilds and
+    lookups stay correct (the paper's Fig. 15 property)."""
+    cache = paged.create(num_layers=1, num_pages=128, page_size=4,
+                         kv_heads=1, head_dim=8)
+    rng = np.random.default_rng(0)
+    live = {}
+    next_seq = 0
+    for _round in range(6):
+        # allocate a few sequences
+        for _ in range(4):
+            sid = next_seq
+            next_seq += 1
+            nb = int(rng.integers(1, 5))
+            cache, pages = paged.alloc_blocks(cache, [sid] * nb,
+                                              list(range(nb)))
+            cache.seq_len[sid] = nb * cache.page_size
+            live[sid] = (nb, pages)
+        # free a random one
+        victim = rng.choice(list(live.keys()))
+        cache = paged.free_sequence(cache, int(victim))
+        del live[victim]
+        # verify all live mappings
+        for sid, (nb, pages) in live.items():
+            rows, found = paged.lookup_pages(
+                cache, np.full(nb, sid), np.arange(nb))
+            assert np.asarray(found).all()
+            assert np.asarray(rows).tolist() == pages
+    # reps/BVH untouched: num_buckets fixed since build
+    assert cache.table.num_buckets == 1
+
+
+def test_engine_end_to_end():
+    cfg = get_config("yi-6b").tiny()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, max_batch=2, max_seq=48, page_size=8,
+                 num_pages=64)
+    rng = np.random.default_rng(1)
+    for _ in range(3):
+        eng.submit(rng.integers(0, cfg.vocab_size, 6), max_new_tokens=5)
+    results = eng.run_to_completion()
+    assert len(results) == 3
+    assert all(len(toks) == 5 for toks in results.values())
+    s = eng.stats
+    assert s.index_inserts > 0 and s.index_deletes > 0
+    # all pages returned to the pool after retirement
+    assert len(eng.cache.free_pages) == 64
+
+
+def test_gather_window_shapes():
+    cache = paged.create(num_layers=3, num_pages=16, page_size=4,
+                         kv_heads=2, head_dim=8)
+    rows = jnp.asarray(np.array([[0, 1, -1], [2, 3, 4]], np.int32))
+    k, v = paged.gather_window(cache, rows)
+    assert k.shape == (3, 2, 12, 2, 8)
+    assert v.shape == k.shape

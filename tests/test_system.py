@@ -1,0 +1,72 @@
+"""End-to-end system behaviour: the public API flows a user would run."""
+import os
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import cgrx, footprint, nodes
+from repro.core.keys import KeyArray
+from repro.data import keygen
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def test_paper_workload_end_to_end():
+    """The paper's core loop: generate a uniformity-mixed key set, build
+    cgRX, run point + range lookups, apply update waves, compare footprint
+    against the fine-granular predecessor."""
+    keys, rows, raw = keygen.keyset(20000, uniformity=0.5, bits=32, seed=0)
+    idx = cgrx.build(keys, jnp.asarray(rows), bucket_size=16)
+
+    q_raw = keygen.uniform_lookups(raw, 4096, seed=1)
+    res = cgrx.lookup(idx, keygen.as_keys(q_raw, 32))
+    assert bool(res.found.all())
+    assert (raw[np.asarray(res.row_id)] == q_raw).all()
+
+    z_raw = keygen.zipf_lookups(raw, 2048, theta=1.5, seed=2)
+    rz = cgrx.lookup(idx, keygen.as_keys(z_raw, 32))
+    assert bool(rz.found.all())
+
+    m_raw = keygen.hit_ratio_lookups(raw, 2048, 0.5, out_of_range=False,
+                                     bits=32, seed=3)
+    rm = cgrx.lookup(idx, keygen.as_keys(m_raw, 32))
+    assert (np.asarray(rm.found) == np.isin(m_raw, raw)).all()
+
+    sraw = np.sort(raw)
+    lo, hi = keygen.range_lookups(sraw, 64, 32, seed=4)
+    rr = cgrx.range_lookup(idx, keygen.as_keys(lo, 32),
+                           keygen.as_keys(hi, 32), max_hits=64)
+    assert (np.asarray(rr.count) == 32).all()
+
+    store = nodes.build(keys, jnp.asarray(rows), node_cap=32)
+    ins = np.setdiff1d(
+        np.arange(raw.max() + 1, raw.max() + 2001, dtype=np.uint64), raw)
+    store = nodes.apply_batch(
+        store, keygen.as_keys(ins, 32),
+        jnp.arange(len(raw), len(raw) + len(ins), dtype=jnp.int32), None)
+    r2 = nodes.lookup(store, keygen.as_keys(ins, 32))
+    assert bool(r2.found.all())
+
+    from repro.core import baselines as bl
+    rx = bl.rx_build(keys, jnp.asarray(rows))
+    f_rx = footprint.footprint(rx)["total_bytes"]
+    f_cg = footprint.footprint(idx, paper_model=True)["total_bytes"]
+    assert f_cg < 0.5 * f_rx
+
+
+def test_quickstart_example_runs():
+    from examples import quickstart
+    quickstart.main(n=4000, lookups=1024)
+
+
+def test_keygen_distributions():
+    keys, rows, raw = keygen.keyset(5000, uniformity=0.0, bits=32)
+    assert raw.max() == len(raw) - 1            # fully dense
+    keys, rows, raw = keygen.keyset(5000, uniformity=1.0, bits=64, seed=1)
+    assert raw.max() > 1 << 40                   # sparse draws
+    z = keygen.zipf_lookups(raw, 5000, theta=3.0, seed=2)
+    # extreme skew: a few keys dominate
+    _, counts = np.unique(z, return_counts=True)
+    assert counts.max() > 500
