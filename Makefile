@@ -1,0 +1,16 @@
+# Tier-1 verification entry points (same commands CI runs).
+PY ?= python
+export JAX_PLATFORMS ?= cpu
+
+.PHONY: check test bench-smoke quickstart
+
+check: test bench-smoke
+
+test:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+bench-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.bench_batched_lookup --tiny
+
+quickstart:
+	PYTHONPATH=src $(PY) examples/quickstart.py

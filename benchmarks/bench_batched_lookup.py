@@ -1,0 +1,107 @@
+"""Batched rank engine vs per-query dispatch: throughput vs batch size.
+
+For each batch size B the same mixed workload (3/4 point lookups, 1/8
+ranges = 1/4 of lanes) is served two ways:
+
+    unbatched   one jitted device call per request (the seed's serving
+                shape: B dispatches per tick);
+    batched     one ``RankEngine.execute`` call for the whole planned
+                lane batch (one dispatch per tick).
+
+Output rows: ``batched_lookup/<backend>/b<B>,<us>,<qps + speedup>``.
+The paper-relevant number is the speedup at production batch sizes
+(acceptance floor: >= 2x at B=256 on the CPU backend) — the per-call
+overhead the batching amortizes is exactly what RT-core batching buys
+RTCUDB on GPU.
+
+    PYTHONPATH=src python -m benchmarks.bench_batched_lookup [--tiny]
+
+``--tiny`` is the CI smoke shape (small key set, two batch sizes, jnp
+backends only — interpret-mode kernels are too slow for smoke runs).
+"""
+import os
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import cgrx
+from repro.data import keygen
+from repro.query import QueryBatch, RankEngine
+
+
+def _workload(raw, batch, seed):
+    """Mixed batch: 3/4 point keys (hits), 1/8 ranges (2 lanes each)."""
+    rng = np.random.default_rng(seed)
+    n_point = (batch * 3) // 4
+    n_range = (batch - n_point) // 2
+    pts = keygen.as_keys(rng.choice(raw, n_point), 64)
+    sraw = np.sort(raw)
+    starts = rng.integers(0, len(sraw) - 64, n_range)
+    lo = keygen.as_keys(sraw[starts], 64)
+    hi = keygen.as_keys(sraw[starts + rng.integers(1, 64, n_range)], 64)
+    return pts, lo, hi, n_point, n_range
+
+
+def main(args) -> None:
+    tiny = getattr(args, "tiny", False)
+    n = min(args.n, 1 << 14) if tiny else args.n
+    batches = (64, 256) if tiny else (16, 64, 256, 1024)
+    backends = ("tree", "binary") if tiny else ("tree", "binary", "kernel")
+    max_hits = 64
+
+    rng = np.random.default_rng(0)
+    raw = np.unique(rng.integers(0, 1 << 44, int(2.5 * n),
+                                 dtype=np.uint64))[:n]
+    keys = keygen.as_keys(raw, 64)
+    rows = jnp.arange(len(raw), dtype=jnp.int32)
+
+    for backend in backends:
+        idx = cgrx.build(keys, rows, 16, method=backend)
+        engine = RankEngine(idx)
+        # Interpret-mode kernels pay a large python-per-grid-step cost in
+        # the unbatched loop; keep that suite at serving-scale batches.
+        bs = tuple(b for b in batches if b <= 256) \
+            if backend == "kernel" else batches
+        for batch in bs:
+            pts, lo, hi, n_point, n_range = _workload(raw, batch, seed=batch)
+            plan = (QueryBatch().add_points(pts).add_ranges(lo, hi)
+                    .plan(max_hits=max_hits))
+
+            # Unbatched: one device call per request (jitted per shape).
+            one_pt = jax.jit(lambda q: cgrx.lookup(idx, q).row_id)
+            one_rg = jax.jit(
+                lambda a, b: cgrx.range_lookup(idx, a, b, max_hits).count)
+
+            def unbatched():
+                outs = [one_pt(pts[i:i + 1]) for i in range(n_point)]
+                outs += [one_rg(lo[i:i + 1], hi[i:i + 1])
+                         for i in range(n_range)]
+                return outs
+
+            def batched():
+                res = engine.execute(plan)
+                return res.points.row_id, res.ranges.count
+
+            # Lighter timing for the interpret-mode kernel backend.
+            iters = 1 if backend == "kernel" else 3
+            sec_u = timeit(unbatched, iters=iters)
+            sec_b = timeit(batched, iters=iters)
+            q = n_point + n_range
+            emit(f"batched_lookup/{backend}/b{batch}/unbatched", sec_u,
+                 f"{q / sec_u:,.0f}qps")
+            emit(f"batched_lookup/{backend}/b{batch}/batched", sec_b,
+                 f"{q / sec_b:,.0f}qps speedup={sec_u / sec_b:.1f}x")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke shape (small n, jnp backends only)")
+    ap.add_argument("--n", type=int, default=1 << 18)
+    args = ap.parse_args()
+    main(args)

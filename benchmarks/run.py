@@ -24,6 +24,7 @@ SUITES = [
     ("fig14_skew", "benchmarks.bench_skew"),
     ("fig15_updates", "benchmarks.bench_updates"),
     ("kernels", "benchmarks.bench_kernels"),
+    ("batched_lookup", "benchmarks.bench_batched_lookup"),
 ]
 
 

@@ -40,7 +40,21 @@ def main(n: int = 100_000, lookups: int = 10_000) -> None:
                            keygen.as_keys(hi, 32), max_hits=64)
     print(f"range lookups: counts={np.asarray(rr.count).tolist()}")
 
-    # 5. Updates via the node-chain variant (Sec. 4): the search structure
+    # 5. Batched serving: plan mixed point/range traffic into padded
+    #    lanes and serve the whole batch in ONE device call (repro.query).
+    from repro.query import QueryBatch, RankEngine
+
+    engine = RankEngine(idx)                       # backend = build method
+    plan = (QueryBatch()
+            .add_points(keygen.as_keys(q_raw[:256], 32))
+            .add_ranges(keygen.as_keys(lo, 32), keygen.as_keys(hi, 32))
+            .plan(max_hits=64))
+    batch_res = engine.execute(plan)
+    assert bool(batch_res.points.found.all())
+    print(f"batched engine: {plan.n_point} points + {plan.n_range} ranges "
+          f"in one call ({plan.lanes} lanes, backend '{engine.backend_name}')")
+
+    # 6. Updates via the node-chain variant (Sec. 4): the search structure
     #    is immutable; buckets grow bucket-locally.
     store = nodes.build(keys, jnp.asarray(rows), node_cap=32)
     ins = np.setdiff1d(np.arange(raw.max() + 1, raw.max() + 1001,

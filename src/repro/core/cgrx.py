@@ -13,12 +13,17 @@ structure:
 
 computed hierarchically as  (rep successor search) * B + (in-bucket count),
 which maps 1:1 onto the paper's  (BVH traversal) + (bucket search)  split.
-The rep search runs through one of three backends:
+The rep search runs through one of three backends, registered in
+``repro.query.backends`` (``index.method`` names the one to use):
 
     'tree'   — lane-width fanout tree (fanout.py), the BVH analogue;
     'binary' — plain binary search over reps (the B+/SA-style control);
     'kernel' — Pallas successor/bucket kernels (kernels/ops.py), the
                hardware path (interpret=True on CPU).
+
+This module is the single-call path; batched multi-query serving (one
+device call for a whole tick of mixed point/range lookups) lives in
+``repro.query`` (QueryBatch planner + RankEngine + fused Pallas kernel).
 
 Range lookup [l, u]  =  rank_left(l) .. rank_right(u)  on the flat sorted
 key-rowID array — one successor search + a sequential scan, exactly the
@@ -27,7 +32,6 @@ paper's Sec. 3.2 procedure (and the reason cgRX beats RX by ~2x on ranges).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import NamedTuple, Optional
 
 import jax
@@ -35,14 +39,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import fanout
-from .bucketing import BucketedSet, build_buckets, rep_duplicate_mask
-from .keys import (
-    KeyArray,
-    key_eq,
-    key_le,
-    key_lt,
-    searchsorted,
-)
+from .bucketing import BucketedSet, build_buckets
+from .keys import KeyArray, key_eq
 
 MISS = jnp.int32(-1)
 
@@ -87,52 +85,47 @@ def build(keys: KeyArray, row_ids: Optional[jnp.ndarray], bucket_size: int,
 
 # ---------------------------------------------------------------------------
 # Rep successor search (the "ray" / BVH-traversal stage).
+#
+# The actual implementations live in the Backend registry
+# (repro.query.backends): 'tree' / 'binary' / 'kernel'.  ``index.method``
+# names the registered backend; these wrappers keep the historical
+# cgrx-level API (benchmarks time the stages through them).  The batched
+# multi-query path is repro.query.engine.RankEngine.
 # ---------------------------------------------------------------------------
 
-def _rep_search(index: CgrxIndex, queries: KeyArray, side: str) -> jnp.ndarray:
-    if index.method == "binary":
-        return searchsorted(index.buckets.reps, queries, side=side)
-    if index.method == "kernel":
-        from repro.kernels import ops as kops
+def _backend(index: CgrxIndex):
+    from repro.query.backends import get_backend
 
-        return kops.successor_search(index.buckets.reps, queries, side=side)
-    return fanout.descend(index.tree, queries, side=side)
+    return get_backend(index.method)
+
+
+def _rep_search(index: CgrxIndex, queries: KeyArray, side: str) -> jnp.ndarray:
+    return _backend(index).rep_search(index, queries, side)
 
 
 def _bucket_count(index: CgrxIndex, bucket_id: jnp.ndarray, queries: KeyArray,
                   side: str) -> jnp.ndarray:
     """#keys (<) / (<=) q inside bucket ``bucket_id`` (post-filter stage)."""
-    if index.method == "kernel":
-        from repro.kernels import ops as kops
-
-        return kops.bucket_rank(index.buckets, bucket_id, queries, side=side)
-    offs = (
-        jnp.minimum(bucket_id, index.num_buckets - 1)[..., None]
-        * index.bucket_size
-        + jnp.arange(index.bucket_size, dtype=jnp.int32)
-    )
-    rows = index.buckets.keys.take(offs)  # (Q, B) gather from flat buffer
-    qb = KeyArray(queries.lo[..., None],
-                  None if queries.hi is None else queries.hi[..., None])
-    cmp = key_le if side == "right" else key_lt
-    return jnp.sum(cmp(rows, qb).astype(jnp.int32), axis=-1)
+    return _backend(index).bucket_count(index, bucket_id, queries, side)
 
 
 def rank(index: CgrxIndex, queries: KeyArray, side: str = "left") -> jnp.ndarray:
     """Global rank of each query in the sorted key set (0..n)."""
-    b = _rep_search(index, queries, side)
-    inb = _bucket_count(index, b, queries, side)
-    full = b * index.bucket_size + inb
-    # b == num_buckets means q beyond max rep: rank = n.
-    return jnp.where(b >= index.num_buckets, index.n, jnp.minimum(full, index.n))
+    return _backend(index).rank(index, queries, side)
 
 
 # ---------------------------------------------------------------------------
 # Point lookup (paper Alg. 2 + post-filter, Sec. 3.1/3.4).
 # ---------------------------------------------------------------------------
 
-def lookup(index: CgrxIndex, queries: KeyArray) -> LookupResult:
-    pos = rank(index, queries, side="left")
+def lookup_from_rank(index: CgrxIndex, pos: jnp.ndarray,
+                     queries: KeyArray) -> LookupResult:
+    """rank_left positions -> LookupResult (hit check + rowID gather).
+
+    Shared post-processing of ``lookup`` and the batched engine
+    (repro.query.engine) — one definition so the engine's bit-identity
+    guarantee can't drift.
+    """
     in_range = pos < index.n
     safe_pos = jnp.minimum(pos, index.n - 1)
     hit_keys = index.buckets.keys.take(safe_pos)
@@ -142,6 +135,11 @@ def lookup(index: CgrxIndex, queries: KeyArray) -> LookupResult:
     return LookupResult(bucket_id=bucket_id.astype(jnp.int32),
                         row_id=row.astype(jnp.int32),
                         found=found, position=pos.astype(jnp.int32))
+
+
+def lookup(index: CgrxIndex, queries: KeyArray) -> LookupResult:
+    pos = rank(index, queries, side="left")
+    return lookup_from_rank(index, pos, queries)
 
 
 # ---------------------------------------------------------------------------
@@ -154,10 +152,13 @@ class RangeResult(NamedTuple):
     row_ids: jnp.ndarray  # int32 (Q, max_hits) qualifying rowIDs, -1 padded
 
 
-def range_lookup(index: CgrxIndex, lo: KeyArray, hi: KeyArray,
-                 max_hits: int) -> RangeResult:
-    start = rank(index, lo, side="left")
-    end = rank(index, hi, side="right")
+def range_from_ranks(index: CgrxIndex, start: jnp.ndarray, end: jnp.ndarray,
+                     max_hits: int) -> RangeResult:
+    """(rank_left(lo), rank_right(hi)) -> RangeResult (rowID scan).
+
+    Shared post-processing of ``range_lookup`` and the batched engine
+    (repro.query.engine).
+    """
     count = jnp.maximum(end - start, 0)
     offs = start[..., None] + jnp.arange(max_hits, dtype=jnp.int32)
     valid = jnp.arange(max_hits, dtype=jnp.int32) < count[..., None]
@@ -166,6 +167,13 @@ def range_lookup(index: CgrxIndex, lo: KeyArray, hi: KeyArray,
     rows = jnp.where(valid, rows, MISS)
     return RangeResult(start=start.astype(jnp.int32),
                        count=count.astype(jnp.int32), row_ids=rows)
+
+
+def range_lookup(index: CgrxIndex, lo: KeyArray, hi: KeyArray,
+                 max_hits: int) -> RangeResult:
+    start = rank(index, lo, side="left")
+    end = rank(index, hi, side="right")
+    return range_from_ranks(index, start, end, max_hits)
 
 
 # ---------------------------------------------------------------------------

@@ -30,6 +30,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.parallel.sharding import shard_map
+
 from . import cgrx
 from .keys import KeyArray, key_eq, key_le, searchsorted, sort_with_payload
 
@@ -145,7 +147,7 @@ def sharded_lookup(idx: ShardedIndex, queries: KeyArray,
         full = [next(it) if a is not None else None for a in args]
         return local(*full)
 
-    fn = jax.shard_map(wrapper, mesh=mesh, in_specs=tuple(specs),
+    fn = shard_map(wrapper, mesh=mesh, in_specs=tuple(specs),
                        out_specs=(spec_out, spec_out), check_vma=False)
     return fn(*arrs)
 
@@ -217,6 +219,6 @@ def sharded_range_count(idx: ShardedIndex, lo: KeyArray, hi: KeyArray,
         full = [next(it) if a is not None else None for a in args]
         return local(*full)
 
-    fn = jax.shard_map(wrapper, mesh=mesh, in_specs=tuple(specs),
+    fn = shard_map(wrapper, mesh=mesh, in_specs=tuple(specs),
                        out_specs=P(data_axis), check_vma=False)
     return fn(*arrs)

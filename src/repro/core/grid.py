@@ -322,25 +322,34 @@ def build_optimized(buckets: BucketedSet, keys_sorted: np.ndarray,
 # ---------------------------------------------------------------------------
 
 def lookup(scene: GridScene, queries: KeyArray,
-           use_kernel: bool = False) -> GridLookupResult:
-    """Point lookup.  ``use_kernel=True`` routes every probe ("ray")
-    through the Pallas lexicographic-count kernel (kernels/grid_probe.py)
-    instead of the pure-jnp binary search — same results, hardware path.
-    Probes of lower arity pad the missing coordinates with zeros."""
+           use_kernel: bool = False,
+           probe: Optional[str] = None) -> GridLookupResult:
+    """Point lookup (paper Alg. 2), with coalesced probe batching.
+
+    ``probe`` selects the "ray" oracle from the query-layer registry
+    (``repro.query.backends.get_probe``): ``'jnp'`` is the vectorized
+    binary search below, ``'kernel'`` routes every probe through the
+    Pallas lexicographic-count kernel (kernels/grid_probe.py) — same
+    results, hardware path.  ``use_kernel=True`` is the legacy spelling
+    of ``probe='kernel'``.
+
+    The ray sequence is *coalesced*: the up-to-five casts of Algorithm 2
+    are scheduled by data dependency, and every cast that targets the
+    triangle directory (rays 1, 3 and 5) is issued as ONE probe over a
+    3x-wide padded lane batch.  Per query batch that is 4 probe calls
+    instead of 6, and the large triangle directory is traversed once
+    instead of three times — the same query-level batching the engine
+    applies to rank lookups.  Results are identical to the sequential
+    schedule (each cast's inputs are unchanged); the per-query ray
+    *accounting* (Fig. 8 metric) is also unchanged.
+    """
+    from repro.query.backends import get_probe
+
     from .keys import key_lt
 
-    global _succ
-    if use_kernel:
-        from repro.kernels import ops as kops
-
-        def probe(arrs, qs):
-            z = [jnp.zeros_like(arrs[0])] * (3 - len(arrs))
-            qz_pad = [jnp.zeros_like(qs[0])] * (3 - len(qs))
-            a = list(arrs) + z
-            q = list(qs) + qz_pad
-            return kops.ray_probe(a[0], a[1], a[2], q[0], q[1], q[2])
-    else:
-        probe = searchsorted_lex
+    if probe is None:
+        probe = "kernel" if use_kernel else "jnp"
+    probe_fn = get_probe(probe)
 
     kmap = scene.kmap
     qx, qy, qz = coords_device(kmap, queries)
@@ -353,45 +362,53 @@ def lookup(scene: GridScene, queries: KeyArray,
     zeros = jnp.zeros_like(qx)
     rays = jnp.zeros(qx.shape, jnp.int32)
 
-    # Ray 1: xCast(key.x, key.y, key.z) — successor among triangles, hit iff
-    # it lies in the query's row.
-    i1 = probe((scene.tri_z, scene.tri_y, scene.tri_x), (qz, qy, qx))
-    i1c = jnp.minimum(i1, T - 1)
-    hit1 = (i1 < T) & (scene.tri_z[i1c] == qz) & (scene.tri_y[i1c] == qy)
-    prim1 = scene.tri_prim[i1c]
-    rays = rays + 1
-
+    # Round A (no data dependencies): yCast to the row marker set and
+    # zCast to the plane set.
     # Ray 2: yCast from the next row — probes the marker / row-end set.
-    j = probe((scene.rowdir_z, scene.rowdir_y), (qz, qy + 1))
+    j = probe_fn((scene.rowdir_z, scene.rowdir_y), (qz, qy + 1))
     jc = jnp.minimum(j, R - 1)
     hit2 = (j < R) & (scene.rowdir_z[jc] == qz)
     row2_y = scene.rowdir_y[jc]
-    flip2 = scene.rowdir_flip[jc] & hit2
+    flip2 = scene.rowdir_flip[jc]
     prim2_end = scene.rowdir_prim[jc]
-    rays = rays + jnp.where(hit1, 0, 1)
 
-    # Ray 3: xCast(0, row2_y, qz) — first triangle of the discovered row
-    # (skipped on a back-side = flipped hit).
-    i3 = probe((scene.tri_z, scene.tri_y, scene.tri_x),
-               (qz, row2_y, zeros))
-    prim3 = scene.tri_prim[jnp.minimum(i3, T - 1)]
-    rays = rays + jnp.where((~hit1) & hit2 & (~flip2), 1, 0)
-
-    # Rays 4-6: zCast to the next populated plane, then yCast from y=0,
-    # then xCast (the last skipped on a flipped row-end hit).
-    p = probe((scene.plane_z,), (qz + 1,)).astype(jnp.int32)
+    # Ray 4: zCast to the next populated plane.
+    p = probe_fn((scene.plane_z,), (qz + 1,)).astype(jnp.int32)
     pc = jnp.minimum(p, scene.plane_z.shape[0] - 1)
     plane4 = scene.plane_z[pc]
-    j4 = probe((scene.rowdir_z, scene.rowdir_y), (plane4, zeros))
+
+    # Round B (needs plane4): yCast from y=0 in the discovered plane.
+    j4 = probe_fn((scene.rowdir_z, scene.rowdir_y), (plane4, zeros))
     j4c = jnp.minimum(j4, R - 1)
     row4_y = scene.rowdir_y[j4c]
     flip4 = scene.rowdir_flip[j4c]
     prim4_end = scene.rowdir_prim[j4c]
-    i5 = probe((scene.tri_z, scene.tri_y, scene.tri_x),
-               (plane4, row4_y, zeros))
+
+    # Round C: all three xCasts against the triangle directory, coalesced
+    # into ONE probe over 3Q padded lanes —
+    #   ray 1: xCast(key.x, key.y, key.z)   (hit iff in the query's row)
+    #   ray 3: xCast(0, row2_y, qz)         (first triangle of ray 2's row)
+    #   ray 5: xCast(0, row4_y, plane4)     (first triangle of ray 4's row)
+    tq_z = jnp.concatenate([qz, qz, plane4])
+    tq_y = jnp.concatenate([qy, row2_y, row4_y])
+    tq_x = jnp.concatenate([qx, zeros, zeros])
+    i_all = probe_fn((scene.tri_z, scene.tri_y, scene.tri_x),
+                     (tq_z, tq_y, tq_x))
+    i1, i3, i5 = jnp.split(i_all, 3)
+
+    i1c = jnp.minimum(i1, T - 1)
+    hit1 = (i1 < T) & (scene.tri_z[i1c] == qz) & (scene.tri_y[i1c] == qy)
+    prim1 = scene.tri_prim[i1c]
+    prim3 = scene.tri_prim[jnp.minimum(i3, T - 1)]
     prim5 = scene.tri_prim[jnp.minimum(i5, T - 1)]
+
+    # Ray accounting (paper Fig. 8): identical to the sequential schedule.
+    flip2 = flip2 & hit2
+    rays = rays + 1                                       # ray 1 always
+    rays = rays + jnp.where(hit1, 0, 1)                   # ray 2
+    rays = rays + jnp.where((~hit1) & hit2 & (~flip2), 1, 0)   # ray 3
     need_z = (~hit1) & (~hit2)
-    rays = rays + jnp.where(need_z, jnp.where(flip4, 2, 3), 0)
+    rays = rays + jnp.where(need_z, jnp.where(flip4, 2, 3), 0)  # rays 4-6
 
     prim = jnp.where(
         hit1, prim1,

@@ -1,0 +1,167 @@
+"""Pallas TPU kernel: fused multi-query rank over the whole cgRX index.
+
+The per-call compose in ``ops.successor_search`` + ``ops.bucket_rank``
+launches three kernels per lookup batch (splitter rank, candidate-tile
+rank, in-bucket rank) with two host-visible gathers in between.  This
+kernel fuses the paper's entire rank-query pipeline (Alg. 2 + Sec. 3.2's
+rank formulation) into ONE pass per query tile:
+
+    stage 1  splitter ranking    tile(q) = #{ splitters cmp q }
+    stage 2  candidate gather    rank inside reps[tile*128 : tile*128+128]
+    stage 3  in-bucket counting  rank inside bucket b's key slice
+
+where ``cmp`` is *per-lane* ``<`` or ``<=`` selected by a ``sides`` vector
+(0 = left / ``rank_left``, 1 = right / ``rank_right``).  Mixed point- and
+range-lookups therefore share one launch: a point query occupies one lane
+(side=left) and a range occupies two (lo/left, hi/right) — the batching
+that RTCUDB applies to RT-core queries, expressed as VPU tiles.
+
+The grid is 1-D over query tiles; the splitter, representative and
+key-rowID arrays are block-resident (index_map pins them to block 0), so
+each grid step performs all three stages without leaving VMEM.  That is
+the right shape for coarse-granular indexes: the paper's recommended
+config (Sec. 5.4, bucket size 16) keeps reps at n/16 entries, and the
+flat key buffer for container-scale sets fits the ~16 MB VMEM budget.
+``ops.rank_fused`` falls back to the composed streaming kernels when it
+would not (the guard is there, not here, to keep this kernel branch-free).
+
+Gathers (stages 2/3) use clamped indices exactly like the jnp oracle in
+``query/backends.py``: the sentinel padding inside the last bucket is
+*included* in the stage-3 count and the final ``min(rank, n)`` removes it,
+matching ``core/cgrx.rank`` bit for bit.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _cmp(r_lo, r_hi, q_lo, q_hi, is_right):
+    """Per-lane count predicate: r < q  |  (side=right & r == q)."""
+    if q_hi is None:
+        lt = r_lo < q_lo
+        eq = r_lo == q_lo
+    else:
+        lt = (r_hi < q_hi) | ((r_hi == q_hi) & (r_lo < q_lo))
+        eq = (r_hi == q_hi) & (r_lo == q_lo)
+    return lt | (is_right & eq)
+
+
+def _fused_kernel(q_lo_ref, q_hi_ref, side_ref, s_lo_ref, s_hi_ref,
+                  r_lo_ref, r_hi_ref, k_lo_ref, k_hi_ref, out_ref, *,
+                  n_spl: int, n_reps: int, num_buckets: int,
+                  bucket_size: int, n_keys: int):
+    is64 = q_hi_ref is not None
+    ql = q_lo_ref[...]                                  # (BQ, 128)
+    qh = q_hi_ref[...] if is64 else None
+    is_right = side_ref[...] != 0
+
+    ql3 = ql[..., None]                                 # (BQ, 128, 1)
+    qh3 = qh[..., None] if is64 else None
+    isr3 = is_right[..., None]
+
+    # Stage 1: splitter ranking (splitter t = last rep of lane tile t).
+    s_lo = s_lo_ref[...].reshape(1, 1, -1)
+    s_hi = s_hi_ref[...].reshape(1, 1, -1) if is64 else None
+    below = _cmp(s_lo, s_hi, ql3, qh3, isr3)
+    sidx = jax.lax.broadcasted_iota(jnp.int32, below.shape, 2)
+    below &= sidx < n_spl
+    tile = jnp.sum(below.astype(jnp.int32), axis=-1)    # (BQ, 128)
+    tile = jnp.minimum(tile, (n_reps - 1) // LANES)
+
+    # Stage 2: candidate-tile gather + in-tile rank.
+    lane = jax.lax.broadcasted_iota(jnp.int32, tile.shape + (LANES,), 2)
+    offs = tile[..., None] * LANES + lane
+    valid = offs < n_reps
+    offs_c = jnp.minimum(offs, n_reps - 1)
+    r_lo = jnp.take(r_lo_ref[...].reshape(-1), offs_c)
+    r_hi = jnp.take(r_hi_ref[...].reshape(-1), offs_c) if is64 else None
+    inb = _cmp(r_lo, r_hi, ql3, qh3, isr3) & valid
+    b = tile * LANES + jnp.sum(inb.astype(jnp.int32), axis=-1)
+
+    # Stage 3: bucket gather + in-bucket counting (post-filter).
+    bb = jnp.minimum(b, num_buckets - 1)
+    slot = jax.lax.broadcasted_iota(jnp.int32, bb.shape + (bucket_size,), 2)
+    koffs = bb[..., None] * bucket_size + slot          # always < nb*B
+    k_lo = jnp.take(k_lo_ref[...].reshape(-1), koffs)
+    k_hi = jnp.take(k_hi_ref[...].reshape(-1), koffs) if is64 else None
+    cnt = _cmp(k_lo, k_hi, ql3, qh3, isr3)
+    full = b * bucket_size + jnp.sum(cnt.astype(jnp.int32), axis=-1)
+
+    rank = jnp.where(b >= num_buckets, n_keys, jnp.minimum(full, n_keys))
+    out_ref[...] = rank.astype(jnp.int32)
+
+
+def fused_rank_count(reps_lo: jnp.ndarray, reps_hi: Optional[jnp.ndarray],
+                     keys_lo: jnp.ndarray, keys_hi: Optional[jnp.ndarray],
+                     q_lo: jnp.ndarray, q_hi: Optional[jnp.ndarray],
+                     sides: jnp.ndarray, *, n: int, bucket_size: int,
+                     block_q: int = 8, interpret: bool = True) -> jnp.ndarray:
+    """Global rank of every query in one fused pass.
+
+    reps: (num_buckets,) sorted representatives; keys: the flat sorted
+    key buffer (num_buckets * bucket_size, sentinel padded); q/sides: (Q,)
+    with sides[i] in {0: rank_left, 1: rank_right}.  Returns (Q,) int32
+    ranks in [0, n] — identical to ``core/cgrx.rank`` per side.
+    """
+    n_reps = reps_lo.shape[0]
+    n_keys_buf = keys_lo.shape[0]
+    num_buckets = n_keys_buf // bucket_size
+    n_q = q_lo.shape[0]
+    is64 = reps_hi is not None
+
+    spl_lo = reps_lo[LANES - 1::LANES]
+    spl_hi = reps_hi[LANES - 1::LANES] if is64 else None
+    n_spl = spl_lo.shape[0]
+
+    qp = _cdiv(max(n_q, 1), block_q * LANES) * block_q * LANES
+    sp = _cdiv(max(n_spl, 1), LANES) * LANES
+    rp = _cdiv(max(n_reps, 1), LANES) * LANES
+    kp = _cdiv(max(n_keys_buf, 1), LANES) * LANES
+
+    def pad(a, m):
+        return jnp.pad(a, (0, m - a.shape[0])).reshape(-1, LANES)
+
+    grid = (qp // (block_q * LANES),)
+    qspec = pl.BlockSpec((block_q, LANES), lambda i: (i, 0))
+
+    def full_spec(m):
+        return pl.BlockSpec((m // LANES, LANES), lambda i: (0, 0))
+
+    kern = functools.partial(
+        _fused_kernel, n_spl=n_spl, n_reps=n_reps, num_buckets=num_buckets,
+        bucket_size=bucket_size, n_keys=n)
+    if is64:
+        def kernel(ql, qh, sd, sl, sh, rl, rh, kl, kh, o):
+            kern(ql, qh, sd, sl, sh, rl, rh, kl, kh, o)
+        in_specs = [qspec, qspec, qspec, full_spec(sp), full_spec(sp),
+                    full_spec(rp), full_spec(rp), full_spec(kp), full_spec(kp)]
+        args = (pad(q_lo, qp), pad(q_hi, qp), pad(sides.astype(jnp.int32), qp),
+                pad(spl_lo, sp), pad(spl_hi, sp), pad(reps_lo, rp),
+                pad(reps_hi, rp), pad(keys_lo, kp), pad(keys_hi, kp))
+    else:
+        def kernel(ql, sd, sl, rl, kl, o):
+            kern(ql, None, sd, sl, None, rl, None, kl, None, o)
+        in_specs = [qspec, qspec, full_spec(sp), full_spec(rp), full_spec(kp)]
+        args = (pad(q_lo, qp), pad(sides.astype(jnp.int32), qp),
+                pad(spl_lo, sp), pad(reps_lo, rp), pad(keys_lo, kp))
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=qspec,
+        out_shape=jax.ShapeDtypeStruct((qp // LANES, LANES), jnp.int32),
+        interpret=interpret,
+    )(*args)
+    return out.reshape(-1)[:n_q]

@@ -1,16 +1,32 @@
-"""jit'd public wrappers around the Pallas kernels, with backend dispatch.
+"""jit'd public wrappers around the Pallas kernels.
 
+This module is the hardware face of the ``'kernel'`` backend registered in
+``repro.query.backends`` — the Pallas analogue of the paper's RT-core path.
 On CPU (this container) kernels run in interpret mode — the kernel body
 executes in Python per grid step, which validates correctness but is slow;
 pure-jnp fallbacks therefore back the benchmarks unless kernels are
 explicitly requested.  On TPU the compiled kernels are the hardware path.
 
-``successor_search`` composes the streaming count kernel hierarchically:
-for large rep arrays a first pass ranks queries against the 1/128-rate
-*splitter* subsequence (reps[127::128] — the last rep of each lane tile,
-mirroring how fanout.py builds its tree), then a second pass ranks within
-the gathered 128-wide candidate tile.  Work per query drops from O(R) to
-O(R/128 + 128) while every step stays a dense VPU compare.
+Three granularities are exposed:
+
+``successor_search`` (paper Alg. 2's BVH traversal, Sec. 3.1) composes the
+streaming count kernel hierarchically: for large rep arrays a first pass
+ranks queries against the 1/128-rate *splitter* subsequence
+(reps[127::128] — the last rep of each lane tile, mirroring how fanout.py
+builds its tree), then a second pass ranks within the gathered 128-wide
+candidate tile.  Work per query drops from O(R) to O(R/128 + 128) while
+every step stays a dense VPU compare.
+
+``bucket_rank`` (the in-bucket post-filter, Sec. 3.4 Table 1) counts keys
+below the query inside one pre-gathered bucket row — the vectorized
+equivalent of the paper's per-thread upper-bound binary search.
+
+``rank_fused`` (the batched engine's hot path) fuses both stages plus the
+splitter level into ONE kernel launch for a whole batch of mixed
+point/range lanes (per-lane left/right sides) — see kernels/fused_rank.py.
+It degrades gracefully: when the flat key buffer would blow the VMEM
+budget on a real TPU, it falls back to the composed two-pass path, which
+streams tiles instead of holding them resident.
 """
 from __future__ import annotations
 
@@ -23,9 +39,14 @@ import jax.numpy as jnp
 from repro.core.bucketing import BucketedSet
 from repro.core.keys import KeyArray
 
-from . import bucket_search, grid_probe, successor
+from . import bucket_search, fused_rank, grid_probe, successor
 
 LANES = 128
+
+# Residency budget for the fused kernel's block-pinned operands (reps +
+# flat keys, lo+hi planes).  Compiled TPU kernels beyond this stream via
+# the composed path; interpret mode (CPU) has no such limit.
+FUSED_VMEM_BUDGET_BYTES = 8 * 2 ** 20
 
 
 def _interpret() -> bool:
@@ -38,6 +59,8 @@ def _interpret() -> bool:
 
 def successor_search_flat(reps: KeyArray, queries: KeyArray,
                           side: str = "left") -> jnp.ndarray:
+    """rank(q) by one streaming pass over the full rep array (paper: the
+    brute BVH-less scan; used directly for small rep sets)."""
     return successor.successor_count(
         reps.lo, reps.hi, queries.lo, queries.hi, side,
         interpret=_interpret())
@@ -45,6 +68,12 @@ def successor_search_flat(reps: KeyArray, queries: KeyArray,
 
 def successor_search(reps: KeyArray, queries: KeyArray, side: str = "left",
                      two_level_threshold: int = 4096) -> jnp.ndarray:
+    """Hierarchical successor search (splitters -> candidate tile).
+
+    Equivalent to ``searchsorted(reps, queries, side)``; this is the
+    kernel backend's rep-search stage (paper Alg. 2 l.3: the traversal
+    that the GPU delegates to RT cores).
+    """
     n = reps.shape[0]
     if n <= two_level_threshold:
         return successor_search_flat(reps, queries, side)
@@ -77,6 +106,8 @@ def successor_search(reps: KeyArray, queries: KeyArray, side: str = "left",
 
 def bucket_rank(buckets: BucketedSet, bucket_id: jnp.ndarray,
                 queries: KeyArray, side: str = "left") -> jnp.ndarray:
+    """#keys (<|<=) q inside bucket ``bucket_id`` (paper Sec. 3.4: the
+    bucket search after the traversal returns a bucketID)."""
     B = buckets.bucket_size
     nb = buckets.num_buckets
     offs = (jnp.minimum(bucket_id, nb - 1)[..., None] * B
@@ -88,9 +119,46 @@ def bucket_rank(buckets: BucketedSet, bucket_id: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# Fused batched rank (the query engine's one-launch path).
+# ---------------------------------------------------------------------------
+
+def rank_fused(buckets: BucketedSet, queries: KeyArray,
+               sides: jnp.ndarray) -> jnp.ndarray:
+    """Global rank of a mixed-side lane batch in one kernel launch.
+
+    ``sides``: (Q,) int32, 0 = rank_left (#keys < q), 1 = rank_right
+    (#keys <= q).  Point lookups use one left lane; a range [l, u] uses a
+    left lane for l and a right lane for u (paper Sec. 3.2).  Results are
+    bit-identical to ``core/cgrx.rank`` with the corresponding ``side``.
+    """
+    interp = _interpret()
+    planes = 2 if buckets.keys.is64 else 1
+    resident = (buckets.reps.shape[0] + buckets.keys.shape[0]) * 4 * planes
+    if not interp and resident > FUSED_VMEM_BUDGET_BYTES:
+        # Too big to pin in VMEM: compose the streaming kernels per side
+        # and select lanes (still one jit region, two passes over reps).
+        left = successor_search(buckets.reps, queries, "left")
+        right = successor_search(buckets.reps, queries, "right")
+        b = jnp.where(sides != 0, right, left)
+        inb_l = bucket_rank(buckets, b, queries, "left")
+        inb_r = bucket_rank(buckets, b, queries, "right")
+        inb = jnp.where(sides != 0, inb_r, inb_l)
+        full = b * buckets.bucket_size + inb
+        return jnp.where(b >= buckets.num_buckets, buckets.n,
+                         jnp.minimum(full, buckets.n)).astype(jnp.int32)
+    return fused_rank.fused_rank_count(
+        buckets.reps.lo, buckets.reps.hi, buckets.keys.lo, buckets.keys.hi,
+        queries.lo, queries.hi, sides, n=buckets.n,
+        bucket_size=buckets.bucket_size, interpret=interp)
+
+
+# ---------------------------------------------------------------------------
 # Grid ray probe.
 # ---------------------------------------------------------------------------
 
 def ray_probe(tz, ty, tx, qz, qy, qx) -> jnp.ndarray:
+    """One emulated "ray" (paper Alg. 2 casts): lexicographic rank of each
+    (qz,qy,qx) in the coordinate-sorted triangle directory.  Lower-arity
+    casts pass zeros for the missing coordinates."""
     return grid_probe.lex3_count(tz, ty, tx, qz, qy, qx,
                                  interpret=_interpret())

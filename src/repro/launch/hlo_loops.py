@@ -84,7 +84,15 @@ _COLLECTIVE = re.compile(
     r"collective-permute)(?:-start)?\(")
 _DOT = re.compile(r"^(.*?)\s+dot\((%[\w\.\-]+)[,)]")
 _LHS_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
-_OPERANDS = re.compile(r"\((%[\w\.\-]+(?:,\s*%[\w\.\-]+)*)\)")
+# Operand lists come in two textual forms depending on the XLA version:
+# bare names "(%a, %b)" or shape-annotated "(f32[8,8]{1,0} %a, ...)".
+# Tokenize operands individually (bracket-aware) — a plain split on ','
+# would shred multi-dimensional shapes.
+_OPERANDS = re.compile(r"\(([^()]*%[\w\.\-]+[^()]*)\)")
+_OPERAND_TOK = re.compile(
+    r"(?:(\w+\[[\d,]*\])(?:\{[\d,]*\})?\s+)?(%[\w\.\-]+)")
+_DOT_LHS = re.compile(
+    r"dot\(\s*(?:(\w+\[[\d,]*\])(?:\{[\d,]*\})?\s+)?(%[\w\.\-]+)")
 
 # HBM-boundary op families.  The CPU backend leaves elementwise chains
 # unfused that a TPU compile would fuse into neighbors, so counting every
@@ -179,10 +187,13 @@ def _dot_flops_of(comp: Computation) -> int:
         out_shape = _shape_dims(rest.split(" dot(", 1)[0])
         if out_shape is None:
             out_shape = []
-        lhs_m = re.search(r"dot\((%[\w\.\-]+)", rest)
+        lhs_m = _DOT_LHS.search(rest)
         contract = 1
         if lhs_m:
-            lhs_shape = _shape_dims(comp.defs.get(lhs_m.group(1), "") or "")
+            if lhs_m.group(1):      # shape annotated inline at the call
+                lhs_shape = _shape_dims(lhs_m.group(1))
+            else:                   # bare name: resolve via its definition
+                lhs_shape = _shape_dims(comp.defs.get(lhs_m.group(2), "") or "")
             cd = _LHS_CONTRACT.search(rest)
             if lhs_shape and cd and cd.group(1):
                 for d in cd.group(1).split(","):
@@ -220,8 +231,12 @@ def _hbm_bytes_of(comp: Computation, fusion_callees: set) -> int:
         om = _OPERANDS.search(rest)
         operand_bytes = []
         if om:
-            for opnd in om.group(1).split(","):
-                operand_bytes.append(_shape_bytes(comp.defs.get(opnd.strip(), "")))
+            for tm in _OPERAND_TOK.finditer(om.group(1)):
+                if tm.group(1):  # shape annotated inline at the call
+                    operand_bytes.append(_shape_bytes(tm.group(1)))
+                else:
+                    operand_bytes.append(
+                        _shape_bytes(comp.defs.get(tm.group(2), "")))
         result_bytes = _shape_bytes(rest.split("(", 1)[0])
 
         if "dynamic-update-slice" in rest or "dynamic_update_slice" in rest:

@@ -25,6 +25,23 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = False):
+    """Version-portable ``shard_map``.
+
+    ``jax.shard_map`` (with ``check_vma``) only exists in newer jax; older
+    releases ship it as ``jax.experimental.shard_map.shard_map`` with the
+    equivalent flag spelled ``check_rep``.  All shard_map call sites in
+    this repo route through here.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_vma)
+
+
 # (path-suffix regex, spec template) — first match wins.  Templates name
 # mesh axes per tensor dim; 'dp' expands to the data-parallel axis group
 # ('pod','data') when a pod axis exists, else 'data'.

@@ -1,0 +1,29 @@
+"""Batched rank-query engine (the repo's unified lookup layer).
+
+The paper reduces point- and range-lookups to *rank queries* against the
+sorted key set (Sec. 3.1-3.2); this package turns that observation into a
+serving-grade subsystem:
+
+``backends``  one ``Backend`` protocol + registry unifying the three
+              successor-search paths ('tree' / 'binary' / 'kernel') that
+              used to be hard-coded in ``core/cgrx.py``;
+``batch``     the ``QueryBatch`` planner that coalesces mixed point
+              lookups and range endpoints into padded SIMD lanes;
+``engine``    the ``RankEngine`` that executes a plan in one device call.
+
+See docs/ARCHITECTURE.md for the module map and the lane layout.
+"""
+from .backends import Backend, available_backends, get_backend, get_probe
+from .batch import QueryBatch, QueryPlan
+from .engine import BatchResult, RankEngine
+
+__all__ = [
+    "Backend",
+    "BatchResult",
+    "QueryBatch",
+    "QueryPlan",
+    "RankEngine",
+    "available_backends",
+    "get_backend",
+    "get_probe",
+]

@@ -1,0 +1,216 @@
+"""Backend protocol + registry for the cgRX successor search.
+
+The paper's lookup (Alg. 2) splits into two stages: an accelerated
+*rep successor search* (the BVH/RT-core traversal — "find the smallest
+representative >= k") and an *in-bucket post-filter* (Sec. 3.4).  The seed
+threaded the choice of search structure through string branches inside
+``core/cgrx.py``; this module makes it a first-class, pluggable layer —
+FliX-style update-aware dispatch — with one protocol and three built-ins:
+
+    'tree'    lane-width fanout tree (core/fanout.py), the BVH analogue;
+    'binary'  plain binary search over reps (the B+/SA-style control);
+    'kernel'  Pallas kernels (kernels/ops.py), the hardware path
+              (interpret=True on CPU, compiled on TPU).
+
+Every backend answers the same three questions:
+
+    rep_search(index, q, side)          -> bucket of the successor rep
+    bucket_count(index, b, q, side)     -> #keys (<|<=) q inside bucket b
+    rank(index, q, side)                -> global rank = b * B + in-bucket
+
+plus the batched entry point ``rank_batch(index, q, sides)`` which serves
+a whole lane batch of *mixed* left/right queries (0 = rank_left,
+1 = rank_right) in one call — the kernel backend fuses it into a single
+Pallas launch (kernels/fused_rank.py); the jnp backends evaluate both
+sides vectorized and select per lane (still one jit region).
+
+``index`` is duck-typed: anything exposing ``buckets``/``tree``/
+``bucket_size``/``num_buckets``/``n`` works (``core/cgrx.CgrxIndex`` and
+test doubles both qualify), which keeps this module free of a cgrx import
+and the layering acyclic: core -> kernels -> query -> serving.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Protocol, runtime_checkable
+
+import jax.numpy as jnp
+
+from repro.core import fanout
+from repro.core.keys import KeyArray, key_le, key_lt, searchsorted
+
+
+@runtime_checkable
+class Backend(Protocol):
+    """A successor-search implementation (paper Alg. 2 stages 1+2)."""
+
+    name: str
+
+    def rep_search(self, index, queries: KeyArray, side: str) -> jnp.ndarray:
+        """searchsorted index of each query into the rep array [0..nb]."""
+        ...
+
+    def bucket_count(self, index, bucket_id: jnp.ndarray, queries: KeyArray,
+                     side: str) -> jnp.ndarray:
+        """#keys (<|<=) q inside bucket ``bucket_id`` (post-filter)."""
+        ...
+
+    def rank(self, index, queries: KeyArray, side: str) -> jnp.ndarray:
+        """Global rank of each query in the sorted key set (0..n)."""
+        ...
+
+    def rank_batch(self, index, queries: KeyArray,
+                   sides: jnp.ndarray) -> jnp.ndarray:
+        """Global rank of a mixed-side lane batch (sides: 0=left 1=right)."""
+        ...
+
+
+_REGISTRY: Dict[str, Backend] = {}
+
+
+def register(cls):
+    """Class decorator: instantiate and register under ``cls.name``."""
+    inst = cls()
+    _REGISTRY[inst.name] = inst
+    return cls
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown backend {name!r}; available: {available_backends()}"
+        ) from None
+
+
+def available_backends() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def compose_rank(index, b: jnp.ndarray, inb: jnp.ndarray) -> jnp.ndarray:
+    """(rep rank, in-bucket count) -> global rank, clamped to [0, n].
+
+    b == num_buckets means q beyond the max rep: rank = n (paper Alg. 2
+    l.2 upper-bound check).
+    """
+    full = b * index.bucket_size + inb
+    return jnp.where(b >= index.num_buckets, index.n,
+                     jnp.minimum(full, index.n))
+
+
+class _BackendBase:
+    """Shared compose/post-filter logic; subclasses supply rep_search."""
+
+    name = "?"
+
+    def rep_search(self, index, queries: KeyArray, side: str) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def bucket_count(self, index, bucket_id: jnp.ndarray, queries: KeyArray,
+                     side: str) -> jnp.ndarray:
+        # Pure-jnp post-filter: gather the bucket's key slice and count.
+        # Sentinel padding inside the last bucket is included; the final
+        # min(rank, n) in compose_rank removes it.
+        offs = (
+            jnp.minimum(bucket_id, index.num_buckets - 1)[..., None]
+            * index.bucket_size
+            + jnp.arange(index.bucket_size, dtype=jnp.int32)
+        )
+        rows = index.buckets.keys.take(offs)  # (Q, B) gather from flat buffer
+        qb = KeyArray(queries.lo[..., None],
+                      None if queries.hi is None else queries.hi[..., None])
+        cmp = key_le if side == "right" else key_lt
+        return jnp.sum(cmp(rows, qb).astype(jnp.int32), axis=-1)
+
+    def rank(self, index, queries: KeyArray, side: str = "left") -> jnp.ndarray:
+        b = self.rep_search(index, queries, side)
+        inb = self.bucket_count(index, b, queries, side)
+        return compose_rank(index, b, inb)
+
+    def rank_batch(self, index, queries: KeyArray,
+                   sides: jnp.ndarray) -> jnp.ndarray:
+        # Vectorized both-sides evaluation + per-lane select.  Fine for the
+        # jnp backends (two dense passes, one jit region); the kernel
+        # backend overrides with the single-pass fused kernel.
+        left = self.rank(index, queries, "left")
+        right = self.rank(index, queries, "right")
+        return jnp.where(sides != 0, right, left)
+
+
+@register
+class TreeBackend(_BackendBase):
+    """Fanout-tree descent (core/fanout.py) — the paper's BVH analogue."""
+
+    name = "tree"
+
+    def rep_search(self, index, queries: KeyArray, side: str) -> jnp.ndarray:
+        return fanout.descend(index.tree, queries, side=side)
+
+
+@register
+class BinaryBackend(_BackendBase):
+    """Binary search over reps — the B+/sorted-array-style control."""
+
+    name = "binary"
+
+    def rep_search(self, index, queries: KeyArray, side: str) -> jnp.ndarray:
+        return searchsorted(index.buckets.reps, queries, side=side)
+
+
+@register
+class KernelBackend(_BackendBase):
+    """Pallas kernels (kernels/ops.py) — the hardware path."""
+
+    name = "kernel"
+
+    def rep_search(self, index, queries: KeyArray, side: str) -> jnp.ndarray:
+        from repro.kernels import ops as kops
+
+        return kops.successor_search(index.buckets.reps, queries, side=side)
+
+    def bucket_count(self, index, bucket_id: jnp.ndarray, queries: KeyArray,
+                     side: str) -> jnp.ndarray:
+        from repro.kernels import ops as kops
+
+        return kops.bucket_rank(index.buckets, bucket_id, queries, side=side)
+
+    def rank_batch(self, index, queries: KeyArray,
+                   sides: jnp.ndarray) -> jnp.ndarray:
+        from repro.kernels import ops as kops
+
+        return kops.rank_fused(index.buckets, queries, sides)
+
+
+# ---------------------------------------------------------------------------
+# Grid-probe dispatch (the "ray" oracle used by core/grid.py).
+# ---------------------------------------------------------------------------
+
+def _jnp_probe(arrs, qs) -> jnp.ndarray:
+    from repro.core.grid import searchsorted_lex
+
+    return searchsorted_lex(arrs, qs)
+
+
+def _kernel_probe(arrs, qs) -> jnp.ndarray:
+    # The Pallas lex3 kernel models all three ray arities; pad the missing
+    # trailing coordinates with zeros (lex order is unaffected).
+    from repro.kernels import ops as kops
+
+    a = list(arrs) + [jnp.zeros_like(arrs[0])] * (3 - len(arrs))
+    q = list(qs) + [jnp.zeros_like(qs[0])] * (3 - len(qs))
+    return kops.ray_probe(a[0], a[1], a[2], q[0], q[1], q[2])
+
+
+_PROBES: Dict[str, Callable] = {"jnp": _jnp_probe, "kernel": _kernel_probe}
+
+
+def get_probe(name: str) -> Callable:
+    """Probe backend for the grid emulation: 'jnp' (binary-search oracle)
+    or 'kernel' (Pallas lexicographic count).  Same signature as
+    ``core/grid.searchsorted_lex``: probe(sorted_arrays, query_arrays)."""
+    try:
+        return _PROBES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown probe backend {name!r}; available: {sorted(_PROBES)}"
+        ) from None

@@ -1,0 +1,137 @@
+"""QueryBatch: coalesce mixed lookups into padded rank-query lanes.
+
+The serving insight (RTCUDB, arXiv 2412.09337): amortizing launch and
+traversal overhead across *concurrent queries* is where accelerator
+throughput lives.  Every cgRX lookup is a rank query (paper Sec. 3.1-3.2):
+
+    point  k        ->  1 lane:  rank_left(k)
+    range  [l, u]   ->  2 lanes: rank_left(l), rank_right(u)
+
+so a tick's worth of heterogeneous requests flattens into ONE (L,) key
+vector plus an (L,) side vector, padded to a multiple of the VPU lane
+width so the fused kernel (kernels/fused_rank.py) sees full tiles.
+
+Lane layout of a plan (static per shape, so the engine jit-caches on it):
+
+    [ point keys | range lows | range highs | padding ]
+      side=left    side=left    side=right    side=left, key=0
+
+The planner is host-side and cheap (numpy concatenation); the resulting
+``QueryPlan`` is consumed by ``query.engine.RankEngine.execute`` in a
+single device call.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.keys import KeyArray, concat_keys
+
+LANE = 128
+
+SIDE_LEFT = 0
+SIDE_RIGHT = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryPlan:
+    """A padded, device-ready lane batch (see module docstring layout)."""
+
+    keys: KeyArray        # (L,) flat lane keys, L a multiple of ``lane``
+    sides: jnp.ndarray    # (L,) int32, 0 = rank_left, 1 = rank_right
+    n_point: int          # lanes [0, n_point) are point lookups
+    n_range: int          # lanes [n_point, n_point + 2*n_range) are ranges
+    max_hits: int         # row-id capacity per range result
+
+    @property
+    def lanes(self) -> int:
+        return self.keys.shape[0]
+
+    @property
+    def n_queries(self) -> int:
+        """Logical request count (a range is one request, two lanes)."""
+        return self.n_point + self.n_range
+
+
+class QueryBatch:
+    """Accumulates point/range requests, then plans them into lanes.
+
+    Usage::
+
+        batch = QueryBatch()
+        batch.add_points(point_keys)          # KeyArray (P,)
+        batch.add_ranges(lo_keys, hi_keys)    # KeyArrays (R,), (R,)
+        plan = batch.plan(max_hits=64)
+        result = engine.execute(plan)         # one device call
+
+    All added keys must agree on width (32- vs 64-bit).
+    """
+
+    def __init__(self) -> None:
+        self._points: List[KeyArray] = []
+        self._ranges: List[Tuple[KeyArray, KeyArray]] = []
+        self._is64: Optional[bool] = None
+
+    # -- building ------------------------------------------------------------
+
+    def _check_width(self, keys: KeyArray) -> None:
+        if self._is64 is None:
+            self._is64 = keys.is64
+        elif self._is64 != keys.is64:
+            raise ValueError("mixed 32/64-bit keys in one QueryBatch")
+
+    def add_points(self, keys: KeyArray) -> "QueryBatch":
+        self._check_width(keys)
+        self._points.append(keys)
+        return self
+
+    def add_ranges(self, lo: KeyArray, hi: KeyArray) -> "QueryBatch":
+        if lo.shape != hi.shape:
+            raise ValueError(f"range lo/hi shapes differ: {lo.shape} vs {hi.shape}")
+        self._check_width(lo)
+        self._check_width(hi)
+        self._ranges.append((lo, hi))
+        return self
+
+    @property
+    def n_point(self) -> int:
+        return sum(int(k.shape[0]) for k in self._points)
+
+    @property
+    def n_range(self) -> int:
+        return sum(int(lo.shape[0]) for lo, _ in self._ranges)
+
+    def __len__(self) -> int:
+        return self.n_point + self.n_range
+
+    # -- planning ------------------------------------------------------------
+
+    def plan(self, lane: int = LANE, max_hits: int = 64) -> QueryPlan:
+        """Flatten to the padded lane layout (one concat, one pad)."""
+        if self._is64 is None:
+            raise ValueError("empty QueryBatch: add points or ranges first")
+        parts: List[KeyArray] = []
+        parts.extend(self._points)
+        parts.extend(lo for lo, _ in self._ranges)
+        parts.extend(hi for _, hi in self._ranges)
+
+        keys = parts[0]
+        for p in parts[1:]:
+            keys = concat_keys(keys, p)
+
+        n_point, n_range = self.n_point, self.n_range
+        total = n_point + 2 * n_range
+        pad = (-total) % lane
+        if pad:
+            zeros = KeyArray(
+                jnp.zeros((pad,), jnp.uint32),
+                jnp.zeros((pad,), jnp.uint32) if self._is64 else None)
+            keys = concat_keys(keys, zeros)
+
+        sides = np.zeros(total + pad, np.int32)
+        sides[n_point + n_range: n_point + 2 * n_range] = SIDE_RIGHT
+        return QueryPlan(keys=keys, sides=jnp.asarray(sides),
+                         n_point=n_point, n_range=n_range, max_hits=max_hits)

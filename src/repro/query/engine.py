@@ -1,0 +1,101 @@
+"""RankEngine: execute a QueryPlan in one device call.
+
+The engine binds a built ``CgrxIndex`` to a registered backend and turns
+a planned lane batch into results:
+
+    ranks = backend.rank_batch(index, plan.keys, plan.sides)   # 1 launch
+    points -> LookupResult   (hit check + rowID gather, paper Alg. 2 l.4-5)
+    ranges -> RangeResult    (start/count + rowID scan, paper Sec. 3.2)
+
+The whole pipeline — rank plus the point/range post-processing — is
+jit-compiled per (backend, lane count, n_point, n_range, max_hits)
+signature, so a serving tick with a stable batch shape is exactly ONE
+XLA executable dispatch; the index buffers are closure-captured
+constants, never re-uploaded.  Results are bit-identical to the
+per-query ``core/cgrx.lookup`` / ``core/cgrx.range_lookup`` paths for
+every backend (enforced by tests/test_query_engine.py).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cgrx
+from repro.core.keys import KeyArray
+
+from .backends import Backend, get_backend
+from .batch import QueryBatch, QueryPlan
+
+
+class BatchResult(NamedTuple):
+    """Per-kind results of one executed plan, in request order."""
+
+    points: "cgrx.LookupResult"   # fields shaped (n_point,)
+    ranges: "cgrx.RangeResult"    # fields shaped (n_range,) / (n_range, max_hits)
+
+
+class RankEngine:
+    """Batched lookup engine over one cgRX index.
+
+    ``backend`` defaults to the index's build-time method; pass any name
+    from ``query.backends.available_backends()`` to override (the index
+    carries every structure all backends need).
+    """
+
+    def __init__(self, index: "cgrx.CgrxIndex",
+                 backend: Optional[str] = None, jit: bool = True):
+        self.index = index
+        self.backend_name = backend or index.method
+        self.backend: Backend = get_backend(self.backend_name)
+        self._jit = jit
+        self._exec_cache: Dict[Tuple, object] = {}
+
+    # -- raw rank ------------------------------------------------------------
+
+    def rank_batch(self, queries: KeyArray, sides: jnp.ndarray) -> jnp.ndarray:
+        """Global ranks of a mixed-side lane batch (0=left, 1=right)."""
+        return self.backend.rank_batch(self.index, queries, sides)
+
+    # -- plan execution ------------------------------------------------------
+
+    def execute(self, plan: QueryPlan) -> BatchResult:
+        """Serve an entire plan — one device call for the whole batch."""
+        sig = (plan.lanes, plan.n_point, plan.n_range, plan.max_hits,
+               plan.keys.is64)
+        fn = self._exec_cache.get(sig)
+        if fn is None:
+            fn = self._build_exec(plan.n_point, plan.n_range, plan.max_hits)
+            self._exec_cache[sig] = fn
+        return fn(plan.keys.lo, plan.keys.hi, plan.sides)
+
+    def _build_exec(self, n_point: int, n_range: int, max_hits: int):
+        index, backend = self.index, self.backend
+
+        def run(q_lo, q_hi, sides):
+            queries = KeyArray(q_lo, q_hi)
+            ranks = backend.rank_batch(index, queries, sides)
+            # Post-processing is cgrx's own (shared helpers), applied to
+            # the plan's lane slices — bit-identity by construction.
+            points = cgrx.lookup_from_rank(
+                index, ranks[:n_point], queries[:n_point])
+            ranges = cgrx.range_from_ranks(
+                index, ranks[n_point:n_point + n_range],
+                ranks[n_point + n_range:n_point + 2 * n_range], max_hits)
+            return BatchResult(points=points, ranges=ranges)
+
+        return jax.jit(run) if self._jit else run
+
+    # -- conveniences (single-kind batches) ----------------------------------
+
+    def lookup(self, queries: KeyArray) -> "cgrx.LookupResult":
+        """Batched point lookup through the planner (one device call)."""
+        plan = QueryBatch().add_points(queries).plan()
+        return self.execute(plan).points
+
+    def range_lookup(self, lo: KeyArray, hi: KeyArray,
+                     max_hits: int) -> "cgrx.RangeResult":
+        """Batched range lookup through the planner (one device call)."""
+        plan = QueryBatch().add_ranges(lo, hi).plan(max_hits=max_hits)
+        return self.execute(plan).ranges

@@ -7,6 +7,12 @@ every active sequence, pages gathered via the cgRX table) -> retired
 whenever the page pool allows — the standard continuous-batching loop,
 here driving the paper's updatable index as its page table.
 
+Index traffic is tick-batched: every decode tick issues ONE page-table
+lookup and ONE paged KV write covering all active requests (and prefill
+covers a whole prompt the same way), so probe work is amortized across
+concurrent requests instead of dispatched per request — the same
+query-level batching the rank engine (repro.query) applies to lookups.
+
 This engine targets functional correctness + index-churn realism on CPU
 with tiny configs (tests/examples); the dry-run serve path lowers the
 dense-cache decode step (launch/dryrun.py) for the production shapes.
@@ -110,7 +116,8 @@ class Engine:
     def _prefill(self, req: Request) -> None:
         """Run the prompt through decode steps (reference implementation
         favors simplicity; chunked prefill is the serve-path optimization
-        measured in the dry-run)."""
+        measured in the dry-run).  Page-table traffic is batched: one
+        index lookup + one paged write cover the entire prompt."""
         L = len(req.prompt)
         # allocate pages for the whole prompt + generation budget
         total = min(L + req.max_new_tokens, self.max_seq)
@@ -125,27 +132,54 @@ class Engine:
             logits, req._dense = self._decode(
                 self.params, req._dense,
                 jnp.asarray([[int(tok)]], jnp.int32), jnp.int32(i))
-            self._mirror_to_pages(req, i)
         req._last_logits = logits
+        self._mirror_to_pages([(req, pos) for pos in range(L)])
         self.cache.seq_len[req.req_id] = L
         self.stats.prefills += 1
 
-    def _mirror_to_pages(self, req: Request, pos: int) -> None:
-        """Mirror the dense step's new KV into the paged pool through the
-        cgRX table (the table lookup is the load-bearing part)."""
-        blk = pos // self.page_size
-        page, found = paged.lookup_pages(
-            self.cache, np.array([req.req_id]), np.array([blk]))
-        assert bool(np.asarray(found)[0]), "page table miss on own block"
-        if self.cache.k_pages.size and req._dense.kv is not None:
+    def _mirror_to_pages(self, reqs_pos) -> None:
+        """Mirror freshly written dense KV into the paged pool through the
+        cgRX table (the table lookup is the load-bearing part).
+
+        ``reqs_pos``: list of (request, position) pairs.  The whole batch
+        is served by ONE index lookup (a single successor-search launch
+        over all (seq, block) keys) and ONE paged scatter — this is where
+        the engine amortizes probe work across concurrent requests.
+        """
+        if not reqs_pos:
+            return
+        seqs = np.array([r.req_id for r, _ in reqs_pos])
+        blks = np.array([pos // self.page_size for _, pos in reqs_pos])
+        pages, found = paged.lookup_pages(self.cache, seqs, blks)
+        assert bool(np.asarray(found).all()), "page table miss on own block"
+        if not self.cache.k_pages.size:
+            return
+        ks, vs, slots, page_ids = [], [], [], []
+        pages = np.asarray(pages)
+        for (req, pos), page in zip(reqs_pos, pages):
+            if req._dense.kv is None:
+                continue
             kc, vc = req._dense.kv          # (L,1,S,KV,hd)
-            slot = pos % self.page_size
-            self.cache = paged.write_token(
-                self.cache,
-                (kc[:, 0, pos][:, None], vc[:, 0, pos][:, None]),
-                jnp.asarray(np.asarray(page)), jnp.asarray([slot]))
+            ks.append(kc[:, 0, pos])
+            vs.append(vc[:, 0, pos])
+            slots.append(pos % self.page_size)
+            page_ids.append(page)
+        if not ks:
+            return
+        self.cache = paged.write_token(
+            self.cache,
+            (jnp.stack(ks, axis=1), jnp.stack(vs, axis=1)),   # (L,B,KV,hd)
+            jnp.asarray(np.array(page_ids, np.int32)),
+            jnp.asarray(np.array(slots, np.int32)))
 
     def _decode_tick(self) -> None:
+        """One decode step for every active sequence.
+
+        The per-request model steps run on independent dense caches, but
+        all index traffic for the tick — page-table lookups and KV page
+        writes — is coalesced into one batched call each (one device
+        dispatch per tick, not one per request)."""
+        stepped = []
         for req in list(self.active.values()):
             pos = self.cache.seq_len[req.req_id]
             if pos >= self.max_seq or len(req.generated) >= req.max_new_tokens:
@@ -156,12 +190,14 @@ class Engine:
             logits, req._dense = self._decode(
                 self.params, req._dense,
                 jnp.asarray([[tok]], jnp.int32), jnp.int32(pos))
-            self._mirror_to_pages(req, pos)
             req._last_logits = logits
             req.generated.append(tok)
-            self.cache.seq_len[req.req_id] = pos + 1
+            stepped.append((req, pos))
             self.stats.decode_steps += 1
             self.stats.tokens_out += 1
+        self._mirror_to_pages(stepped)
+        for req, pos in stepped:
+            self.cache.seq_len[req.req_id] = pos + 1
 
     def _retire(self) -> None:
         for rid, req in list(self.active.items()):

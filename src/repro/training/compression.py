@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+from repro.parallel.sharding import shard_map
+
 
 def _quant_leaf(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     g32 = g.astype(jnp.float32)
@@ -81,7 +83,7 @@ def compressed_pod_mean(mesh: Mesh, grads: Any) -> Any:
 
         return jax.tree.map(leaf, g)
 
-    fn = jax.shard_map(body, mesh=mesh, in_specs=P(), out_specs=P(),
+    fn = shard_map(body, mesh=mesh, in_specs=P(), out_specs=P(),
                        check_vma=False)
     return fn(grads)
 

@@ -1,0 +1,38 @@
+"""Optional-hypothesis shim so tier-1 collection never needs hypothesis.
+
+Property-test modules import ``given``/``settings``/``st`` from here
+instead of from ``hypothesis`` directly.  When hypothesis is installed
+(see requirements-test.txt) the real symbols are re-exported and the
+property tests run as written; when it is not (the minimal container),
+``@given``-decorated tests collect cleanly and report as SKIPPED while
+every plain pytest test in the same module still runs.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    import pytest
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            # Zero-arg replacement: pytest must not try to resolve the
+            # strategy parameters as fixtures, so drop the signature.
+            def skipper():
+                pytest.skip("hypothesis not installed "
+                            "(pip install -r requirements-test.txt)")
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _AnyStrategy:
+        """Stand-in for ``hypothesis.strategies``: any attribute is a
+        callable returning None (strategies are only consumed by the real
+        ``given``, which this shim replaces)."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()

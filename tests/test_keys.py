@@ -2,7 +2,7 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.keys import (KeyArray, key_eq, key_le, key_lt, searchsorted,
                              sort_with_payload, unique_mask)

@@ -1,0 +1,156 @@
+"""Batched rank engine == per-query path, bit for bit, on every backend.
+
+The acceptance property of the query subsystem (docs/ARCHITECTURE.md):
+one ``RankEngine.execute`` call over a planned lane batch must reproduce
+``core/cgrx.lookup`` / ``core/cgrx.range_lookup`` exactly — same
+bucketIDs, rowIDs, found flags, positions, range starts/counts/rows —
+for every registered backend, including mixed point/range batches,
+missing keys, duplicate keys and duplicate queries.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import cgrx
+from repro.core.keys import KeyArray
+from repro.query import (QueryBatch, RankEngine, available_backends,
+                         get_backend, get_probe)
+
+BACKENDS = available_backends()
+
+
+def mk(raw, is64=True):
+    raw = np.asarray(raw, dtype=np.uint64)
+    return KeyArray.from_u64(raw) if is64 else KeyArray.from_u32(
+        raw.astype(np.uint32))
+
+
+def build(n=3000, bucket=16, method="tree", is64=True, seed=0,
+          duplicates=False):
+    rng = np.random.default_rng(seed)
+    space = 1 << 44 if is64 else 1 << 30
+    raw = rng.integers(0, space, n, dtype=np.uint64)
+    if duplicates:
+        raw[n // 2:] = rng.choice(raw[: n // 2], n - n // 2)  # heavy dups
+    else:
+        raw = np.unique(raw)
+    keys = mk(raw, is64)
+    idx = cgrx.build(keys, jnp.arange(len(raw), dtype=jnp.int32), bucket,
+                     method=method)
+    return raw, keys, idx
+
+
+def mixed_workload(raw, is64, seed=1, n_point=80, n_range=40):
+    """Points: hits, misses, duplicate queries; ranges: random extents."""
+    rng = np.random.default_rng(seed)
+    space = 1 << 44 if is64 else 1 << 30
+    hits = rng.choice(raw, n_point - n_point // 4)
+    misses = rng.integers(0, space, n_point // 4 - 2, dtype=np.uint64)
+    pts_raw = np.concatenate([hits, misses, hits[:2]])  # dup queries
+    sraw = np.sort(raw)
+    lo_raw = rng.integers(0, space, n_range, dtype=np.uint64)
+    hi_raw = np.minimum(lo_raw + rng.integers(0, space // 8, n_range,
+                                              dtype=np.uint64), space - 1)
+    return (mk(pts_raw, is64), mk(lo_raw, is64), mk(hi_raw, is64),
+            pts_raw, sraw)
+
+
+def assert_tuple_equal(got, want, ctx):
+    for f in want._fields:
+        g, w = np.asarray(getattr(got, f)), np.asarray(getattr(want, f))
+        assert (g == w).all(), f"{ctx}: field {f} diverges"
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("is64", [False, True])
+def test_batched_equals_per_query_mixed(backend, is64):
+    """>= 64 mixed point/range lookups in one call, bit-identical."""
+    raw, _, idx = build(method=backend, is64=is64)
+    pts, lo, hi, _, _ = mixed_workload(raw, is64)
+    assert len(pts) + len(lo) >= 64
+
+    want_p = cgrx.lookup(idx, pts)
+    want_r = cgrx.range_lookup(idx, lo, hi, max_hits=32)
+
+    engine = RankEngine(idx)
+    plan = QueryBatch().add_points(pts).add_ranges(lo, hi).plan(max_hits=32)
+    res = engine.execute(plan)
+
+    assert_tuple_equal(res.points, want_p, f"{backend}/points")
+    assert_tuple_equal(res.ranges, want_r, f"{backend}/ranges")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_batched_with_duplicate_keys(backend):
+    """Duplicate keys in the indexed set: batched == per-query."""
+    raw, _, idx = build(n=2000, bucket=8, method=backend, duplicates=True)
+    pts, lo, hi, _, _ = mixed_workload(raw, True, seed=3)
+    want_p = cgrx.lookup(idx, pts)
+    want_r = cgrx.range_lookup(idx, lo, hi, max_hits=16)
+    res = RankEngine(idx).execute(
+        QueryBatch().add_points(pts).add_ranges(lo, hi).plan(max_hits=16))
+    assert_tuple_equal(res.points, want_p, f"{backend}/dup-points")
+    assert_tuple_equal(res.ranges, want_r, f"{backend}/dup-ranges")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_rank_batch_mixed_sides_matches_oracle(backend):
+    """Per-lane sides == numpy searchsorted left/right per lane."""
+    raw, _, idx = build(n=2500, bucket=16, method=backend, seed=5)
+    sraw = np.sort(raw)
+    rng = np.random.default_rng(6)
+    q_raw = np.concatenate([rng.choice(raw, 100),
+                            rng.integers(0, 1 << 44, 100, dtype=np.uint64)])
+    sides = rng.integers(0, 2, len(q_raw)).astype(np.int32)
+    got = np.asarray(get_backend(backend).rank_batch(
+        idx, mk(q_raw), jnp.asarray(sides)))
+    want = np.where(sides == 1,
+                    np.searchsorted(sraw, q_raw, side="right"),
+                    np.searchsorted(sraw, q_raw, side="left"))
+    assert (got == want).all()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_large_rep_array_two_level_path(backend):
+    """Enough buckets to force the hierarchical/splitter kernel paths."""
+    raw, _, idx = build(n=20000, bucket=2, method=backend, seed=7)
+    assert idx.num_buckets > 4096          # past the flat-kernel threshold
+    pts = mk(np.random.default_rng(8).choice(raw, 64))
+    want = cgrx.lookup(idx, pts)
+    got = RankEngine(idx).lookup(pts)
+    assert_tuple_equal(got, want, f"{backend}/two-level")
+
+
+def test_engine_backend_override():
+    """An index built with one method can be served by any backend."""
+    raw, _, idx = build(method="tree")
+    pts = mk(np.sort(raw)[:70])
+    want = RankEngine(idx, backend="tree").lookup(pts)
+    for backend in BACKENDS:
+        got = RankEngine(idx, backend=backend).lookup(pts)
+        assert_tuple_equal(got, want, f"override/{backend}")
+
+
+def test_plan_layout_and_padding():
+    pts = mk(np.arange(10, dtype=np.uint64))
+    lo, hi = mk(np.arange(5, dtype=np.uint64)), mk(np.arange(5, 10, dtype=np.uint64))
+    plan = QueryBatch().add_points(pts).add_ranges(lo, hi).plan(lane=128)
+    assert plan.n_point == 10 and plan.n_range == 5
+    assert plan.lanes == 128                     # 20 lanes padded up
+    sides = np.asarray(plan.sides)
+    assert (sides[:15] == 0).all()               # points + range los
+    assert (sides[15:20] == 1).all()             # range his
+    assert (sides[20:] == 0).all()               # padding
+
+
+def test_registry_errors():
+    assert set(BACKENDS) >= {"tree", "binary", "kernel"}
+    with pytest.raises(KeyError):
+        get_backend("no-such-backend")
+    with pytest.raises(KeyError):
+        get_probe("no-such-probe")
+    with pytest.raises(ValueError):
+        QueryBatch().plan()                      # empty batch
+    with pytest.raises(ValueError):
+        QueryBatch().add_points(mk([1])).add_points(
+            KeyArray.from_u32(np.array([1], np.uint32)))  # width mix
