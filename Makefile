@@ -9,8 +9,10 @@ check: test bench-smoke
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
 
+# Every registered benchmark suite at tiny sizes: benchmark scripts can't
+# silently rot (benchmarks/run.py exits non-zero on any suite failure).
 bench-smoke:
-	PYTHONPATH=src $(PY) -m benchmarks.bench_batched_lookup --tiny
+	PYTHONPATH=src $(PY) -m benchmarks.run --n 4096 --q 4096
 
 quickstart:
 	PYTHONPATH=src $(PY) examples/quickstart.py

@@ -1,0 +1,118 @@
+"""Live store under mixed read/write traffic vs rebuild-per-wave.
+
+The lifecycle complement of Fig. 15 (bench_updates.py): instead of timing
+one update primitive, drive the whole ``LiveIndex`` store — epoch
+snapshot + chains + compaction policy + tick frontend — with mixed
+workloads (90/10 and 50/50 lookup/update) and compare against the naive
+serving strategy of rebuilding a fresh ``CgrxIndex`` every wave.
+
+Emitted per wave: live-path wall time (one apply dispatch + one engine
+dispatch per tick, ops/s derived) vs the rebuild baseline, plus the
+compaction pauses the policy actually took (the cost the epoch swap moves
+off the read path).
+
+CPU-container caveat: the live path runs eagerly, so the first wave at
+each chain depth pays one-time XLA compilation (the power-of-two shape
+bucketing in ``nodes.apply_batch`` and the engine's shared executable
+cache keep that set small); later waves show the steady state.  Fig. 15
+(bench_updates.py) times the raw update primitive without the lifecycle.
+"""
+from benchmarks.common import emit, parse_args, timeit
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cgrx
+from repro.data import keygen
+from repro.query import QueryBatch, RankEngine
+from repro.store import CompactionPolicy, LiveConfig, LiveFrontend, LiveIndex
+
+WAVES = 8
+
+
+def _mixed_wave(rng, live_np, space, n_ops, read_frac):
+    """One wave's traffic: lookups over the live set + insert/delete."""
+    n_read = int(n_ops * read_frac)
+    n_write = n_ops - n_read
+    n_ins = n_write // 2
+    n_del = n_write - n_ins
+    q = live_np[rng.integers(0, len(live_np), max(n_read, 1))]
+    ins = np.setdiff1d(
+        np.unique(rng.integers(0, space, int(n_ins * 1.5) + 8,
+                               dtype=np.uint64)), live_np)[:n_ins]
+    dels = live_np[rng.choice(len(live_np), n_del, replace=False)]
+    return q, ins, dels
+
+
+def main(args=None) -> None:
+    args = args or parse_args()
+    # Scaled workload: the store path is eager host-driven (chain walks,
+    # per-version engines); sizes track --n/--q but stay container-sane.
+    n = max(2048, min(args.n, 1 << 20) >> 6)
+    ops = max(512, min(args.q, 1 << 21) >> 9)
+    space = np.uint64((1 << 44) - 1)
+
+    for read_frac, tag in ((0.9, "mix90"), (0.5, "mix50")):
+        keys, rows, raw = keygen.keyset(n, 1.0, bits=64, seed=0)
+        cfg = LiveConfig(node_cap=32,
+                         policy=CompactionPolicy(max_chain=3, min_fill=0.2,
+                                                 max_tombstone_ratio=0.5))
+        live = LiveIndex.build(keys, jnp.asarray(rows), cfg)
+        fe = LiveFrontend(live, max_hits=16)
+
+        live_np = raw.copy()
+        next_row = n
+        rng = np.random.default_rng(2)
+        pauses = []
+        for wave in range(WAVES):
+            q, ins, dels = _mixed_wave(rng, live_np, space, ops, read_frac)
+
+            # --- live path: one tick = one write dispatch + one read ---
+            fe.submit_insert(keygen.as_keys(ins, 64),
+                             np.arange(next_row, next_row + len(ins),
+                                       dtype=np.int32))
+            fe.submit_delete(keygen.as_keys(dels, 64))
+            fe.submit_point(keygen.as_keys(q, 64))
+            t0 = time.perf_counter()
+            rep = fe.tick()
+            t_live = time.perf_counter() - t0
+            if rep.compacted:
+                pauses.append(rep.compact_seconds)
+
+            next_row += len(ins)
+            live_np = np.setdiff1d(np.concatenate([live_np, ins]), dels)
+
+            # --- baseline: rebuild a fresh CgrxIndex, then serve reads ---
+            t0 = time.perf_counter()
+            rebuilt = cgrx.build(keygen.as_keys(live_np, 64),
+                                 jnp.arange(len(live_np), dtype=jnp.int32),
+                                 16)
+            plan = QueryBatch().add_points(keygen.as_keys(q, 64)).plan()
+            res = RankEngine(rebuilt).execute(plan)
+            jax.block_until_ready(res.points.row_id)
+            t_reb = time.perf_counter() - t0
+
+            emit(f"live_store_{tag}_wave{wave}", t_live,
+                 f"ops={ops};rebuild={t_reb*1e3:.1f}ms;"
+                 f"speedup={t_reb/max(t_live,1e-9):.2f}x;"
+                 f"epoch={rep.epoch};compacted={rep.compacted or '-'};"
+                 f"chains<={live.store.max_chain}")
+
+        s = live.stats()
+        pause_ms = ";".join(f"{p*1e3:.1f}" for p in pauses) or "-"
+        emit(f"live_store_{tag}_summary", sum(pauses),
+             f"compactions={s.compactions};epoch={s.epoch};"
+             f"live={s.live_keys};fill={s.fill_factor:.2f};"
+             f"pauses_ms={pause_ms}")
+
+        # Sanity: the store still answers exactly like a fresh rebuild.
+        sel = np.random.default_rng(3).integers(0, len(live_np), 256)
+        got = live.lookup(keygen.as_keys(live_np[sel], 64))
+        assert bool(np.asarray(got.found).all()), "live store lost keys"
+
+
+if __name__ == "__main__":
+    main()

@@ -25,6 +25,7 @@ SUITES = [
     ("fig15_updates", "benchmarks.bench_updates"),
     ("kernels", "benchmarks.bench_kernels"),
     ("batched_lookup", "benchmarks.bench_batched_lookup"),
+    ("live_store", "benchmarks.bench_live_store"),
 ]
 
 

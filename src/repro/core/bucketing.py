@@ -51,12 +51,21 @@ class BucketedSet:
         return self.row_ids.reshape(self.num_buckets, self.bucket_size)
 
 
-def build_buckets(keys: KeyArray, row_ids: jnp.ndarray, bucket_size: int) -> BucketedSet:
-    """Sort (keys, row_ids) and partition into buckets (paper Alg. 1 l.1-9)."""
+def build_buckets(keys: KeyArray, row_ids: jnp.ndarray, bucket_size: int,
+                  *, presorted: bool = False) -> BucketedSet:
+    """Sort (keys, row_ids) and partition into buckets (paper Alg. 1 l.1-9).
+
+    ``presorted=True`` skips the sort — the caller asserts ``keys`` is
+    already ascending with ``row_ids`` aligned (e.g. ``nodes.extract``
+    output during a compaction epoch swap).
+    """
     n = keys.shape[0]
     if row_ids is None:
         row_ids = jnp.arange(n, dtype=jnp.int32)
-    skeys, srow = sort_with_payload(keys, row_ids.astype(jnp.int32))
+    if presorted:
+        skeys, srow = keys, row_ids.astype(jnp.int32)
+    else:
+        skeys, srow = sort_with_payload(keys, row_ids.astype(jnp.int32))
 
     num_buckets = max(1, -(-n // bucket_size))  # ceil div
     padded = num_buckets * bucket_size

@@ -74,8 +74,13 @@ class LookupResult(NamedTuple):
 
 
 def build(keys: KeyArray, row_ids: Optional[jnp.ndarray], bucket_size: int,
-          *, fanout_width: int = 128, method: str = "tree") -> CgrxIndex:
-    buckets = build_buckets(keys, row_ids, bucket_size)
+          *, fanout_width: int = 128, method: str = "tree",
+          presorted: bool = False) -> CgrxIndex:
+    """``presorted=True`` skips the construction sort (paper Alg. 1 l.1)
+    when the caller already holds sorted keys — the compaction epoch swap
+    (repro.store) rebuilds from ``nodes.extract`` output, which is sorted
+    by construction."""
+    buckets = build_buckets(keys, row_ids, bucket_size, presorted=presorted)
     tree = fanout.build_tree(buckets.reps, fanout=fanout_width)
     min_rep = buckets.reps[jnp.array([0])]
     max_rep = buckets.reps[jnp.array([buckets.num_buckets - 1])]

@@ -53,6 +53,17 @@ class FanoutTree:
         return sum(l.nbytes for l in self.levels[:-1])
 
 
+# Registered as a pytree so an index carrying a tree can be passed as a
+# jit ARGUMENT (the live store re-binds buffers every update batch; see
+# query/engine.py's shared executable cache) instead of closure-captured.
+jax.tree_util.register_pytree_node(
+    FanoutTree,
+    lambda t: (tuple(t.levels), (t.fanout, t.num_leaves)),
+    lambda aux, ch: FanoutTree(levels=list(ch), fanout=aux[0],
+                               num_leaves=aux[1]),
+)
+
+
 def _pad_to_multiple(keys: KeyArray, multiple: int) -> KeyArray:
     n = keys.shape[0]
     pad = (-n) % multiple

@@ -61,6 +61,7 @@ class NodeStore:
     node_next: jnp.ndarray   # (C,) int32, NO_NODE terminated
     node_size: jnp.ndarray   # (C,) int32
     node_maxkey: KeyArray    # (C,) largest valid key of the node
+    bucket_count: jnp.ndarray  # (num_buckets,) int32 live keys per chain
     reps: KeyArray           # (num_buckets,) immutable representatives
     tree: fanout.FanoutTree  # immutable successor-search tree
     # --- host bookkeeping ---
@@ -76,7 +77,7 @@ class NodeStore:
         out = {
             "node_bytes": self.node_keys.nbytes + self.node_rows.nbytes
             + self.node_next.nbytes + self.node_size.nbytes
-            + self.node_maxkey.nbytes,
+            + self.node_maxkey.nbytes + self.bucket_count.nbytes,
             "rep_bytes": self.reps.nbytes,
             "tree_bytes": self.tree.nbytes,
         }
@@ -90,13 +91,15 @@ class NodeStore:
 
 def build(keys: KeyArray, row_ids: Optional[jnp.ndarray], node_cap: int,
           *, fill: Optional[int] = None, slack: float = 1.0,
-          fanout_width: int = 128) -> NodeStore:
+          fanout_width: int = 128, presorted: bool = False) -> NodeStore:
     """Bulk load with buckets of ``fill`` keys (default N/2, paper's choice:
     'divide them into buckets of size N/2 ... filled until a specified fill
-    state').  ``slack`` scales the linked-node region reservation."""
+    state').  ``slack`` scales the linked-node region reservation;
+    ``presorted`` skips the bulk-load sort (compaction rebuilds from the
+    already-sorted ``extract`` output)."""
     n = keys.shape[0]
     fill = fill or node_cap // 2
-    buckets = build_buckets(keys, row_ids, fill)
+    buckets = build_buckets(keys, row_ids, fill, presorted=presorted)
     nb = buckets.num_buckets
 
     linked = max(int(nb * slack), 16)
@@ -130,6 +133,7 @@ def build(keys: KeyArray, row_ids: Optional[jnp.ndarray], node_cap: int,
         node_keys=node_keys, node_rows=node_rows,
         node_next=jnp.full((C,), NO_NODE, jnp.int32),
         node_size=sizes, node_maxkey=maxkey,
+        bucket_count=jnp.maximum(real, 0).astype(jnp.int32),
         reps=buckets.reps, tree=tree,
         num_buckets=nb, node_cap=N, capacity=C,
         free_ptr=nb, max_chain=1, is64=keys.is64)
@@ -190,18 +194,33 @@ def lookup(store: NodeStore, queries: KeyArray) -> NodeLookupResult:
 # ---------------------------------------------------------------------------
 
 def _walk_chains(store: NodeStore, bucket_ids: np.ndarray) -> np.ndarray:
-    """Host: chain node-id lists (T, max_chain), NO_NODE padded."""
+    """Host: chain node-id lists (T, max_chain), NO_NODE padded.
+
+    Negative bucket ids (shape-padding rows, see ``_pow2``) yield all-
+    invalid chains, so padded rows gather nothing and scatter nothing.
+    """
     nxt = np.asarray(store.node_next)
     T = len(bucket_ids)
     out = np.full((T, store.max_chain), -1, np.int32)
     cur = bucket_ids.astype(np.int32).copy()
-    alive = np.ones(T, bool)
+    alive = bucket_ids >= 0
     for i in range(store.max_chain):
         out[:, i] = np.where(alive, cur, -1)
         nx = np.where(alive, nxt[np.maximum(cur, 0)], -1)
         alive = alive & (nx != -1)
         cur = np.where(nx != -1, nx, cur)
     return out
+
+
+def _pow2(x: int) -> int:
+    """Next power of two: static-shape bucketing for the device program.
+
+    Every distinct (touched count, per-bucket cap) pair is a fresh XLA
+    compilation in eager mode; rounding the host plan's shape knobs up to
+    powers of two makes successive update batches reuse a handful of
+    compiled programs (the long-lived store applies thousands of them).
+    """
+    return 1 << max(int(x) - 1, 0).bit_length()
 
 
 def apply_batch(store: NodeStore,
@@ -225,22 +244,40 @@ def apply_batch(store: NodeStore,
     if del_keys is None:
         del_keys = empty
 
-    # Sort both batches; cancel keys appearing in both (paper).
+    # Sort both batches; cancel keys appearing in both (paper: a key in
+    # both batches is removed from BOTH, so the pair is a no-op and any
+    # pre-existing copy survives — a delete-then-reinsert must not leave
+    # the key tombstoned, see tests/test_nodes.py).  Cancellation is
+    # PAIRWISE on the sorted multisets: the i-th duplicate of a key among
+    # the inserts cancels the i-th among the deletes, surplus occurrences
+    # survive (batches being stably sorted, earlier-submitted duplicates
+    # cancel first).
     if ins_keys.shape[0]:
         ins_keys, ins_rows = sort_with_payload(ins_keys, ins_rows.astype(jnp.int32))
     if del_keys.shape[0]:
         (del_keys,) = sort_with_payload(del_keys)
     if ins_keys.shape[0] and del_keys.shape[0]:
-        p = searchsorted(del_keys, ins_keys, side="left")
-        ps = jnp.minimum(p, del_keys.shape[0] - 1)
-        cancelled = key_eq(del_keys.take(ps), ins_keys) & (p < del_keys.shape[0])
-        # Cancelled inserts become MAX sentinels (sorted to the tail & masked).
-        ins_keys = key_where(cancelled, key_max_sentinel(ins_keys, ins_keys.shape), ins_keys)
-        ins_rows = jnp.where(cancelled, -1, ins_rows)
+        d_lo = searchsorted(del_keys, ins_keys, side="left")
+        d_hi = searchsorted(del_keys, ins_keys, side="right")
+        occ_i = (jnp.arange(ins_keys.shape[0], dtype=jnp.int32)
+                 - searchsorted(ins_keys, ins_keys, side="left"))
+        ins_cancel = occ_i < (d_hi - d_lo)
+        i_lo = searchsorted(ins_keys, del_keys, side="left")
+        i_hi = searchsorted(ins_keys, del_keys, side="right")
+        occ_d = (jnp.arange(del_keys.shape[0], dtype=jnp.int32)
+                 - searchsorted(del_keys, del_keys, side="left"))
+        del_cancel = occ_d < (i_hi - i_lo)
+        # Cancelled entries become MAX sentinels (sorted to the tail & masked).
+        ins_keys = key_where(ins_cancel, key_max_sentinel(ins_keys, ins_keys.shape), ins_keys)
+        ins_rows = jnp.where(ins_cancel, -1, ins_rows)
         ins_keys, ins_rows = sort_with_payload(ins_keys, ins_rows)
-        n_ins = int(jnp.sum(~cancelled))
+        n_ins = int(jnp.sum(~ins_cancel))
+        del_keys = key_where(del_cancel, key_max_sentinel(del_keys, del_keys.shape), del_keys)
+        (del_keys,) = sort_with_payload(del_keys)
+        n_del = int(jnp.sum(~del_cancel))
     else:
         n_ins = ins_keys.shape[0]
+        n_del = del_keys.shape[0]
 
     # Target bucket per key: successor over immutable reps; keys beyond the
     # last rep go to the last bucket.
@@ -252,20 +289,28 @@ def apply_batch(store: NodeStore,
     del_b = targets(del_keys) if del_keys.shape[0] else jnp.zeros((0,), jnp.int32)
     if n_ins < ins_keys.shape[0]:  # keep cancelled sentinels out of buckets
         ins_b = jnp.where(jnp.arange(ins_keys.shape[0]) < n_ins, ins_b, nb)
+    if n_del < del_keys.shape[0]:
+        del_b = jnp.where(jnp.arange(del_keys.shape[0]) < n_del, del_b, nb)
 
     # ---- host planning: touched buckets + static caps ----
     ins_b_np = np.asarray(ins_b)[:n_ins]
-    del_b_np = np.asarray(del_b)
+    del_b_np = np.asarray(del_b)[:n_del]
     touched = np.unique(np.concatenate([ins_b_np, del_b_np])).astype(np.int32)
     if len(touched) == 0:
         return store
-    T = len(touched)
+    # Pad the plan to power-of-two shapes (see _pow2): padded rows carry
+    # bucket id -1 -> invalid chains, empty batch slices, no allocation,
+    # masked scatters — fully inert.
+    n_touched = len(touched)
+    T = _pow2(n_touched)
+    touched = np.concatenate(
+        [touched, np.full(T - n_touched, -1, np.int32)])
     ins_start = np.searchsorted(ins_b_np, touched, side="left").astype(np.int32)
     ins_end = np.searchsorted(ins_b_np, touched, side="right").astype(np.int32)
     del_start = np.searchsorted(del_b_np, touched, side="left").astype(np.int32)
     del_end = np.searchsorted(del_b_np, touched, side="right").astype(np.int32)
-    cap_ins = max(int((ins_end - ins_start).max()) if T else 0, 1)
-    cap_del = max(int((del_end - del_start).max()) if T else 0, 1)
+    cap_ins = _pow2(max(int((ins_end - ins_start).max()), 1))
+    cap_del = _pow2(max(int((del_end - del_start).max()), 1))
 
     chains = _walk_chains(store, touched)                  # (T, max_chain)
     chain_valid = chains >= 0
@@ -329,8 +374,11 @@ def apply_batch(store: NodeStore,
     counts = jnp.sum(keep, axis=1) + jnp.sum(ivalid, axis=1)       # (T,)
 
     # ---- chain layout: reuse rep node + old linked nodes, then alloc ----
-    need_nodes = jnp.maximum(-(-counts // fill_target), 1)          # ceil
+    # Real buckets keep >= 1 node (the rep-region head survives even when
+    # emptied); shape-padding rows (no valid chain) need none.
     have_nodes = jnp.sum(cv, axis=1)
+    need_nodes = jnp.where(have_nodes > 0,
+                           jnp.maximum(-(-counts // fill_target), 1), 0)
     extra = jnp.maximum(need_nodes - have_nodes, 0)
     extra_np = np.asarray(extra)
     alloc_off = np.concatenate([[0], np.cumsum(extra_np)[:-1]]).astype(np.int32)
@@ -404,11 +452,17 @@ def apply_batch(store: NodeStore,
                     jnp.roll(chain2, -1, axis=1), NO_NODE).astype(jnp.int32)
     store_nx = scat(store.node_next, nxt.reshape(-1))
 
+    # Shape-padding rows scatter to index nb (out of bounds -> dropped).
+    t_idx = jnp.asarray(np.where(touched >= 0, touched, nb))
+    bcount = store.bucket_count.at[t_idx].set(
+        counts.astype(jnp.int32), mode="drop")
+
     return dataclasses.replace(
         store,
         node_keys=KeyArray(store_nk_lo, store_nk_hi),
         node_rows=store_nr, node_next=store_nx, node_size=store_sz,
         node_maxkey=KeyArray(store_mk_lo, store_mk_hi),
+        bucket_count=bcount,
         free_ptr=store.free_ptr + total_new,
         max_chain=mc2)
 
@@ -433,6 +487,11 @@ def _grow(store: NodeStore, needed: int) -> NodeStore:
 # Full rebuild (paper's baseline for Fig. 15): extract + bulk-load.
 # ---------------------------------------------------------------------------
 
+def live_count(store: NodeStore) -> jnp.ndarray:
+    """Device scalar: number of live keys across all chains."""
+    return jnp.sum(store.bucket_count)
+
+
 def extract(store: NodeStore) -> Tuple[KeyArray, jnp.ndarray, int]:
     """All live key/rowID pairs, sorted, plus the live count."""
     flat_keys = store.node_keys.reshape(-1)
@@ -449,4 +508,5 @@ def extract(store: NodeStore) -> Tuple[KeyArray, jnp.ndarray, int]:
 
 def rebuild(store: NodeStore) -> NodeStore:
     skeys, srows, n_live = extract(store)
-    return build(skeys[:n_live], srows[:n_live], store.node_cap)
+    return build(skeys[:n_live], srows[:n_live], store.node_cap,
+                 presorted=True)

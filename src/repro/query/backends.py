@@ -31,19 +31,26 @@ and the layering acyclic: core -> kernels -> query -> serving.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Protocol, runtime_checkable
+from typing import Callable, Dict, List, Optional, Protocol, runtime_checkable
 
 import jax.numpy as jnp
 
 from repro.core import fanout
-from repro.core.keys import KeyArray, key_le, key_lt, searchsorted
+from repro.core.keys import KeyArray, key_eq, key_le, key_lt, searchsorted
 
 
 @runtime_checkable
 class Backend(Protocol):
-    """A successor-search implementation (paper Alg. 2 stages 1+2)."""
+    """A successor-search implementation (paper Alg. 2 stages 1+2).
+
+    ``kind`` names the index shape a backend serves: 'flat' backends rank
+    over a flat ``BucketedSet`` (CgrxIndex-like duck types); 'node'
+    backends rank over chained node buckets (NodeStore-like duck types,
+    see ``NodeBackend``).
+    """
 
     name: str
+    kind: str
 
     def rep_search(self, index, queries: KeyArray, side: str) -> jnp.ndarray:
         """searchsorted index of each query into the rep array [0..nb]."""
@@ -83,8 +90,11 @@ def get_backend(name: str) -> Backend:
         ) from None
 
 
-def available_backends() -> List[str]:
-    return sorted(_REGISTRY)
+def available_backends(kind: Optional[str] = None) -> List[str]:
+    """Registered backend names, optionally filtered by ``kind``
+    ('flat' = CgrxIndex-shaped indexes, 'node' = chained node stores)."""
+    return sorted(n for n, b in _REGISTRY.items()
+                  if kind is None or b.kind == kind)
 
 
 def compose_rank(index, b: jnp.ndarray, inb: jnp.ndarray) -> jnp.ndarray:
@@ -102,6 +112,7 @@ class _BackendBase:
     """Shared compose/post-filter logic; subclasses supply rep_search."""
 
     name = "?"
+    kind = "flat"
 
     def rep_search(self, index, queries: KeyArray, side: str) -> jnp.ndarray:
         raise NotImplementedError
@@ -179,6 +190,99 @@ class KernelBackend(_BackendBase):
         from repro.kernels import ops as kops
 
         return kops.rank_fused(index.buckets, queries, sides)
+
+
+@register
+class NodeBackend(_BackendBase):
+    """Chain-aware rank over the updatable node store (paper Sec. 4).
+
+    The rep successor search is unchanged from the flat backends — the
+    accelerated structure is immutable under updates, the paper's whole
+    point — and is delegated per ``index.rep_method`` ('tree' fanout
+    descent, 'binary' searchsorted, 'kernel' the Pallas hierarchical
+    successor kernel, i.e. the same representative-search stage the fused
+    kernel runs).  The post-filter then walks the bucket's node chain
+    with the store's static ``max_chain`` bound, counting per node, and
+    the global rank composes against ``bucket_prefix`` (exclusive prefix
+    sum of per-bucket live counts) instead of ``b * B`` — chained buckets
+    have variable live sizes.
+
+    The duck-typed ``index`` must expose: ``reps``/``tree`` (immutable
+    search structure), ``node_keys``/``node_rows``/``node_next``/
+    ``node_size`` (the chain slab), ``node_cap``/``max_chain``/
+    ``num_buckets`` (static bounds), ``bucket_prefix`` ((nb,) int32,
+    exclusive) and ``rep_method``.  ``repro.store.live.NodeIndexView``
+    is the canonical provider.
+    """
+
+    name = "node"
+    kind = "node"
+
+    NO_NODE = -1  # chain terminator, == core.nodes.NO_NODE
+
+    def rep_search(self, index, queries: KeyArray, side: str) -> jnp.ndarray:
+        method = getattr(index, "rep_method", "tree")
+        if method == "kernel":
+            from repro.kernels import ops as kops
+
+            return kops.successor_search(index.reps, queries, side=side)
+        if method == "binary":
+            return searchsorted(index.reps, queries, side=side)
+        return fanout.descend(index.tree, queries, side=side)
+
+    def _chain_count(self, index, bucket_id: jnp.ndarray, queries: KeyArray,
+                     sides: Optional[jnp.ndarray], side: str) -> jnp.ndarray:
+        """#keys (<|<=) q across bucket ``bucket_id``'s whole chain.
+
+        Bounded walk (static ``max_chain`` unroll, like ``nodes.lookup``);
+        occupancy masks make the count exact without sentinel tricks.
+        """
+        N = index.node_cap
+        lane = jnp.arange(N, dtype=jnp.int32)
+        node = jnp.minimum(bucket_id, index.num_buckets - 1).astype(jnp.int32)
+        qb = KeyArray(queries.lo[..., None],
+                      None if queries.hi is None else queries.hi[..., None])
+        total = jnp.zeros(queries.shape, jnp.int32)
+        alive = jnp.ones(queries.shape, bool)
+        for _ in range(max(index.max_chain, 1)):
+            keys = index.node_keys.take(node[..., None] * N + lane)
+            if sides is None:
+                cmp = key_le if side == "right" else key_lt
+                hit = cmp(keys, qb)
+            else:  # per-lane mixed sides: le where side==1, lt where 0
+                hit = key_lt(keys, qb) | ((sides[..., None] != 0)
+                                          & key_eq(keys, qb))
+            occ = lane < index.node_size[node][..., None]
+            total += jnp.sum((hit & occ & alive[..., None]).astype(jnp.int32),
+                             axis=-1)
+            nxt = index.node_next[node]
+            alive = alive & (nxt != self.NO_NODE)
+            node = jnp.where(nxt != self.NO_NODE, nxt, node)
+        return total
+
+    def bucket_count(self, index, bucket_id: jnp.ndarray, queries: KeyArray,
+                     side: str) -> jnp.ndarray:
+        return self._chain_count(index, bucket_id, queries, None, side)
+
+    def _compose(self, index, b: jnp.ndarray, inb: jnp.ndarray) -> jnp.ndarray:
+        bc = jnp.minimum(b, index.num_buckets - 1)
+        return (jnp.take(index.bucket_prefix, bc, mode="clip")
+                + inb).astype(jnp.int32)
+
+    def rank(self, index, queries: KeyArray, side: str = "left") -> jnp.ndarray:
+        b = self.rep_search(index, queries, side)
+        inb = self.bucket_count(index, b, queries, side)
+        return self._compose(index, b, inb)
+
+    def rank_batch(self, index, queries: KeyArray,
+                   sides: jnp.ndarray) -> jnp.ndarray:
+        # Two cheap rep searches (immutable structure), ONE chain walk
+        # with a per-lane side predicate — the walk dominates.
+        b_left = self.rep_search(index, queries, "left")
+        b_right = self.rep_search(index, queries, "right")
+        b = jnp.where(sides != 0, b_right, b_left)
+        inb = self._chain_count(index, b, queries, sides, "left")
+        return self._compose(index, b, inb)
 
 
 # ---------------------------------------------------------------------------

@@ -17,6 +17,7 @@ every backend (enforced by tests/test_query_engine.py).
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -34,6 +35,38 @@ class BatchResult(NamedTuple):
 
     points: "cgrx.LookupResult"   # fields shaped (n_point,)
     ranges: "cgrx.RangeResult"    # fields shaped (n_range,) / (n_range, max_hits)
+
+
+def _make_run(backend: "Backend", n_point: int, n_range: int, max_hits: int):
+    """The engine pipeline as a pure function of (index, lanes).
+
+    Post-processing is duck-typed: an index may carry its own
+    rank->result mapping (the node store's chain-position walk,
+    ``repro.store.live.NodeIndexView``); flat CgrxIndex-shaped indexes
+    fall back to cgrx's shared helpers — bit-identity by construction
+    either way.
+    """
+
+    def run(index, q_lo, q_hi, sides):
+        queries = KeyArray(q_lo, q_hi)
+        ranks = backend.rank_batch(index, queries, sides)
+        lookup_from_rank = getattr(index, "lookup_from_rank", None) \
+            or partial(cgrx.lookup_from_rank, index)
+        range_from_ranks = getattr(index, "range_from_ranks", None) \
+            or partial(cgrx.range_from_ranks, index)
+        points = lookup_from_rank(ranks[:n_point], queries[:n_point])
+        ranges = range_from_ranks(
+            ranks[n_point:n_point + n_range],
+            ranks[n_point + n_range:n_point + 2 * n_range], max_hits)
+        return BatchResult(points=points, ranges=ranges)
+
+    return run
+
+
+# Process-wide executable cache for PYTREE indexes (argument-passed): one
+# jitted pipeline per (backend, plan signature); jax.jit's own cache then
+# specializes per index treedef/shape, so successive store versions hit.
+_SHARED_EXEC: Dict[Tuple, object] = {}
 
 
 class RankEngine:
@@ -71,21 +104,31 @@ class RankEngine:
         return fn(plan.keys.lo, plan.keys.hi, plan.sides)
 
     def _build_exec(self, n_point: int, n_range: int, max_hits: int):
-        index, backend = self.index, self.backend
+        index = self.index
+        run = _make_run(self.backend, n_point, n_range, max_hits)
+        if not jax.tree_util.treedef_is_leaf(
+                jax.tree_util.tree_structure(index)):
+            # Pytree index (the live store's NodeIndexView): pass it as a
+            # jit ARGUMENT through a process-wide executable cache.  The
+            # store re-binds its buffers on every update batch, so
+            # closure capture would re-trace per version; argument
+            # passing lets every version with unchanged static bounds
+            # (treedef aux + shapes) share one compiled executable.
+            if self._jit:
+                key = (self.backend_name, n_point, n_range, max_hits)
+                jitted = _SHARED_EXEC.get(key)
+                if jitted is None:
+                    jitted = jax.jit(run)
+                    _SHARED_EXEC[key] = jitted
+                run = jitted
+            return lambda q_lo, q_hi, sides: run(index, q_lo, q_hi, sides)
 
-        def run(q_lo, q_hi, sides):
-            queries = KeyArray(q_lo, q_hi)
-            ranks = backend.rank_batch(index, queries, sides)
-            # Post-processing is cgrx's own (shared helpers), applied to
-            # the plan's lane slices — bit-identity by construction.
-            points = cgrx.lookup_from_rank(
-                index, ranks[:n_point], queries[:n_point])
-            ranges = cgrx.range_from_ranks(
-                index, ranks[n_point:n_point + n_range],
-                ranks[n_point + n_range:n_point + 2 * n_range], max_hits)
-            return BatchResult(points=points, ranges=ranges)
+        # Flat CgrxIndex-shaped indexes are not pytrees: closure-capture
+        # the buffers as compile-time constants (never re-uploaded).
+        def run_closed(q_lo, q_hi, sides):
+            return run(index, q_lo, q_hi, sides)
 
-        return jax.jit(run) if self._jit else run
+        return jax.jit(run_closed) if self._jit else run_closed
 
     # -- conveniences (single-kind batches) ----------------------------------
 

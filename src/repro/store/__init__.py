@@ -1,0 +1,37 @@
+"""Live index store: the lifecycle layer over the paper's update mechanism.
+
+``core/nodes.py`` reproduces the paper's Sec. 4 mechanics (bucket-local
+chain updates under an immutable accelerated structure); this package
+turns them into one long-lived, updatable, queryable index:
+
+``live``        ``LiveIndex`` — epoch-versioned CgrxIndex snapshot +
+                NodeStore delta; insert/delete/lookup/range_lookup with
+                every read served through the batched rank engine
+                (``NodeIndexView`` adapts chains to the 'node' backend);
+``compaction``  trigger policy (chain length / fill factor / tombstone
+                ratio) + the begin/finish epoch-swap task that rebuilds
+                off the read path and replays mid-compaction writes;
+``metrics``     ``LiveStats``, the operator-facing stats surface;
+``frontend``    ``LiveFrontend`` — tick-based mixed-op queue, one device
+                dispatch per op class per tick (serving/engine.py's
+                admission pattern applied to the index itself).
+
+See docs/ARCHITECTURE.md ("Live store") for the epoch diagram.
+"""
+from .compaction import CompactionPolicy, CompactionTask, should_compact
+from .frontend import LiveFrontend, TickReport
+from .live import LiveConfig, LiveIndex, NodeIndexView
+from .metrics import LiveStats, collect
+
+__all__ = [
+    "CompactionPolicy",
+    "CompactionTask",
+    "LiveConfig",
+    "LiveFrontend",
+    "LiveIndex",
+    "LiveStats",
+    "NodeIndexView",
+    "TickReport",
+    "collect",
+    "should_compact",
+]

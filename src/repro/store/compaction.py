@@ -1,0 +1,84 @@
+"""Compaction policy + epoch-swap task for the live index store.
+
+The paper's update mechanism (Sec. 4) trades lookup cost for update cost:
+chains grow, every lookup pays the ``max_chain`` walk bound, and deleted
+slots leave the slab under-filled.  A long-lived store therefore needs a
+policy for when to fold the degraded chains back into a fresh bulk-loaded
+index — the paper's own Fig. 15 rebuild baseline, run *off the read path*
+as an epoch swap:
+
+    trigger  ->  begin: extract() the live set (a consistent cut)
+             ->  ... reads AND writes keep hitting the old epoch ...
+             ->  finish: bulk-load new store + snapshot from the cut,
+                 replay the writes that landed mid-compaction, swap,
+                 epoch += 1
+
+``CompactionPolicy`` holds the trigger thresholds; ``should_compact``
+evaluates them against a ``LiveStats`` snapshot and returns the firing
+trigger's name (or ``None``).  ``CompactionTask`` is the in-flight state
+between begin and finish — `LiveIndex` drives the lifecycle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.keys import KeyArray
+
+from .metrics import LiveStats
+
+
+@dataclasses.dataclass(frozen=True)
+class CompactionPolicy:
+    """Trigger thresholds; any ``None`` disables that trigger.
+
+    ``max_chain``       compact when the chain-length bound reaches this
+                        (every lookup walks up to ``max_chain`` nodes);
+    ``min_fill``        compact when live keys per allocated slot drop
+                        below this (deletions fragmented the slab);
+    ``max_tombstone_ratio``  compact when deletes since the last epoch
+                        exceed this fraction of the live set;
+    ``min_live_keys``   never compact below this size (tiny stores churn).
+    """
+
+    max_chain: Optional[int] = 4
+    min_fill: Optional[float] = 0.25
+    max_tombstone_ratio: Optional[float] = 0.5
+    min_live_keys: int = 64
+
+    def never(self) -> "CompactionPolicy":
+        """A copy with every trigger disabled (manual compaction only)."""
+        return CompactionPolicy(max_chain=None, min_fill=None,
+                                max_tombstone_ratio=None,
+                                min_live_keys=self.min_live_keys)
+
+
+def should_compact(policy: CompactionPolicy, stats: LiveStats) -> Optional[str]:
+    """Name of the firing trigger ('chain' | 'fill' | 'tombstone'), or
+    ``None`` when the store is healthy (or too small to bother)."""
+    if stats.live_keys < policy.min_live_keys:
+        return None
+    if policy.max_chain is not None and stats.max_chain >= policy.max_chain:
+        return "chain"
+    if policy.min_fill is not None and stats.fill_factor < policy.min_fill:
+        return "fill"
+    if (policy.max_tombstone_ratio is not None
+            and stats.tombstone_ratio > policy.max_tombstone_ratio):
+        return "tombstone"
+    return None
+
+
+@dataclasses.dataclass
+class CompactionTask:
+    """In-flight epoch swap: the consistent cut taken at ``begin`` plus
+    the update batches that arrive while the rebuild runs (replayed onto
+    the new epoch at ``finish``)."""
+
+    reason: str
+    epoch_at_begin: int
+    keys: KeyArray              # sorted live keys at begin (n_live,)
+    rows: jnp.ndarray           # aligned rowIDs
+    n_live: int
+    replay: List[Tuple] = dataclasses.field(default_factory=list)

@@ -1,0 +1,220 @@
+"""Tick-based mixed-workload frontend over a LiveIndex.
+
+Mirrors the serving engine's admission discipline (serving/engine.py):
+requests of all four kinds — point lookup, range lookup, insert, delete —
+queue between ticks, and each ``tick()`` drains them with one device
+dispatch per op class:
+
+    writes:  ONE ``nodes.apply_batch`` covering every insert AND delete
+             submitted this tick (deletions-before-insertions semantics,
+             insert∩delete pairs cancel);
+    reads:   ONE ``RankEngine.execute`` over a QueryBatch coalescing all
+             points and ranges into a single padded lane batch;
+    policy:  one compaction check (the pause, when it fires, is timed and
+             reported — the number bench_live_store.py plots).
+
+Within a tick, writes land before reads: a lookup submitted in the same
+tick as an insert of its key hits.  Tickets are dense ints; results are
+retrievable (once) after the tick that served them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cgrx
+from repro.core.keys import KeyArray, concat_keys
+from repro.query import QueryBatch
+
+from .live import LiveIndex
+
+
+def _empty_points() -> cgrx.LookupResult:
+    z = jnp.zeros((0,), jnp.int32)
+    return cgrx.LookupResult(bucket_id=z, row_id=z,
+                             found=jnp.zeros((0,), bool), position=z)
+
+
+def _empty_ranges(max_hits: int) -> cgrx.RangeResult:
+    z = jnp.zeros((0,), jnp.int32)
+    return cgrx.RangeResult(start=z, count=z,
+                            row_ids=jnp.zeros((0, max_hits), jnp.int32))
+
+
+@dataclasses.dataclass(frozen=True)
+class TickReport:
+    """What one ``tick()`` did and what it cost."""
+
+    tick: int
+    epoch: int                 # epoch serving this tick's reads
+    n_point: int
+    n_range: int
+    n_insert: int
+    n_delete: int
+    compacted: Optional[str]   # firing trigger name, or None
+    update_seconds: float      # apply_batch wall time
+    lookup_seconds: float      # engine execute wall time
+    compact_seconds: float     # epoch-swap pause (0.0 when none fired)
+
+
+class LiveFrontend:
+    """Queue + tick loop driving a ``LiveIndex`` like a service."""
+
+    def __init__(self, live: LiveIndex, max_hits: int = 64):
+        self.live = live
+        self.max_hits = max_hits
+        self._next_ticket = 0
+        self._tick = 0
+        self._points: List[Tuple[int, KeyArray]] = []
+        self._ranges: List[Tuple[int, KeyArray, KeyArray]] = []
+        self._ins: List[Tuple[int, KeyArray, jnp.ndarray]] = []
+        self._dels: List[Tuple[int, KeyArray]] = []
+        self._results: Dict[int, object] = {}
+
+    # -- submission -----------------------------------------------------------
+
+    def _ticket(self) -> int:
+        t = self._next_ticket
+        self._next_ticket += 1
+        return t
+
+    # Zero-length submissions resolve immediately (an empty result / an
+    # applied-count of 0) instead of queueing: a tick with only empty ops
+    # dispatches nothing, so their tickets would otherwise never settle.
+
+    def submit_point(self, keys: KeyArray) -> int:
+        t = self._ticket()
+        if int(keys.shape[0]) == 0:
+            self._results[t] = _empty_points()
+        else:
+            self._points.append((t, keys))
+        return t
+
+    def submit_range(self, lo: KeyArray, hi: KeyArray) -> int:
+        if lo.shape != hi.shape:
+            raise ValueError("range lo/hi shapes differ")
+        t = self._ticket()
+        if int(lo.shape[0]) == 0:
+            self._results[t] = _empty_ranges(self.max_hits)
+        else:
+            self._ranges.append((t, lo, hi))
+        return t
+
+    def submit_insert(self, keys: KeyArray, rows: jnp.ndarray) -> int:
+        t = self._ticket()
+        if int(keys.shape[0]) == 0:
+            self._results[t] = 0
+        else:
+            self._ins.append((t, keys, jnp.asarray(rows, jnp.int32)))
+        return t
+
+    def submit_delete(self, keys: KeyArray) -> int:
+        t = self._ticket()
+        if int(keys.shape[0]) == 0:
+            self._results[t] = 0
+        else:
+            self._dels.append((t, keys))
+        return t
+
+    @property
+    def pending(self) -> int:
+        return (len(self._points) + len(self._ranges)
+                + len(self._ins) + len(self._dels))
+
+    # -- results --------------------------------------------------------------
+
+    def result(self, ticket: int):
+        """Pop a served request's result.
+
+        Points -> ``cgrx.LookupResult``; ranges -> ``cgrx.RangeResult``
+        (fields sliced to the submission's shape); writes -> the
+        submitted batch size (NOT the net change: cancelled pairs and
+        deletes of absent keys still count).  Raises KeyError while
+        still queued/unserved.
+        """
+        return self._results.pop(ticket)
+
+    # -- the tick -------------------------------------------------------------
+
+    def tick(self) -> TickReport:
+        points, self._points = self._points, []
+        ranges, self._ranges = self._ranges, []
+        ins, self._ins = self._ins, []
+        dels, self._dels = self._dels, []
+
+        n_insert = sum(int(k.shape[0]) for _, k, _ in ins)
+        n_delete = sum(int(k.shape[0]) for _, k in dels)
+        n_point = sum(int(k.shape[0]) for _, k in points)
+        n_range = sum(int(lo.shape[0]) for _, lo, _ in ranges)
+
+        # ---- writes first: one apply_batch for the whole tick ----
+        t0 = time.perf_counter()
+        if n_insert or n_delete:
+            ik = ir = dk = None
+            if ins:
+                ik = _concat([k for _, k, _ in ins])
+                ir = jnp.concatenate([r for _, _, r in ins])
+            if dels:
+                dk = _concat([k for _, k in dels])
+            self.live.apply(ik, ir, dk, auto_compact=False)
+            jax.block_until_ready(self.live.store.node_keys.lo)
+            for t, k, _ in ins:
+                self._results[t] = int(k.shape[0])
+            for t, k in dels:
+                self._results[t] = int(k.shape[0])
+        t_update = time.perf_counter() - t0
+
+        # ---- compaction check (the pause, when it fires) ----
+        t0 = time.perf_counter()
+        compacted = self.live.maybe_compact() if (n_insert or n_delete) else None
+        if compacted:
+            jax.block_until_ready(self.live.store.node_keys.lo)
+        t_compact = time.perf_counter() - t0
+
+        # ---- reads: one engine call for all points + ranges ----
+        t0 = time.perf_counter()
+        if n_point or n_range:
+            batch = QueryBatch()
+            for _, k in points:
+                batch.add_points(k)
+            for _, lo, hi in ranges:
+                batch.add_ranges(lo, hi)
+            res = self.live.execute(batch.plan(max_hits=self.max_hits))
+            jax.block_until_ready(res.points.row_id if n_point
+                                  else res.ranges.row_ids)
+            off = 0
+            for t, k in points:
+                m = int(k.shape[0])
+                self._results[t] = _slice_tuple(res.points, off, off + m)
+                off += m
+            off = 0
+            for t, lo, _ in ranges:
+                m = int(lo.shape[0])
+                self._results[t] = _slice_tuple(res.ranges, off, off + m)
+                off += m
+        t_lookup = time.perf_counter() - t0
+
+        self._tick += 1
+        return TickReport(tick=self._tick - 1, epoch=self.live.epoch,
+                          n_point=n_point, n_range=n_range,
+                          n_insert=n_insert, n_delete=n_delete,
+                          compacted=compacted, update_seconds=t_update,
+                          lookup_seconds=t_lookup,
+                          compact_seconds=t_compact if compacted else 0.0)
+
+
+def _concat(parts: List[KeyArray]) -> KeyArray:
+    out = parts[0]
+    for p in parts[1:]:
+        out = concat_keys(out, p)
+    return out
+
+
+def _slice_tuple(res, lo: int, hi: int):
+    """Slice every field of a NamedTuple result along axis 0."""
+    return type(res)(*(f[lo:hi] for f in res))

@@ -1,0 +1,391 @@
+"""LiveIndex: a long-lived, updatable, queryable cgRX index.
+
+The paper proves the *mechanism* (Sec. 4: bucket-local chain updates under
+an immutable accelerated structure, up to 5.6x faster than rebuilding);
+this module supplies the *lifecycle* that makes the mechanism a store:
+
+    epoch snapshot (immutable CgrxIndex)  +  node-chain delta (NodeStore)
+    -----------------------------------------------------------------
+    insert/delete   ->  nodes.apply_batch   (bucket-local, reps untouched)
+    lookup/range    ->  query.RankEngine over the 'node' backend
+                        (chain-aware rank; see NodeIndexView below)
+    point-in-time   ->  snapshot_reader(): the epoch base as a consistent
+                        immutable view (excludes the chain delta)
+    degradation     ->  compaction policy fires -> extract() a consistent
+                        cut -> bulk-load a fresh epoch off the read path
+                        -> replay mid-compaction writes -> swap
+
+Every read is served through the batched rank engine (repro.query): the
+``NodeIndexView`` adapts a ``NodeStore`` to the engine's duck-typed index
+protocol — rep search + chain-walk rank via the registered 'node' backend,
+and rank->result post-processing (``lookup_from_rank``/``range_from_ranks``)
+via the chain-position walk, which is what makes *range lookups over the
+updatable store* possible at all: a global rank maps to (bucket, node,
+slot) through the bucket-count prefix and a static ``max_chain``-bounded
+descent, exactly the shape of ``nodes.lookup``.
+
+Results are bit-identical to a from-scratch ``cgrx.build`` over the same
+live set (tests/test_live_store.py): ranks agree because both rank the
+same sorted multiset, rows agree because chain-linearized order IS sorted
+order.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cgrx, nodes
+from repro.core.keys import KeyArray, key_eq, sort_with_payload
+from repro.query import QueryBatch, RankEngine
+
+from . import metrics
+from .compaction import CompactionPolicy, CompactionTask, should_compact
+
+NO_NODE = int(nodes.NO_NODE)
+MISS = nodes.MISS
+
+
+@jax.tree_util.register_pytree_node_class
+class NodeIndexView:
+    """Adapts a ``NodeStore`` to the query engine's index protocol.
+
+    Provides (a) the attributes the 'node' backend ranks against —
+    ``reps``/``tree``/``node_*``/``bucket_prefix`` — and (b) the
+    rank->result hooks the engine post-processes with.  Registered as a
+    pytree so the engine can pass it as a jit ARGUMENT: the store re-binds
+    buffers on every update batch, and argument-passing lets successive
+    versions reuse one compiled executable (see query/engine.py's shared
+    cache) instead of re-tracing closure-captured constants.  Static walk
+    bounds (``node_cap``/``max_chain``/``num_buckets``) live in the
+    pytree aux data, so only a chain-growth or slab-growth event retraces.
+    """
+
+    def __init__(self, store: nodes.NodeStore, rep_method: str = "tree"):
+        self.method = "node"          # RankEngine's default backend name
+        self.rep_method = rep_method  # 'tree' | 'binary' | 'kernel'
+        # Chain-aware rank surface (see query.backends.NodeBackend).
+        self.reps = store.reps
+        self.tree = store.tree
+        self.node_keys = store.node_keys
+        self.node_rows = store.node_rows
+        self.node_next = store.node_next
+        self.node_size = store.node_size
+        self.node_cap = store.node_cap
+        self.max_chain = store.max_chain
+        self.num_buckets = store.num_buckets
+        incl = jnp.cumsum(store.bucket_count.astype(jnp.int32))
+        self.bucket_prefix = incl - store.bucket_count  # exclusive, (nb,)
+        self.n_dev = incl[-1]                           # live total (device)
+
+    # -- pytree protocol ------------------------------------------------------
+
+    def tree_flatten(self):
+        children = (self.node_keys, self.node_rows, self.node_next,
+                    self.node_size, self.reps, self.tree,
+                    self.bucket_prefix, self.n_dev)
+        aux = (self.node_cap, self.max_chain, self.num_buckets,
+               self.rep_method, self.method)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        view = object.__new__(cls)
+        (view.node_keys, view.node_rows, view.node_next, view.node_size,
+         view.reps, view.tree, view.bucket_prefix, view.n_dev) = children
+        (view.node_cap, view.max_chain, view.num_buckets,
+         view.rep_method, view.method) = aux
+        return view
+
+    @property
+    def n(self) -> int:
+        """Host live-key count (one small device sync)."""
+        return int(self.n_dev)
+
+    # -- rank -> (bucket, node, slot) -----------------------------------------
+
+    def _locate(self, pos: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                                 jnp.ndarray]:
+        """Map global live-order positions to chain slots.
+
+        Bucket = rightmost b with prefix[b] <= pos (searchsorted 'right'
+        naturally skips emptied buckets), then a bounded chain descent
+        subtracting node sizes — the mirror image of the rank walk.
+        """
+        b = jnp.searchsorted(self.bucket_prefix, pos, side="right") - 1
+        b = jnp.clip(b, 0, self.num_buckets - 1).astype(jnp.int32)
+        rem = pos.astype(jnp.int32) - jnp.take(self.bucket_prefix, b,
+                                               mode="clip")
+        node = b
+        for _ in range(max(self.max_chain - 1, 0)):
+            sz = self.node_size[node]
+            nxt = self.node_next[node]
+            go = (rem >= sz) & (nxt != NO_NODE)
+            rem = jnp.where(go, rem - sz, rem)
+            node = jnp.where(go, nxt, node)
+        slot = jnp.minimum(rem, self.node_cap - 1)
+        return b, node, slot
+
+    # -- engine post-processing hooks -----------------------------------------
+
+    def lookup_from_rank(self, pos: jnp.ndarray,
+                         queries: KeyArray) -> cgrx.LookupResult:
+        """rank_left positions -> LookupResult over the chained store
+        (the node-store analogue of ``cgrx.lookup_from_rank``)."""
+        in_range = pos < self.n_dev
+        safe = jnp.minimum(pos, jnp.maximum(self.n_dev - 1, 0))
+        b, node, slot = self._locate(safe)
+        flat = node * self.node_cap + slot
+        hit_keys = self.node_keys.reshape(-1).take(flat)
+        found = in_range & key_eq(hit_keys, queries)
+        row = jnp.where(found, self.node_rows.reshape(-1)[flat], MISS)
+        return cgrx.LookupResult(bucket_id=b.astype(jnp.int32),
+                                 row_id=row.astype(jnp.int32),
+                                 found=found,
+                                 position=pos.astype(jnp.int32))
+
+    def range_from_ranks(self, start: jnp.ndarray, end: jnp.ndarray,
+                         max_hits: int) -> cgrx.RangeResult:
+        """(rank_left(lo), rank_right(hi)) -> RangeResult by walking the
+        touched chains: each of the ``max_hits`` candidate positions is
+        located independently (static-shape gather), so one range costs
+        O(max_hits * max_chain) lane work — the chained-store analogue of
+        the paper's 'one successor search + sequential scan' (Sec. 3.2)."""
+        count = jnp.maximum(end - start, 0)
+        offs = start[..., None] + jnp.arange(max_hits, dtype=jnp.int32)
+        valid = jnp.arange(max_hits, dtype=jnp.int32) < count[..., None]
+        safe = jnp.minimum(offs, jnp.maximum(self.n_dev - 1, 0))
+        _, node, slot = self._locate(safe)
+        rows = self.node_rows.reshape(-1)[node * self.node_cap + slot]
+        rows = jnp.where(valid, rows, MISS)
+        return cgrx.RangeResult(start=start.astype(jnp.int32),
+                                count=count.astype(jnp.int32), row_ids=rows)
+
+
+@dataclasses.dataclass(frozen=True)
+class LiveConfig:
+    """Build/serve knobs of a ``LiveIndex``."""
+
+    node_cap: int = 32                  # N: slots per chain node
+    fill: Optional[int] = None          # bulk-load fill (default N/2)
+    snapshot_bucket_size: int = 16      # B of the immutable epoch snapshot
+    rep_method: str = "tree"            # successor search: tree|binary|kernel
+    policy: CompactionPolicy = dataclasses.field(
+        default_factory=CompactionPolicy)
+    auto_compact: bool = True           # evaluate policy after every apply
+    jit: bool = True                    # jit the engine: the view is a
+                                        # pytree jit ARGUMENT, so store
+                                        # versions share one executable
+
+
+class LiveIndex:
+    """One long-lived updatable index: epoch snapshot + chain delta.
+
+    All state transitions are functional underneath (``nodes.apply_batch``
+    returns a new ``NodeStore``); this handle owns the current version,
+    the epoch counter, the compaction lifecycle and the engine cache.
+
+    Usage::
+
+        live = LiveIndex.build(keys, rows)
+        live.insert(new_keys, new_rows)
+        live.delete(old_keys)                       # policy may compact
+        res = live.lookup(point_keys)               # via RankEngine
+        rng = live.range_lookup(lo, hi, max_hits=64)
+        live.stats()                                # metrics.LiveStats
+    """
+
+    def __init__(self, store: nodes.NodeStore, snapshot: cgrx.CgrxIndex,
+                 config: LiveConfig, epoch: int = 0):
+        self.store = store
+        self.snapshot = snapshot
+        self.config = config
+        self.epoch = epoch
+        # metrics counters (read by store/metrics.collect)
+        self.applies = 0
+        self.inserts = 0
+        self.deletes = 0
+        self.deletes_since_compact = 0
+        self.compactions = 0
+        self._task: Optional[CompactionTask] = None
+        self._view: Optional[NodeIndexView] = None
+        self._engine: Optional[RankEngine] = None
+
+    # -- construction ---------------------------------------------------------
+
+    @classmethod
+    def build(cls, keys: KeyArray, row_ids: Optional[jnp.ndarray] = None,
+              config: Optional[LiveConfig] = None,
+              *, presorted: bool = False) -> "LiveIndex":
+        cfg = config or LiveConfig()
+        if row_ids is None:
+            row_ids = jnp.arange(keys.shape[0], dtype=jnp.int32)
+        if not presorted:  # one construction sort feeds both structures
+            keys, row_ids = sort_with_payload(keys,
+                                              row_ids.astype(jnp.int32))
+        store = nodes.build(keys, row_ids, cfg.node_cap, fill=cfg.fill,
+                            presorted=True)
+        snapshot = cgrx.build(keys, row_ids, cfg.snapshot_bucket_size,
+                              presorted=True)
+        return cls(store, snapshot, cfg)
+
+    # -- engine plumbing ------------------------------------------------------
+
+    def _invalidate(self) -> None:
+        self._view = None
+        self._engine = None
+
+    @property
+    def view(self) -> NodeIndexView:
+        if self._view is None:
+            self._view = NodeIndexView(self.store, self.config.rep_method)
+        return self._view
+
+    @property
+    def engine(self) -> RankEngine:
+        """RankEngine bound to the current store version.  Rebuilt after
+        every update, but because the view is a pytree the engine passes
+        it as a jit argument — successive versions with unchanged static
+        bounds reuse one compiled executable."""
+        if self._engine is None:
+            self._engine = RankEngine(self.view, jit=self.config.jit)
+        return self._engine
+
+    @property
+    def live_keys(self) -> int:
+        return self.view.n
+
+    @property
+    def compacting(self) -> bool:
+        return self._task is not None
+
+    # -- reads (all through the rank engine) ----------------------------------
+
+    def lookup(self, queries: KeyArray) -> cgrx.LookupResult:
+        return self.engine.lookup(queries)
+
+    def range_lookup(self, lo: KeyArray, hi: KeyArray,
+                     max_hits: int = 64) -> cgrx.RangeResult:
+        return self.engine.range_lookup(lo, hi, max_hits)
+
+    def execute(self, plan):
+        """Serve a planned mixed point/range batch (``query.QueryBatch``)
+        in one engine call."""
+        return self.engine.execute(plan)
+
+    def batch(self) -> QueryBatch:
+        return QueryBatch()
+
+    def snapshot_reader(self, backend: Optional[str] = None) -> RankEngine:
+        """Point-in-time reader over this epoch's immutable snapshot.
+
+        The snapshot is the live set as of the last epoch swap (build or
+        compaction) — it deliberately excludes the chain delta, so a
+        long-running scan can keep a consistent view while the store
+        keeps mutating.  Served by any flat backend (default: the
+        config's rep method when flat, else 'tree')."""
+        name = backend or (self.config.rep_method
+                           if self.config.rep_method != "node" else "tree")
+        return RankEngine(self.snapshot, backend=name, jit=self.config.jit)
+
+    # -- writes ---------------------------------------------------------------
+
+    def apply(self, ins_keys: Optional[KeyArray] = None,
+              ins_rows: Optional[jnp.ndarray] = None,
+              del_keys: Optional[KeyArray] = None,
+              *, auto_compact: Optional[bool] = None) -> Optional[str]:
+        """Apply one mixed insert/delete batch.
+
+        ``nodes.apply_batch`` multiset semantics (the paper's unique-key
+        workloads): a key in both batches cancels pairwise (any
+        pre-existing copy survives); inserting an already-live key adds a
+        DUPLICATE (lookup keeps returning the older copy's row) and a
+        delete removes every copy of its key — to re-key, delete in one
+        batch and insert in the next.  Returns the firing compaction
+        trigger's name when the policy compacted, else None.
+        """
+        self.store = nodes.apply_batch(self.store, ins_keys, ins_rows,
+                                       del_keys)
+        self._invalidate()
+        self.applies += 1
+        n_ins = int(ins_keys.shape[0]) if ins_keys is not None else 0
+        n_del = int(del_keys.shape[0]) if del_keys is not None else 0
+        self.inserts += n_ins
+        self.deletes += n_del
+        self.deletes_since_compact += n_del
+        if self._task is not None:
+            # Mid-compaction write: lands in the current epoch (reads see
+            # it immediately) AND is replayed onto the new epoch at swap.
+            self._task.replay.append((ins_keys, ins_rows, del_keys))
+            return None
+        ac = self.config.auto_compact if auto_compact is None else auto_compact
+        if ac:
+            return self.maybe_compact()
+        return None
+
+    def insert(self, keys: KeyArray, rows: jnp.ndarray) -> Optional[str]:
+        return self.apply(ins_keys=keys, ins_rows=rows)
+
+    def delete(self, keys: KeyArray) -> Optional[str]:
+        return self.apply(del_keys=keys)
+
+    # -- compaction lifecycle (epoch swap) ------------------------------------
+
+    def stats(self) -> metrics.LiveStats:
+        return metrics.collect(self)
+
+    def maybe_compact(self) -> Optional[str]:
+        """Evaluate the policy; run a full (begin+finish) compaction when
+        a trigger fires.  Returns the trigger name or None."""
+        if self._task is not None:
+            return None
+        reason = should_compact(self.config.policy, self.stats())
+        if reason is not None:
+            self.finish_compaction(self.begin_compaction(reason))
+        return reason
+
+    def compact(self, reason: str = "manual") -> None:
+        """Unconditional foreground compaction."""
+        self.finish_compaction(self.begin_compaction(reason))
+
+    def begin_compaction(self, reason: str = "manual") -> CompactionTask:
+        """Take a consistent cut of the live set and return the in-flight
+        task.  Reads and writes keep hitting the current epoch; writes are
+        additionally logged on the task for replay at finish."""
+        if self._task is not None:
+            raise RuntimeError("compaction already in flight")
+        skeys, srows, n_live = nodes.extract(self.store)
+        self._task = CompactionTask(reason=reason, epoch_at_begin=self.epoch,
+                                    keys=skeys, rows=srows, n_live=n_live)
+        return self._task
+
+    def finish_compaction(self, task: CompactionTask) -> None:
+        """Bulk-load the new epoch from the cut, replay writes that landed
+        mid-compaction, and swap atomically (from the caller's view: the
+        old epoch serves every read until this returns)."""
+        if task is not self._task:
+            raise RuntimeError("finishing a task that is not in flight")
+        cfg = self.config
+        keys = task.keys[:task.n_live]
+        rows = task.rows[:task.n_live]
+        store = nodes.build(keys, rows, cfg.node_cap, fill=cfg.fill,
+                            presorted=True)
+        snapshot = cgrx.build(keys, rows, cfg.snapshot_bucket_size,
+                              presorted=True)
+        for ins_keys, ins_rows, del_keys in task.replay:
+            store = nodes.apply_batch(store, ins_keys, ins_rows, del_keys)
+        self.store = store
+        self.snapshot = snapshot
+        self.epoch += 1
+        self.compactions += 1
+        self.deletes_since_compact = 0
+        self._task = None
+        self._invalidate()
+
+    def abort_compaction(self) -> None:
+        """Drop the in-flight task; the current epoch stays authoritative
+        (mid-compaction writes were applied to it all along)."""
+        self._task = None

@@ -1,0 +1,71 @@
+"""Stats surface of the live index store.
+
+One flat snapshot per call — the numbers an operator (or the compaction
+policy, store/compaction.py) needs to reason about a long-lived updatable
+index: where the epoch is, how degraded the chains are, how much memory
+the two structures pin, and how much update traffic has accumulated since
+the last compaction.  Collected host-side; the only device sync is the
+live-key count (one small reduction).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class LiveStats:
+    """Point-in-time stats of a ``LiveIndex`` (see ``collect``)."""
+
+    epoch: int                 # compaction generation of the snapshot
+    live_keys: int             # keys currently lookup-able
+    num_buckets: int           # immutable bucket/rep count of this epoch
+    max_chain: int             # static chain-length bound (walk cost)
+    allocated_nodes: int       # nodes in use (rep region + linked region)
+    node_cap: int              # slots per node
+    store_bytes: int           # node slab + rep + tree footprint
+    snapshot_bytes: int        # immutable CgrxIndex snapshot footprint
+    applies: int               # apply_batch calls since build
+    inserts: int               # keys submitted for insert since build
+    deletes: int               # keys submitted for delete since build
+    deletes_since_compact: int  # tombstone pressure driving compaction
+    compactions: int           # epoch swaps completed
+    compacting: bool           # a background compaction is in flight
+
+    @property
+    def fill_factor(self) -> float:
+        """Live keys per allocated slot — low values mean wasted slab."""
+        slots = self.allocated_nodes * self.node_cap
+        return self.live_keys / slots if slots else 0.0
+
+    @property
+    def tombstone_ratio(self) -> float:
+        """Deletes since the last compaction relative to the live set."""
+        return self.deletes_since_compact / max(self.live_keys, 1)
+
+    @property
+    def total_bytes(self) -> int:
+        return self.store_bytes + self.snapshot_bytes
+
+
+def collect(live) -> LiveStats:
+    """Build a ``LiveStats`` from a ``LiveIndex`` (duck-typed to avoid an
+    import cycle: live.py imports this module for the return type)."""
+    from repro.core import cgrx as cgrx_mod
+
+    store = live.store
+    return LiveStats(
+        epoch=live.epoch,
+        live_keys=live.live_keys,
+        num_buckets=store.num_buckets,
+        max_chain=store.max_chain,
+        allocated_nodes=store.free_ptr,
+        node_cap=store.node_cap,
+        store_bytes=store.nbytes["total_bytes"],
+        snapshot_bytes=cgrx_mod.index_nbytes(live.snapshot)["total_bytes"],
+        applies=live.applies,
+        inserts=live.inserts,
+        deletes=live.deletes,
+        deletes_since_compact=live.deletes_since_compact,
+        compactions=live.compactions,
+        compacting=live.compacting,
+    )

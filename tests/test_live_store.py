@@ -1,0 +1,394 @@
+"""Live index store vs a rebuilt-from-scratch CgrxIndex oracle.
+
+The store's acceptance property: after ANY sequence of insert/delete
+batches, ``LiveIndex.lookup`` / ``LiveIndex.range_lookup`` — served
+through the rank engine's 'node' backend over degraded chains — must be
+bit-identical (found, rowID, rank position, range start/count/rows) to a
+``cgrx.build`` from scratch over the same live set.  Plus: epoch-swap
+consistency (reads during compaction), automatic policy triggers, the
+metrics surface, and the tick frontend's one-dispatch-per-class batching.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import cgrx, nodes
+from repro.core.keys import KeyArray
+from repro.query import QueryBatch, available_backends, get_backend
+from repro.store import (CompactionPolicy, LiveConfig, LiveFrontend,
+                         LiveIndex, LiveStats, should_compact)
+
+NEVER = CompactionPolicy().never()
+
+
+def mk(raw, is64=True):
+    raw = np.asarray(raw, dtype=np.uint64)
+    return KeyArray.from_u64(raw) if is64 else KeyArray.from_u32(
+        raw.astype(np.uint32))
+
+
+def build_live(raw, is64=True, **cfg_kwargs):
+    cfg_kwargs.setdefault("policy", NEVER)
+    cfg = LiveConfig(**cfg_kwargs)
+    return LiveIndex.build(mk(raw, is64),
+                           jnp.arange(len(raw), dtype=jnp.int32), cfg)
+
+
+def build_oracle(live_dict, is64=True, bucket_size=16):
+    """cgrx.build from scratch over the oracle's live (key -> row) map."""
+    ks = np.array(sorted(live_dict), dtype=np.uint64)
+    rows = np.array([live_dict[int(k)] for k in ks], dtype=np.int32)
+    return cgrx.build(mk(ks, is64), jnp.asarray(rows), bucket_size,
+                      presorted=True), ks
+
+
+def assert_points_equal(got, want, ctx):
+    for f in ("found", "row_id", "position"):
+        g, w = np.asarray(getattr(got, f)), np.asarray(getattr(want, f))
+        assert (g == w).all(), f"{ctx}: field {f} diverges"
+
+
+def assert_ranges_equal(got, want, ctx):
+    for f in want._fields:
+        g, w = np.asarray(getattr(got, f)), np.asarray(getattr(want, f))
+        assert (g == w).all(), f"{ctx}: field {f} diverges"
+
+
+def check_against_oracle(live, live_dict, rng, is64, ctx, n_q=150):
+    """Points (hits+misses) and ranges, live store vs fresh cgrx build."""
+    oracle, ks = build_oracle(live_dict, is64)
+    space = 1 << 44 if is64 else 1 << 30
+    hits = ks[rng.integers(0, len(ks), n_q)] if len(ks) else \
+        np.zeros(0, np.uint64)
+    misses = np.setdiff1d(
+        np.unique(rng.integers(0, space, n_q // 2, dtype=np.uint64)), ks)
+    q = np.concatenate([hits, misses])
+    qk = mk(q, is64)
+    assert_points_equal(live.lookup(qk), cgrx.lookup(oracle, qk),
+                        f"{ctx}/points")
+
+    lo_raw = rng.integers(0, space, 40, dtype=np.uint64)
+    span = rng.integers(0, space // 4, 40, dtype=np.uint64)
+    hi_raw = np.minimum(lo_raw + span, space - 1)
+    lo, hi = mk(lo_raw, is64), mk(hi_raw, is64)
+    assert_ranges_equal(live.range_lookup(lo, hi, max_hits=32),
+                        cgrx.range_lookup(oracle, lo, hi, max_hits=32),
+                        f"{ctx}/ranges")
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity vs the rebuilt oracle after randomized update waves.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("is64", [False, True])
+def test_lookup_and_range_match_oracle_after_waves(is64):
+    rng = np.random.default_rng(2)
+    space = 1 << 44 if is64 else 1 << 30
+    raw = np.unique(rng.integers(0, space, 5000, dtype=np.uint64))[:3000]
+    live = build_live(raw, is64, node_cap=16)
+    live_dict = {int(k): i for i, k in enumerate(raw)}
+    nxt = len(raw)
+    check_against_oracle(live, live_dict, rng, is64, "wave-init")
+    for wave in range(4):
+        la = np.array(sorted(live_dict), dtype=np.uint64)
+        ins = np.setdiff1d(
+            np.unique(rng.integers(0, space, 2500, dtype=np.uint64)),
+            la)[:800]
+        dels = la[rng.choice(len(la), 500, replace=False)]
+        rows = np.arange(nxt, nxt + len(ins), dtype=np.int32)
+        nxt += len(ins)
+        live.apply(mk(ins, is64), jnp.asarray(rows), mk(dels, is64))
+        for k, r in zip(ins, rows):
+            live_dict[int(k)] = int(r)
+        for k in dels:
+            live_dict.pop(int(k))
+        check_against_oracle(live, live_dict, rng, is64, f"wave{wave}")
+    assert live.store.max_chain > 1  # the chains actually degraded
+
+
+@pytest.mark.parametrize("rep_method", ["tree", "binary", "kernel"])
+def test_rep_method_backends_agree(rep_method):
+    """The 'node' backend's rep-search stage is pluggable; every method
+    must serve the same results (the kernel path reuses the Pallas
+    hierarchical successor kernel on the immutable rep array)."""
+    rng = np.random.default_rng(4)
+    raw = np.unique(rng.integers(0, 1 << 40, 3000, dtype=np.uint64))[:2000]
+    live = build_live(raw, node_cap=16, rep_method=rep_method)
+    live_dict = {int(k): i for i, k in enumerate(raw)}
+    ins = np.setdiff1d(np.unique(rng.integers(0, 1 << 40, 1500,
+                                              dtype=np.uint64)), raw)[:600]
+    live.insert(mk(ins), jnp.arange(5000, 5000 + len(ins), dtype=jnp.int32))
+    for i, k in enumerate(ins):
+        live_dict[int(k)] = 5000 + i
+    check_against_oracle(live, live_dict, rng, True, f"rep/{rep_method}")
+
+
+def test_mixed_plan_through_engine_one_call():
+    """A mixed point/range plan against the live store == per-call API."""
+    rng = np.random.default_rng(5)
+    raw = np.unique(rng.integers(0, 1 << 40, 3000, dtype=np.uint64))[:2000]
+    live = build_live(raw, node_cap=16)
+    dels = raw[rng.choice(len(raw), 300, replace=False)]
+    live.delete(mk(dels))
+    pts = mk(raw[rng.integers(0, len(raw), 90)])
+    sraw = np.sort(np.setdiff1d(raw, dels))
+    starts = rng.integers(0, len(sraw) - 20, 30)
+    lo, hi = mk(sraw[starts]), mk(sraw[starts + 19])
+    plan = QueryBatch().add_points(pts).add_ranges(lo, hi).plan(max_hits=32)
+    res = live.execute(plan)
+    assert_points_equal(res.points, live.lookup(pts), "plan/points")
+    assert_ranges_equal(res.ranges, live.range_lookup(lo, hi, 32),
+                        "plan/ranges")
+
+
+def test_node_backend_registered_with_kind():
+    assert "node" in available_backends()
+    assert "node" in available_backends(kind="node")
+    assert "node" not in available_backends(kind="flat")
+    assert get_backend("node").kind == "node"
+    assert {"tree", "binary", "kernel"} <= set(available_backends("flat"))
+
+
+# ---------------------------------------------------------------------------
+# Compaction: epoch swap, consistency during the swap, policy triggers.
+# ---------------------------------------------------------------------------
+
+def test_epoch_swap_reads_consistent_during_compaction():
+    rng = np.random.default_rng(7)
+    raw = np.unique(rng.integers(0, 1 << 40, 4000, dtype=np.uint64))[:2500]
+    live = build_live(raw, node_cap=16)
+    live_dict = {int(k): i for i, k in enumerate(raw)}
+    ins0 = np.setdiff1d(np.unique(rng.integers(0, 1 << 40, 2000,
+                                               dtype=np.uint64)), raw)[:800]
+    live.insert(mk(ins0), jnp.arange(10_000, 10_000 + len(ins0),
+                                     dtype=jnp.int32))
+    for i, k in enumerate(ins0):
+        live_dict[int(k)] = 10_000 + i
+
+    task = live.begin_compaction("test")
+    assert live.compacting and live.epoch == 0
+    # Reads during the in-flight compaction serve the live epoch.
+    check_against_oracle(live, live_dict, rng, True, "mid-compaction-pre")
+
+    # A write landing MID-compaction: visible immediately AND after swap.
+    la = np.array(sorted(live_dict), dtype=np.uint64)
+    ins1 = np.setdiff1d(np.unique(rng.integers(0, 1 << 40, 1000,
+                                               dtype=np.uint64)), la)[:300]
+    dels1 = la[rng.choice(len(la), 200, replace=False)]
+    live.apply(mk(ins1), jnp.arange(20_000, 20_000 + len(ins1),
+                                    dtype=jnp.int32), mk(dels1))
+    for i, k in enumerate(ins1):
+        live_dict[int(k)] = 20_000 + i
+    for k in dels1:
+        live_dict.pop(int(k))
+    assert len(task.replay) == 1
+    check_against_oracle(live, live_dict, rng, True, "mid-compaction-post")
+
+    live.finish_compaction(task)
+    assert live.epoch == 1 and not live.compacting
+    assert live.store.max_chain == 1  # chains folded away...
+    check_against_oracle(live, live_dict, rng, True, "post-swap")
+
+
+def test_epoch_swap_replay_preserves_midflight_writes():
+    """After the swap, a key inserted mid-compaction must survive with
+    its row, and a key deleted mid-compaction must stay gone — even
+    though the cut was taken before either happened."""
+    raw = np.arange(0, 4096, 2, dtype=np.uint64)
+    live = build_live(raw, node_cap=16)
+    task = live.begin_compaction("test")
+    live.insert(mk([1001]), jnp.asarray([777], jnp.int32))
+    live.delete(mk([100]))
+    live.finish_compaction(task)
+    res = live.lookup(mk([1001, 100, 102]))
+    assert np.asarray(res.found).tolist() == [True, False, True]
+    assert np.asarray(res.row_id)[0] == 777
+
+
+def test_auto_compaction_chain_trigger_end_to_end():
+    rng = np.random.default_rng(8)
+    raw = np.arange(0, 4096, 8, dtype=np.uint64)  # 512 keys, dense buckets
+    pol = CompactionPolicy(max_chain=3, min_fill=None,
+                           max_tombstone_ratio=None)
+    live = build_live(raw, node_cap=8, policy=pol, auto_compact=True)
+    live_dict = {int(k): i for i, k in enumerate(raw)}
+    nxt = len(raw)
+    # Bursts into a narrow key range force chain growth past the trigger.
+    for wave in range(4):
+        ins = np.setdiff1d(np.arange(wave * 40, wave * 40 + 160,
+                                     dtype=np.uint64),
+                           np.array(sorted(live_dict), dtype=np.uint64))[:100]
+        rows = np.arange(nxt, nxt + len(ins), dtype=np.int32)
+        nxt += len(ins)
+        live.insert(mk(ins), jnp.asarray(rows))
+        for k, r in zip(ins, rows):
+            live_dict[int(k)] = int(r)
+    st_ = live.stats()
+    assert st_.compactions >= 1, "chain trigger never fired"
+    assert live.epoch == st_.compactions
+    assert live.store.max_chain < 3
+    check_against_oracle(live, live_dict, rng, True, "auto-compact")
+
+
+def test_tombstone_trigger_and_policy_eval():
+    raw = np.arange(0, 8192, 4, dtype=np.uint64)  # 2048 keys
+    pol = CompactionPolicy(max_chain=None, min_fill=None,
+                           max_tombstone_ratio=0.3)
+    live = build_live(raw, node_cap=16, policy=pol, auto_compact=True)
+    dels = raw[: len(raw) // 2]
+    live.delete(mk(dels))
+    assert live.stats().compactions == 1
+    assert live.stats().deletes_since_compact == 0
+    res = live.lookup(mk(dels[:32]))
+    assert not bool(res.found.any())
+    # Policy evaluation is pure: a healthy stats snapshot fires nothing.
+    healthy = live.stats()
+    assert should_compact(pol, healthy) is None
+
+
+def test_metrics_surface():
+    raw = np.arange(0, 2048, 2, dtype=np.uint64)
+    live = build_live(raw, node_cap=16)
+    live.insert(mk([1, 3, 5]), jnp.asarray([900, 901, 902], jnp.int32))
+    live.delete(mk([0, 2]))
+    s = live.stats()
+    assert isinstance(s, LiveStats)
+    assert s.epoch == 0 and s.compactions == 0 and not s.compacting
+    assert s.live_keys == 1024 + 3 - 2
+    assert s.applies == 2 and s.inserts == 3 and s.deletes == 2
+    assert s.deletes_since_compact == 2
+    assert 0.0 < s.fill_factor <= 1.0
+    assert s.store_bytes > 0 and s.snapshot_bytes > 0
+    assert s.total_bytes == s.store_bytes + s.snapshot_bytes
+    live.compact()
+    s2 = live.stats()
+    assert s2.epoch == 1 and s2.compactions == 1
+    assert s2.deletes_since_compact == 0
+    assert s2.live_keys == s.live_keys
+
+
+def test_snapshot_reader_point_in_time():
+    """The epoch snapshot is a consistent immutable view: it serves the
+    epoch base even while the store mutates, and advances on swap."""
+    raw = np.arange(0, 2048, 2, dtype=np.uint64)
+    live = build_live(raw, node_cap=16)
+    reader = live.snapshot_reader()
+    live.insert(mk([1, 3]), jnp.asarray([900, 901], jnp.int32))
+    live.delete(mk([0, 2]))
+    # Store sees the delta...
+    assert bool(live.lookup(mk([1, 3])).found.all())
+    assert not bool(live.lookup(mk([0, 2])).found.any())
+    # ...the epoch-base reader does not (point-in-time semantics).
+    snap = reader.lookup(mk([1, 3, 0, 2]))
+    assert np.asarray(snap.found).tolist() == [False, False, True, True]
+    live.compact()
+    snap2 = live.snapshot_reader().lookup(mk([1, 3, 0, 2]))
+    assert np.asarray(snap2.found).tolist() == [True, True, False, False]
+
+
+# ---------------------------------------------------------------------------
+# Frontend: tick-batched mixed ops.
+# ---------------------------------------------------------------------------
+
+def test_frontend_mixed_tick_writes_before_reads():
+    rng = np.random.default_rng(11)
+    raw = np.unique(rng.integers(0, 1 << 40, 3000, dtype=np.uint64))[:2000]
+    live = build_live(raw, node_cap=16)
+    fe = LiveFrontend(live, max_hits=16)
+
+    ins = np.setdiff1d(np.unique(rng.integers(0, 1 << 40, 500,
+                                              dtype=np.uint64)), raw)[:100]
+    dels = raw[rng.choice(len(raw), 80, replace=False)]
+    keep = np.setdiff1d(raw, dels)
+
+    t_ins = fe.submit_insert(mk(ins), np.arange(7000, 7100, dtype=np.int32))
+    t_del = fe.submit_delete(mk(dels))
+    # Same-tick reads observe the writes (writes drain first).
+    t_new = fe.submit_point(mk(ins[:20]))
+    t_gone = fe.submit_point(mk(dels[:20]))
+    t_old = fe.submit_point(mk(keep[:20]))
+    sl = np.sort(np.concatenate([keep, ins]))
+    starts = rng.integers(0, len(sl) - 10, 15)
+    t_rng = fe.submit_range(mk(sl[starts]), mk(sl[starts + 9]))
+    assert fe.pending == 6
+
+    rep = fe.tick()
+    assert fe.pending == 0
+    assert (rep.n_point, rep.n_range) == (60, 15)
+    assert (rep.n_insert, rep.n_delete) == (100, 80)
+    assert fe.result(t_ins) == 100 and fe.result(t_del) == 80
+    assert bool(fe.result(t_new).found.all())
+    assert not bool(fe.result(t_gone).found.any())
+    assert bool(fe.result(t_old).found.all())
+    r = fe.result(t_rng)
+    assert (np.asarray(r.count) == 10).all()
+    with pytest.raises(KeyError):
+        fe.result(t_rng)  # results pop once
+
+    # Next tick: empty is fine, and ticket results keep streaming.
+    t2 = fe.submit_point(mk(ins[:5]))
+    rep2 = fe.tick()
+    assert rep2.tick == 1 and rep2.n_insert == 0
+    assert bool(fe.result(t2).found.all())
+
+
+def test_frontend_empty_submissions_resolve():
+    """Zero-length submissions settle immediately with empty results —
+    a tick that dispatches nothing must not strand their tickets."""
+    raw = np.arange(0, 512, dtype=np.uint64)
+    live = build_live(raw, node_cap=16)
+    fe = LiveFrontend(live, max_hits=8)
+    empty = mk(np.zeros(0, np.uint64))
+    t_p = fe.submit_point(empty)
+    t_r = fe.submit_range(empty, empty)
+    t_i = fe.submit_insert(empty, np.zeros(0, np.int32))
+    t_d = fe.submit_delete(empty)
+    assert fe.pending == 0
+    rep = fe.tick()  # nothing to dispatch
+    assert (rep.n_point, rep.n_range, rep.n_insert, rep.n_delete) == (0,) * 4
+    assert fe.result(t_p).found.shape == (0,)
+    assert fe.result(t_r).row_ids.shape == (0, 8)
+    assert fe.result(t_i) == 0 and fe.result(t_d) == 0
+
+
+def test_frontend_tick_reports_compaction_pause():
+    raw = np.arange(0, 4096, 8, dtype=np.uint64)
+    pol = CompactionPolicy(max_chain=2, min_fill=None,
+                           max_tombstone_ratio=None)
+    live = build_live(raw, node_cap=8, policy=pol)
+    fe = LiveFrontend(live)
+    ins = np.arange(1, 400, 2, dtype=np.uint64)  # dense burst -> chains
+    fe.submit_insert(mk(ins), np.arange(len(ins), dtype=np.int32))
+    rep = fe.tick()
+    assert rep.compacted is not None
+    assert rep.compact_seconds > 0.0
+    assert live.epoch >= 1
+
+
+# ---------------------------------------------------------------------------
+# Property test (hypothesis when installed; skips cleanly otherwise).
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2**31), st.sampled_from([8, 16, 32]))
+@settings(max_examples=6, deadline=None)
+def test_property_random_waves_match_oracle(seed, node_cap):
+    rng = np.random.default_rng(seed)
+    raw = np.unique(rng.integers(0, 1 << 32, 900, dtype=np.uint64))[:600]
+    live = build_live(raw, node_cap=int(node_cap))
+    live_dict = {int(k): i for i, k in enumerate(raw)}
+    nxt = len(raw)
+    for _ in range(2):
+        la = np.array(sorted(live_dict), dtype=np.uint64)
+        ins = np.setdiff1d(
+            np.unique(rng.integers(0, 1 << 32, 500, dtype=np.uint64)),
+            la)[:150]
+        dels = la[rng.choice(len(la), 100, replace=False)]
+        rows = np.arange(nxt, nxt + len(ins), dtype=np.int32)
+        nxt += len(ins)
+        live.apply(mk(ins), jnp.asarray(rows), mk(dels))
+        for k, r in zip(ins, rows):
+            live_dict[int(k)] = int(r)
+        for k in dels:
+            live_dict.pop(int(k))
+    check_against_oracle(live, live_dict, rng, True, f"prop{seed}", n_q=60)

@@ -76,6 +76,69 @@ def test_insert_delete_cancellation():
     assert not bool(res.found.any())
 
 
+def test_delete_then_reinsert_same_batch_stays_found():
+    """Regression: a live key appearing in both batches must cancel the
+    pair on BOTH sides (paper: removed from both batches), leaving the
+    pre-existing copy live — not tombstoned with found=False."""
+    raw = np.arange(0, 512, dtype=np.uint64)
+    store = nodes.build(mk(raw), None, node_cap=16)
+    k = np.array([100], dtype=np.uint64)  # live, rowID 100
+    store = nodes.apply_batch(store, mk(k), jnp.asarray([999], jnp.int32),
+                              mk(k))
+    res = nodes.lookup(store, mk(k))
+    assert bool(res.found.all())
+    assert np.asarray(res.row_id).tolist() == [100]
+    # Untouched neighbours unaffected.
+    others = np.array([99, 101], dtype=np.uint64)
+    reso = nodes.lookup(store, mk(others))
+    assert bool(reso.found.all())
+
+
+def test_delete_then_reinsert_across_batches():
+    """Delete in one batch, reinsert in the next: found with the new row."""
+    raw = np.arange(0, 512, dtype=np.uint64)
+    store = nodes.build(mk(raw), None, node_cap=16)
+    k = np.array([100], dtype=np.uint64)
+    store = nodes.apply_batch(store, None, None, mk(k))
+    assert not bool(nodes.lookup(store, mk(k)).found.any())
+    store = nodes.apply_batch(store, mk(k), jnp.asarray([999], jnp.int32),
+                              None)
+    res = nodes.lookup(store, mk(k))
+    assert bool(res.found.all())
+    assert np.asarray(res.row_id).tolist() == [999]
+
+
+def test_cancellation_is_pairwise_for_duplicates():
+    """ins=[X,X] + del=[X]: ONE pair cancels, the surplus insert lands."""
+    raw = np.arange(0, 512, dtype=np.uint64)
+    store = nodes.build(mk(raw), None, node_cap=16)
+    k = np.array([600, 600], dtype=np.uint64)
+    store = nodes.apply_batch(store, mk(k), jnp.asarray([7, 8], jnp.int32),
+                              mk(k[:1]))
+    res = nodes.lookup(store, mk(k[:1]))
+    assert bool(res.found.all())
+    assert int(np.asarray(res.row_id)[0]) == 8  # earlier duplicate cancelled
+    # Mirror image: ins=[X] + del=[X,X] against a live X -> X deleted.
+    store2 = nodes.build(mk(raw), None, node_cap=16)
+    k2 = np.array([100], dtype=np.uint64)
+    store2 = nodes.apply_batch(store2, mk(k2), jnp.asarray([9], jnp.int32),
+                               mk(np.array([100, 100], dtype=np.uint64)))
+    assert not bool(nodes.lookup(store2, mk(k2)).found.any())
+
+
+def test_bucket_count_tracks_live_keys():
+    rng = np.random.default_rng(9)
+    raw = np.unique(rng.integers(0, 1 << 40, 3000, dtype=np.uint64))[:2000]
+    store = nodes.build(mk(raw), None, node_cap=16)
+    assert int(nodes.live_count(store)) == len(raw)
+    dels = raw[rng.choice(len(raw), 300, replace=False)]
+    ins = np.setdiff1d(np.unique(rng.integers(0, 1 << 40, 1000,
+                                              dtype=np.uint64)), raw)[:200]
+    store = nodes.apply_batch(store, mk(ins),
+                              jnp.arange(len(ins), dtype=jnp.int32), mk(dels))
+    assert int(nodes.live_count(store)) == len(raw) + len(ins) - len(dels)
+
+
 def test_chain_growth_and_splits():
     raw = np.arange(0, 256, dtype=np.uint64) * 1000
     store = nodes.build(mk(raw), None, node_cap=8)

@@ -16,7 +16,9 @@ from repro.core.keys import KeyArray
 from repro.query import (QueryBatch, RankEngine, available_backends,
                          get_backend, get_probe)
 
-BACKENDS = available_backends()
+# Flat backends rank over CgrxIndex-shaped indexes; the 'node' backend
+# serves chained node stores and is covered by tests/test_live_store.py.
+BACKENDS = available_backends(kind="flat")
 
 
 def mk(raw, is64=True):
