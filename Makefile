@@ -2,17 +2,31 @@
 PY ?= python
 export JAX_PLATFORMS ?= cpu
 
-.PHONY: check test bench-smoke quickstart
+.PHONY: check test lint bench-smoke bench-json bench-compare quickstart
 
-check: test bench-smoke
+check: lint test bench-smoke
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
+
+# Fast static gate (separate CI job; config in pyproject.toml).
+lint:
+	ruff check .
 
 # Every registered benchmark suite at tiny sizes: benchmark scripts can't
 # silently rot (benchmarks/run.py exits non-zero on any suite failure).
 bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.run --n 4096 --q 4096
+
+# Same smoke run, but also write the machine-readable results the perf
+# CI gate consumes (BENCH_BASELINE.json is a committed run of this).
+bench-json:
+	PYTHONPATH=src $(PY) -m benchmarks.run --n 4096 --q 4096 \
+		--json bench_results.json
+
+bench-compare: bench-json
+	PYTHONPATH=src $(PY) -m benchmarks.compare BENCH_BASELINE.json \
+		bench_results.json
 
 quickstart:
 	PYTHONPATH=src $(PY) examples/quickstart.py

@@ -13,13 +13,28 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import argparse
 import time
-from typing import Callable
+from typing import Callable, Dict
 
 import jax
 import numpy as np
 
 N_KEYS = 1 << 20
 N_LOOKUPS = 1 << 21
+
+# Machine-readable result sink: {suite: {metric: us_per_call}}.  ``emit``
+# records every metric here under the current suite (benchmarks.run names
+# the suite before invoking it; standalone module runs land in 'adhoc');
+# ``benchmarks.run --json out.json`` dumps it, and benchmarks/compare.py
+# gates CI on it against the committed BENCH_BASELINE.json.
+RESULTS: Dict[str, Dict[str, float]] = {}
+_CURRENT_SUITE = "adhoc"
+
+
+def set_suite(name: str) -> None:
+    """Name the suite subsequent ``emit`` calls record under."""
+    global _CURRENT_SUITE
+    _CURRENT_SUITE = name
+    RESULTS.setdefault(name, {})
 
 
 def parse_args(extra: Callable = None):
@@ -49,4 +64,5 @@ def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
 
 
 def emit(name: str, seconds: float, derived: str = "") -> None:
+    RESULTS.setdefault(_CURRENT_SUITE, {})[name] = seconds * 1e6
     print(f"{name},{seconds*1e6:.1f}us,{derived}", flush=True)

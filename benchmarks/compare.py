@@ -1,0 +1,103 @@
+"""Gate benchmark results against a committed baseline.
+
+    PYTHONPATH=src python -m benchmarks.compare BENCH_BASELINE.json \
+        current.json [--threshold 0.25] [--track REGEX]
+
+Both files hold the ``{suite: {metric: us_per_call}}`` map written by
+``benchmarks.run --json``.  Every metric present in BOTH files is
+*tracked*; a tracked metric whose current time exceeds
+``baseline * (1 + threshold)`` is a regression and fails the run
+(exit 1).  Metrics only in the current run are new (reported, never
+fatal); metrics only in the baseline are missing (fatal with
+``--strict``, else a warning — a renamed benchmark shouldn't brick CI).
+
+``--track`` restricts tracking to ``suite/metric`` names matching the
+regex — CI can gate just the serving-path suites while the paper-figure
+sweeps stay informational.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from typing import Dict, List, Optional, Tuple
+
+DEFAULT_THRESHOLD = 0.25
+
+
+def flatten(results: Dict[str, Dict[str, float]]) -> Dict[str, float]:
+    """{suite: {metric: us}} -> {'suite/metric': us}."""
+    return {f"{suite}/{metric}": float(us)
+            for suite, metrics in results.items()
+            for metric, us in metrics.items()}
+
+
+def compare(baseline: Dict[str, Dict[str, float]],
+            current: Dict[str, Dict[str, float]],
+            threshold: float = DEFAULT_THRESHOLD,
+            track: Optional[str] = None
+            ) -> Tuple[List[str], List[str], List[str], int]:
+    """Returns (regressions, missing, new, n_tracked) — report lines plus
+    the count of metrics actually gated (all lists respect ``track``).
+
+    A regression line reads ``suite/metric: 123.4us -> 456.7us (+270.0%)``.
+    """
+    base = flatten(baseline)
+    cur = flatten(current)
+    pat = re.compile(track) if track else None
+    tracked = [k for k in base if k in cur and (pat is None or pat.search(k))]
+
+    regressions = []
+    for k in sorted(tracked):
+        b, c = base[k], cur[k]
+        if b > 0 and c > b * (1.0 + threshold):
+            regressions.append(
+                f"{k}: {b:.1f}us -> {c:.1f}us (+{(c / b - 1) * 100:.1f}%)")
+    missing = [k for k in sorted(base)
+               if k not in cur and (pat is None or pat.search(k))]
+    new = [k for k in sorted(cur)
+           if k not in base and (pat is None or pat.search(k))]
+    return regressions, missing, new, len(tracked)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("current", help="fresh benchmarks.run --json output")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="max allowed slowdown fraction (default 0.25)")
+    ap.add_argument("--track", default=None, metavar="REGEX",
+                    help="only gate suite/metric names matching REGEX")
+    ap.add_argument("--strict", action="store_true",
+                    help="fail when a baseline metric is missing")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+    with open(args.current) as fh:
+        current = json.load(fh)
+
+    regressions, missing, new, n_tracked = compare(baseline, current,
+                                                   args.threshold, args.track)
+    print(f"# compared {n_tracked} tracked metrics "
+          f"(threshold +{args.threshold * 100:.0f}%)")
+    for line in regressions:
+        print(f"REGRESSION {line}")
+    for k in missing:
+        print(f"MISSING {k} (in baseline, not in current run)")
+    for k in new:
+        print(f"NEW {k} (not in baseline; commit a refreshed baseline "
+              f"to track it)")
+    if regressions:
+        print(f"# FAIL: {len(regressions)} regression(s)")
+        return 1
+    if missing and args.strict:
+        print(f"# FAIL: {len(missing)} missing metric(s) (--strict)")
+        return 1
+    print("# OK: no tracked regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

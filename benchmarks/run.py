@@ -1,18 +1,24 @@
 """Run every paper-table benchmark.  Output: ``name,us_per_call,derived``.
 
-    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig12]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig12] \
+                                            [--json out.json]
 
 Default sizes are container-scale (2^18 keys); --full is paper-scale
-(2^26 keys / 2^27 lookups, needs paper-class memory).
+(2^26 keys / 2^27 lookups, needs paper-class memory).  ``--json`` also
+writes the machine-readable ``{suite: {metric: us_per_call}}`` map —
+the perf-CI artifact benchmarks/compare.py gates regressions against.
 """
 import os
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import argparse
 import importlib
+import json
 import sys
 import time
 import traceback
+
+from benchmarks import common
 
 SUITES = [
     ("fig8_keymap", "benchmarks.bench_keymap"),
@@ -26,6 +32,7 @@ SUITES = [
     ("kernels", "benchmarks.bench_kernels"),
     ("batched_lookup", "benchmarks.bench_batched_lookup"),
     ("live_store", "benchmarks.bench_live_store"),
+    ("sharded_store", "benchmarks.bench_sharded_store"),
 ]
 
 
@@ -40,6 +47,8 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--n", type=int, default=None)
     ap.add_argument("--q", type=int, default=None)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write {suite: {metric: us_per_call}} JSON")
     args = ap.parse_args()
     n = args.n or (1 << 26 if args.full else 1 << 18)
     q = args.q or (1 << 27 if args.full else 1 << 19)
@@ -50,6 +59,7 @@ def main() -> None:
             continue
         print(f"# === {name} (n={n}, q={q}) ===", flush=True)
         t0 = time.time()
+        common.set_suite(name)
         try:
             mod = importlib.import_module(mod_name)
             mod.main(_Args(n, q))
@@ -58,6 +68,11 @@ def main() -> None:
             failures.append(name)
             print(f"# {name} FAILED:\n{traceback.format_exc()[-2000:]}",
                   flush=True)
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(common.RESULTS, fh, indent=2, sort_keys=True)
+        print(f"# wrote {args.json} "
+              f"({sum(len(m) for m in common.RESULTS.values())} metrics)")
     if failures:
         print(f"# FAILURES: {failures}")
         sys.exit(1)

@@ -1,16 +1,18 @@
-"""Mesh-sharded cgRX: lookups AND updates over a range-partitioned index.
+"""Sharded cgRX serving: static mesh mode + the live sharded store.
 
-Runs on 8 emulated host devices (the same code path the 512-chip dry-run
-exercises): the key space is range-partitioned over the model axis, query
-batches are data-parallel, and each lookup costs exactly one small
-all-reduce — index size never enters the collective.
+Two tiers over the same splitter math (core/distributed.py):
 
-The update half mirrors the paper's Sec. 4 at cluster scale: every shard
-owns a ``LiveIndex`` (epoch-versioned updatable store, repro.store), and
-a mixed insert/delete batch is routed to its owning shard with
-``dist.route_updates`` (successor search over the shard splitters — the
-same math as the lookup routing), then applied shard-locally with ONE
-``LiveIndex.apply`` per shard.  The accelerated structures never move.
+1. **Static read-only mode** — the key space is range-partitioned over the
+   mesh's model axis, query batches are data-parallel, and each lookup
+   costs exactly one small all-reduce (index size never enters the
+   collective).  Runs on 8 emulated host devices, the same code path the
+   512-chip dry-run exercises.
+2. **Live mode** — ``repro.store.ShardedLiveStore``: every shard owns an
+   epoch-versioned ``LiveIndex``; mixed insert/delete batches route to
+   owning shards (one apply dispatch per shard), cross-shard ranges
+   decompose at the splitters and merge with a rank-offset prefix, and a
+   hot shard compacts without pausing its siblings.  The accelerated
+   structures never move.
 
     PYTHONPATH=src python examples/distributed_index.py
 """
@@ -24,7 +26,8 @@ import jax.numpy as jnp
 
 from repro.core import distributed as dist
 from repro.core.keys import KeyArray
-from repro.store import CompactionPolicy, LiveConfig, LiveIndex
+from repro.store import (CompactionPolicy, LiveConfig, ShardedConfig,
+                         ShardedLiveStore)
 
 
 def main() -> None:
@@ -34,6 +37,7 @@ def main() -> None:
                                  dtype=np.uint64))[:n]
     keys = KeyArray.from_u64(raw)
 
+    # ---- static read-only mode: mesh-mapped lookups, one psum each ----
     mesh = jax.make_mesh((2, 4), ("data", "model"))
     print(f"mesh {dict(mesh.shape)}; {len(raw):,} keys range-partitioned "
           f"into 4 shards")
@@ -44,7 +48,7 @@ def main() -> None:
     found, rowid = dist.sharded_lookup(sidx, keys[sel])
     assert np.asarray(found).all()
     assert (raw[np.asarray(rowid)] == raw[sel]).all()
-    print(f"point lookups: 4096/4096 hit across shards "
+    print(f"static mode point lookups: 4096/4096 hit across shards "
           f"(1 psum of 8B/query)")
 
     sraw = np.sort(raw)
@@ -53,42 +57,44 @@ def main() -> None:
     cnt = dist.sharded_range_count(sidx, KeyArray.from_u64(lo),
                                    KeyArray.from_u64(hi))
     assert (np.asarray(cnt) == 1000).all()
-    print("range counts: 1024 ranges spanning shard boundaries, all exact")
+    print("static mode range counts: 1024 ranges spanning shard "
+          "boundaries, all exact")
 
-    # ---- sharded updates: one LiveIndex per shard, batches routed by ----
-    # ---- splitter search, one apply dispatch per shard              ----
-    shards = []
-    for s in range(sidx.num_shards):
-        rows_s = np.asarray(sidx.row_ids[s])
-        mask = rows_s >= 0                       # strip sentinel padding
-        shard_keys = KeyArray(sidx.keys.lo[s][mask], sidx.keys.hi[s][mask])
-        cfg = LiveConfig(node_cap=32,
-                         policy=CompactionPolicy(max_chain=4))
-        shards.append(LiveIndex.build(shard_keys,
-                                      jnp.asarray(rows_s[mask]), cfg))
+    # ---- live mode: ShardedLiveStore — routed updates, cross-shard ----
+    # ---- ranges, per-shard compaction, skew-triggered rebalance    ----
+    cfg = ShardedConfig(
+        num_shards=4,
+        live=LiveConfig(node_cap=32, policy=CompactionPolicy(max_chain=4)),
+        max_imbalance=2.0)
+    store = ShardedLiveStore.build(keys, jnp.arange(n, dtype=jnp.int32), cfg)
 
     upd = np.setdiff1d(np.unique(rng.integers(0, 1 << 45, 6000,
                                               dtype=np.uint64)), raw)[:4096]
-    dels = raw[rng.integers(0, n, 2048)]
-    owner_ins = np.asarray(dist.route_updates(sidx, KeyArray.from_u64(upd)))
-    owner_del = np.asarray(dist.route_updates(sidx, KeyArray.from_u64(dels)))
-    for s, live in enumerate(shards):
-        ins_s = upd[owner_ins == s]
-        del_s = dels[owner_del == s]
-        live.apply(KeyArray.from_u64(ins_s),
-                   jnp.arange(n + s * len(upd), n + s * len(upd) + len(ins_s),
-                              dtype=jnp.int32),
-                   KeyArray.from_u64(del_s))
-    hit = sum(int(np.asarray(
-        shards[s].lookup(KeyArray.from_u64(upd[owner_ins == s])).found).sum())
-        for s in range(len(shards)))
-    gone = sum(int(np.asarray(
-        shards[s].lookup(KeyArray.from_u64(dels[owner_del == s])).found).sum())
-        for s in range(len(shards)))
-    assert hit == len(upd) and gone == 0
-    epochs = [lv.epoch for lv in shards]
-    print(f"sharded updates: {len(upd)} inserts + {len(np.unique(dels))} "
-          f"deletes routed via splitters, 1 apply/shard; epochs {epochs}")
+    dels = np.unique(raw[rng.integers(0, n, 2048)])
+    summary = store.apply(KeyArray.from_u64(upd),
+                          jnp.arange(n, n + len(upd), dtype=jnp.int32),
+                          KeyArray.from_u64(dels))
+    st = store.stats()
+    print(f"live mode updates: {len(upd)} inserts + {len(dels)} deletes "
+          f"routed via splitters, 1 apply/shard; epochs {list(st.epochs)}; "
+          f"policy={summary or '-'}")
+
+    res = store.lookup(KeyArray.from_u64(upd))
+    gone = store.lookup(KeyArray.from_u64(dels))
+    assert bool(np.asarray(res.found).all())
+    assert not bool(np.asarray(gone.found).any())
+
+    live_np = np.sort(np.setdiff1d(np.concatenate([raw, upd]), dels))
+    starts = rng.integers(0, len(live_np) - 150_000, 256)
+    lo = KeyArray.from_u64(live_np[starts])
+    hi = KeyArray.from_u64(live_np[starts + 149_999])
+    rng_res = store.range_lookup(lo, hi, max_hits=16)
+    assert (np.asarray(rng_res.count) == 150_000).all()
+    spans = 1 + store.route(hi) - store.route(lo)
+    print(f"live mode ranges: 256 ranges each spanning "
+          f"{spans.min()}-{spans.max()} shards, counts exact after "
+          f"updates (imbalance {st.imbalance:.2f}, "
+          f"rebalances {st.rebalances})")
 
 
 if __name__ == "__main__":

@@ -16,8 +16,16 @@ This keeps the collective cost at one small all-reduce per batch
 updates.  Shard ownership is decided by per-shard max-key splitters, which
 are just the last representatives — no extra structure.
 
-Batch updates route insert/delete keys to their owning shard with the same
-splitter search; each shard applies its slice with nodes.apply_batch.
+Two serving modes share the splitter math below:
+
+* **static read-only mode** (this module): the mesh-mapped ``ShardedIndex``
+  — immutable stacked per-shard cgRX state, lookups/range counts as
+  ``shard_map`` collectives.  Fastest when the key set doesn't change.
+* **live mode** (``repro.store.sharded.ShardedLiveStore``): one epoch-
+  versioned ``LiveIndex`` per shard, routed updates, cross-shard range
+  decomposition and per-shard compaction.  It imports ``route_keys`` /
+  ``route_ranges`` / ``compute_splitters`` from here, so both tiers agree
+  on ownership by construction.
 """
 from __future__ import annotations
 
@@ -152,11 +160,61 @@ def sharded_lookup(idx: ShardedIndex, queries: KeyArray,
     return fn(*arrs)
 
 
-def route_updates(idx: ShardedIndex, upd_keys: KeyArray) -> jnp.ndarray:
-    """Owning shard of each update key: successor over splitters (keys
-    beyond the last splitter go to the last shard)."""
-    s = searchsorted(idx.splitters, upd_keys, side="left")
-    return jnp.minimum(s, idx.num_shards - 1).astype(jnp.int32)
+# ---------------------------------------------------------------------------
+# Splitter math — the routing layer shared by the static mesh path above and
+# the live sharded store (repro.store.sharded).  A "splitter" is the max key
+# a shard owns; shard s owns the half-open key interval
+# (splitters[s-1], splitters[s]], and the LAST shard additionally absorbs
+# everything beyond the last splitter (mirroring how a cgRX/NodeStore last
+# bucket absorbs > maxRep inserts under an immutable search structure).
+# ---------------------------------------------------------------------------
+
+def route_keys(splitters: KeyArray, keys: KeyArray) -> jnp.ndarray:
+    """Owning shard of each key: successor search over per-shard max-key
+    splitters (keys beyond the last splitter go to the last shard)."""
+    num_shards = splitters.shape[0]
+    s = searchsorted(splitters, keys, side="left")
+    return jnp.minimum(s, num_shards - 1).astype(jnp.int32)
+
+
+def route_ranges(splitters: KeyArray, lo: KeyArray,
+                 hi: KeyArray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(first, last) owning shard of each range [lo, hi].
+
+    Every shard in ``[first, last]`` intersects the range; the per-shard
+    sub-range is just [lo, hi] evaluated shard-locally (a shard only ranks
+    its own keys, so no bound clamping is needed — the decomposition at
+    the splitters is implicit in ownership).
+    """
+    first = route_keys(splitters, lo)
+    last = jnp.maximum(first, route_keys(splitters, hi))
+    return first, last
+
+
+def partition_cuts(n: int, num_shards: int) -> np.ndarray:
+    """Equal-count partition offsets: ``num_shards + 1`` monotonically
+    increasing cut positions with shard s owning ``[cuts[s], cuts[s+1])``.
+
+    The ONE place the slice math lives: ``compute_splitters`` derives the
+    splitters from these cuts and the live sharded store loads its shards
+    from the same cuts, so splitters and shard contents cannot drift.
+    """
+    if n < num_shards:
+        raise ValueError(f"cannot split {n} keys into {num_shards} shards")
+    per = -(-n // num_shards)
+    return np.minimum(np.arange(num_shards + 1, dtype=np.int64) * per, n)
+
+
+def compute_splitters(sorted_keys: KeyArray, num_shards: int) -> KeyArray:
+    """Equal-count splitters over an ascending key array.
+
+    splitters[s] = last key of the s-th contiguous slice (the last
+    splitter is the global max key).  Used at build time and by the skew
+    monitor's rebalance.
+    """
+    cuts = partition_cuts(sorted_keys.shape[0], num_shards)
+    return sorted_keys.take(jnp.asarray(np.maximum(cuts[1:] - 1, 0),
+                                        dtype=jnp.int32))
 
 
 def _local_rank(keys: KeyArray, reps: KeyArray, bucket_size: int,

@@ -15,7 +15,7 @@ See docs/ARCHITECTURE.md for the module map and the lane layout.
 """
 from .backends import Backend, available_backends, get_backend, get_probe
 from .batch import QueryBatch, QueryPlan
-from .engine import BatchResult, RankEngine
+from .engine import BatchResult, RankEngine, clear_shared_exec
 
 __all__ = [
     "Backend",
@@ -24,6 +24,7 @@ __all__ = [
     "QueryPlan",
     "RankEngine",
     "available_backends",
+    "clear_shared_exec",
     "get_backend",
     "get_probe",
 ]

@@ -81,13 +81,26 @@ def register(cls):
     return cls
 
 
-def get_backend(name: str) -> Backend:
+def get_backend(name: str, kind: Optional[str] = None) -> Backend:
+    """Resolve a registered backend by name.
+
+    ``kind`` asserts the index shape the caller is about to rank over
+    ('flat' | 'node'); a mismatch fails loudly instead of producing
+    garbage ranks — the sharded live store uses this to guarantee every
+    shard dispatches through a chain-aware backend.
+    """
     try:
-        return _REGISTRY[name]
+        backend = _REGISTRY[name]
     except KeyError:
         raise KeyError(
             f"unknown backend {name!r}; available: {available_backends()}"
         ) from None
+    if kind is not None and backend.kind != kind:
+        raise ValueError(
+            f"backend {name!r} serves kind={backend.kind!r}, "
+            f"caller requires kind={kind!r} "
+            f"(available: {available_backends(kind)})")
+    return backend
 
 
 def available_backends(kind: Optional[str] = None) -> List[str]:

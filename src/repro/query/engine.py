@@ -64,9 +64,28 @@ def _make_run(backend: "Backend", n_point: int, n_range: int, max_hits: int):
 
 
 # Process-wide executable cache for PYTREE indexes (argument-passed): one
-# jitted pipeline per (backend, plan signature); jax.jit's own cache then
-# specializes per index treedef/shape, so successive store versions hit.
+# jitted pipeline per (cache scope, backend, plan signature); jax.jit's own
+# cache then specializes per index treedef/shape, so successive store
+# versions hit.  ``cache scope`` is the shard-indexing handle: every shard
+# of a ShardedLiveStore binds the same scope, so S shards with matching
+# static bounds share ONE compiled executable (shards whose bounds diverge
+# — say one grew a longer chain — specialize under the same jitted callable
+# via jax.jit's treedef/aux keying, not by cloning the pipeline).
 _SHARED_EXEC: Dict[Tuple, object] = {}
+
+
+def clear_shared_exec(scope: Optional[str] = None) -> int:
+    """Drop shared executables (all, or one cache scope's).  Returns the
+    number of entries dropped — an operator hook for long-lived serving
+    processes that tear down a store."""
+    if scope is None:
+        n = len(_SHARED_EXEC)
+        _SHARED_EXEC.clear()
+        return n
+    victims = [k for k in _SHARED_EXEC if k[0] == scope]
+    for k in victims:
+        del _SHARED_EXEC[k]
+    return len(victims)
 
 
 class RankEngine:
@@ -78,11 +97,13 @@ class RankEngine:
     """
 
     def __init__(self, index: "cgrx.CgrxIndex",
-                 backend: Optional[str] = None, jit: bool = True):
+                 backend: Optional[str] = None, jit: bool = True,
+                 cache_scope: Optional[str] = None):
         self.index = index
         self.backend_name = backend or index.method
         self.backend: Backend = get_backend(self.backend_name)
         self._jit = jit
+        self.cache_scope = cache_scope
         self._exec_cache: Dict[Tuple, object] = {}
 
     # -- raw rank ------------------------------------------------------------
@@ -115,7 +136,8 @@ class RankEngine:
             # passing lets every version with unchanged static bounds
             # (treedef aux + shapes) share one compiled executable.
             if self._jit:
-                key = (self.backend_name, n_point, n_range, max_hits)
+                key = (self.cache_scope, self.backend_name,
+                       n_point, n_range, max_hits)
                 jitted = _SHARED_EXEC.get(key)
                 if jitted is None:
                     jitted = jax.jit(run)

@@ -14,14 +14,20 @@ turns them into one long-lived, updatable, queryable index:
 ``metrics``     ``LiveStats``, the operator-facing stats surface;
 ``frontend``    ``LiveFrontend`` — tick-based mixed-op queue, one device
                 dispatch per op class per tick (serving/engine.py's
-                admission pattern applied to the index itself).
+                admission pattern applied to the index itself);
+``sharded``     ``ShardedLiveStore`` — the range-partitioned serving
+                tier: splitter-routed LiveIndex shards, cross-shard range
+                decomposition + rank-offset merge, per-shard compaction
+                and the skew-triggered splitter rebalance.
 
-See docs/ARCHITECTURE.md ("Live store") for the epoch diagram.
+See docs/ARCHITECTURE.md ("Live store", "Sharded serving tier") for the
+epoch and routing diagrams.
 """
 from .compaction import CompactionPolicy, CompactionTask, should_compact
 from .frontend import LiveFrontend, TickReport
 from .live import LiveConfig, LiveIndex, NodeIndexView
-from .metrics import LiveStats, collect
+from .metrics import LiveStats, ShardedStats, collect, collect_sharded
+from .sharded import ShardedConfig, ShardedLiveStore
 
 __all__ = [
     "CompactionPolicy",
@@ -31,7 +37,11 @@ __all__ = [
     "LiveIndex",
     "LiveStats",
     "NodeIndexView",
+    "ShardedConfig",
+    "ShardedLiveStore",
+    "ShardedStats",
     "TickReport",
     "collect",
+    "collect_sharded",
     "should_compact",
 ]

@@ -1,4 +1,4 @@
-"""Tick-based mixed-workload frontend over a LiveIndex.
+"""Tick-based mixed-workload frontend over a LiveIndex (or sharded store).
 
 Mirrors the serving engine's admission discipline (serving/engine.py):
 requests of all four kinds — point lookup, range lookup, insert, delete —
@@ -16,6 +16,13 @@ dispatch per op class:
 Within a tick, writes land before reads: a lookup submitted in the same
 tick as an insert of its key hits.  Tickets are dense ints; results are
 retrievable (once) after the tick that served them.
+
+The backing store is duck-typed: anything exposing ``apply`` /
+``maybe_compact`` / ``execute`` / ``sync`` / ``epoch`` serves.  With a
+``ShardedLiveStore`` the same tick loop becomes shard-aware for free —
+writes route to owning shards (one apply dispatch per touched shard),
+reads decompose at the splitters (one engine dispatch per touched shard),
+and the policy step compacts/rebalances shards independently.
 """
 from __future__ import annotations
 
@@ -162,7 +169,7 @@ class LiveFrontend:
             if dels:
                 dk = _concat([k for _, k in dels])
             self.live.apply(ik, ir, dk, auto_compact=False)
-            jax.block_until_ready(self.live.store.node_keys.lo)
+            self.live.sync()
             for t, k, _ in ins:
                 self._results[t] = int(k.shape[0])
             for t, k in dels:
@@ -173,7 +180,7 @@ class LiveFrontend:
         t0 = time.perf_counter()
         compacted = self.live.maybe_compact() if (n_insert or n_delete) else None
         if compacted:
-            jax.block_until_ready(self.live.store.node_keys.lo)
+            self.live.sync()
         t_compact = time.perf_counter() - t0
 
         # ---- reads: one engine call for all points + ranges ----

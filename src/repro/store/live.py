@@ -179,6 +179,10 @@ class LiveConfig:
     jit: bool = True                    # jit the engine: the view is a
                                         # pytree jit ARGUMENT, so store
                                         # versions share one executable
+    cache_scope: Optional[str] = None   # executable-cache namespace; the
+                                        # sharded store binds one scope for
+                                        # all shards so they share compiled
+                                        # pipelines (query/engine.py)
 
 
 class LiveIndex:
@@ -251,8 +255,15 @@ class LiveIndex:
         it as a jit argument — successive versions with unchanged static
         bounds reuse one compiled executable."""
         if self._engine is None:
-            self._engine = RankEngine(self.view, jit=self.config.jit)
+            self._engine = RankEngine(self.view, jit=self.config.jit,
+                                      cache_scope=self.config.cache_scope)
         return self._engine
+
+    def sync(self) -> None:
+        """Block until the current store version's buffers are ready (the
+        frontend's per-tick fence; duck-typed — ShardedLiveStore fences
+        every shard)."""
+        jax.block_until_ready(self.store.node_keys.lo)
 
     @property
     def live_keys(self) -> int:

@@ -6,10 +6,16 @@ index: where the epoch is, how degraded the chains are, how much memory
 the two structures pin, and how much update traffic has accumulated since
 the last compaction.  Collected host-side; the only device sync is the
 live-key count (one small reduction).
+
+``ShardedStats`` is the rollup over a range-partitioned store
+(store/sharded.py): one ``LiveStats`` per shard plus the aggregates the
+router and skew monitor act on (fill imbalance, per-shard epochs,
+rebalance count).
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,6 +53,56 @@ class LiveStats:
         return self.store_bytes + self.snapshot_bytes
 
 
+@dataclasses.dataclass(frozen=True)
+class ShardedStats:
+    """Rollup over a ``ShardedLiveStore``: per-shard snapshots + the
+    aggregates the operator and the skew monitor reason about."""
+
+    num_shards: int
+    shards: Tuple[LiveStats, ...]   # index = shard id (key-range order)
+    rebalances: int                 # splitter recomputations since build
+    applies: int                    # routed apply() calls since build
+    inserts: int                    # keys submitted for insert since build
+    deletes: int                    # keys submitted for delete since build
+
+    @property
+    def live_keys(self) -> int:
+        return sum(s.live_keys for s in self.shards)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(s.total_bytes for s in self.shards)
+
+    @property
+    def compactions(self) -> int:
+        return sum(s.compactions for s in self.shards)
+
+    @property
+    def epochs(self) -> Tuple[int, ...]:
+        """Per-shard epoch counters — independent by design: a hot shard
+        epoch-swaps without its siblings moving."""
+        return tuple(s.epoch for s in self.shards)
+
+    @property
+    def shard_live(self) -> Tuple[int, ...]:
+        return tuple(s.live_keys for s in self.shards)
+
+    @property
+    def imbalance(self) -> float:
+        """Max shard fill over the balanced mean — the skew monitor's
+        trigger quantity (1.0 = perfectly balanced)."""
+        mean = self.live_keys / max(self.num_shards, 1)
+        return max(self.shard_live) / mean if mean else 0.0
+
+    @property
+    def compacting(self) -> bool:
+        return any(s.compacting for s in self.shards)
+
+    @property
+    def max_chain(self) -> int:
+        return max(s.max_chain for s in self.shards)
+
+
 def collect(live) -> LiveStats:
     """Build a ``LiveStats`` from a ``LiveIndex`` (duck-typed to avoid an
     import cycle: live.py imports this module for the return type)."""
@@ -68,4 +124,17 @@ def collect(live) -> LiveStats:
         deletes_since_compact=live.deletes_since_compact,
         compactions=live.compactions,
         compacting=live.compacting,
+    )
+
+
+def collect_sharded(store) -> ShardedStats:
+    """Build a ``ShardedStats`` from a ``ShardedLiveStore`` (duck-typed,
+    same import-cycle reasoning as ``collect``)."""
+    return ShardedStats(
+        num_shards=store.num_shards,
+        shards=tuple(collect(s) for s in store.shards),
+        rebalances=store.rebalances,
+        applies=store.applies,
+        inserts=store.inserts,
+        deletes=store.deletes,
     )

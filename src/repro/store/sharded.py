@@ -1,0 +1,443 @@
+"""ShardedLiveStore: a range-partitioned live serving tier.
+
+The single-shard ``LiveIndex`` (store/live.py) proves the paper's update
+mechanism as a store; this module scales it out the way the static mesh
+path (core/distributed.py) scales the immutable index: the key space is
+range-partitioned into ``S`` shards by per-shard max-key *splitters*, and
+every shard owns a complete ``LiveIndex`` — epoch snapshot + node-chain
+delta + its own compaction lifecycle.  The splitter math is imported from
+``core.distributed`` so the static read-only tier and this live tier agree
+on ownership by construction.
+
+Routing (one successor search over S splitters, host-negligible):
+
+    point k        -> shard route_keys(splitters, k)   (exactly one owner)
+    range [l, u]   -> shards route_ranges(...)          (a contiguous span)
+    insert/delete  -> same search as points; the LAST shard absorbs keys
+                      beyond the last splitter (mirroring how a cgRX last
+                      bucket absorbs > maxRep inserts)
+
+Reads: each shard that owns work gets ONE batched engine dispatch per tick
+— its points plus every range whose span covers it, coalesced through the
+``QueryBatch`` lane planner and served by the chain-aware 'node' backend.
+A cross-shard range needs no clamping: a shard only ranks its own keys, so
+issuing the full [l, u] to every shard in the span IS the decomposition at
+the splitters.  Results merge with a *rank-offset prefix* over shard live
+counts: global position = prefix[shard] + local rank, global range start =
+prefix[first] + local start, counts add, and row blocks concatenate in
+shard order (shards are ordered ranges, so concatenation is sorted order).
+That makes every merged result bit-identical to a single-shard oracle over
+the same live set (tests/test_sharded_store.py) — found/row_id/position
+for points, start/count/row_ids for ranges.
+
+Compaction is per-shard and independent: a hot shard epoch-swaps without
+pausing its siblings (their engines, chains and epochs are untouched), and
+reads during a shard's in-flight swap serve that shard's current epoch
+exactly as in the single-shard store.
+
+Skew: range partitions drift under non-uniform insert streams (a Zipf
+head lands on one shard).  The skew monitor compares per-shard fill to the
+balanced mean; past ``max_imbalance`` it recomputes equal-count splitters
+and migrates boundary buckets through the existing extract→presorted-build
+path — per-shard ``nodes.extract`` cuts concatenate (already globally
+sorted, shards being ordered ranges) and reload into fresh equal shards.
+
+All shards bind one executable-cache scope (query/engine.py), so S shards
+with matching static bounds share ONE compiled pipeline per plan shape.
+
+Unique-key workloads assumed, as everywhere in this repo (paper Sec. 4):
+duplicates of a key that straddle a splitter would split ownership.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cgrx, nodes
+from repro.core.distributed import (compute_splitters, partition_cuts,
+                                    route_keys, route_ranges)
+from repro.core.keys import KeyArray, concat_keys, sort_with_payload
+from repro.query import BatchResult, QueryBatch, QueryPlan
+from repro.query.backends import get_backend
+
+from . import metrics
+from .live import LiveConfig, LiveIndex
+
+MISS = int(np.int32(cgrx.MISS))
+
+# Routing runs on every read AND write tick; eager ``searchsorted`` would
+# re-lower its fori_loop per call, so the router is jitted once here
+# (cached per splitter/query shape — a handful of tiny executables).
+_route_keys = jax.jit(route_keys)
+_route_ranges = jax.jit(route_ranges)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedConfig:
+    """Partitioning + skew knobs; per-shard behavior lives in ``live``."""
+
+    num_shards: int = 4
+    live: LiveConfig = dataclasses.field(default_factory=LiveConfig)
+    max_imbalance: Optional[float] = 2.0  # skew trigger: max shard fill
+                                          # over balanced mean; None = off
+    min_rebalance_keys: int = 256         # never rebalance tiny stores
+    auto_rebalance: bool = True           # evaluate skew in maybe_compact
+    cache_scope: str = "sharded"          # shared executable-cache scope
+
+
+class ShardedLiveStore:
+    """Range-partitioned live index: S splitter-routed ``LiveIndex`` shards.
+
+    Usage::
+
+        store = ShardedLiveStore.build(keys, rows, ShardedConfig(num_shards=4))
+        store.insert(new_keys, new_rows)       # routed, 1 apply per shard
+        store.delete(old_keys)
+        res = store.lookup(point_keys)         # global positions
+        rng = store.range_lookup(lo, hi, 64)   # cross-shard merge
+        store.stats()                          # metrics.ShardedStats
+    """
+
+    def __init__(self, shards: List[LiveIndex], splitters: KeyArray,
+                 config: ShardedConfig):
+        if len(shards) != config.num_shards:
+            raise ValueError(f"{len(shards)} shards != {config.num_shards}")
+        # Fail loudly if the per-shard serving path is mis-wired: every
+        # shard read dispatches through a chain-aware ('node') backend.
+        get_backend("node", kind="node")
+        self.shards = shards
+        self.splitters = splitters
+        self.config = config
+        self.rebalances = 0
+        self.applies = 0
+        self.inserts = 0
+        self.deletes = 0
+        self._counts: Optional[np.ndarray] = None
+
+    # -- construction ---------------------------------------------------------
+
+    @classmethod
+    def build(cls, keys: KeyArray, row_ids: Optional[jnp.ndarray] = None,
+              config: Optional[ShardedConfig] = None,
+              *, presorted: bool = False) -> "ShardedLiveStore":
+        cfg = config or ShardedConfig()
+        n = keys.shape[0]
+        if n < cfg.num_shards:
+            raise ValueError(
+                f"need >= {cfg.num_shards} keys to build {cfg.num_shards} "
+                f"shards, got {n}")
+        if row_ids is None:
+            row_ids = jnp.arange(n, dtype=jnp.int32)
+        if not presorted:
+            keys, row_ids = sort_with_payload(keys, row_ids.astype(jnp.int32))
+        splitters = compute_splitters(keys, cfg.num_shards)
+        shards = _load_shards(keys, row_ids, cfg)
+        return cls(shards, splitters, cfg)
+
+    @property
+    def num_shards(self) -> int:
+        return self.config.num_shards
+
+    @property
+    def epoch(self) -> int:
+        """Max shard epoch (shards swap independently; per-shard counters
+        are in ``stats().epochs``)."""
+        return max(s.epoch for s in self.shards)
+
+    @property
+    def live_keys(self) -> int:
+        return int(self._live_counts().sum())
+
+    @property
+    def compacting(self) -> bool:
+        return any(s.compacting for s in self.shards)
+
+    def sync(self) -> None:
+        for s in self.shards:
+            s.sync()
+
+    # -- routing --------------------------------------------------------------
+
+    def route(self, keys: KeyArray) -> np.ndarray:
+        """Owning shard id per key (host array, for batch slicing)."""
+        return np.asarray(_route_keys(self.splitters, keys))
+
+    def _live_counts(self) -> np.ndarray:
+        """Per-shard live-key counts (one small device sync per shard,
+        cached; any write or rebalance invalidates)."""
+        if self._counts is None:
+            self._counts = np.array([s.live_keys for s in self.shards],
+                                    np.int64)
+        return self._counts
+
+    def _live_prefix(self) -> np.ndarray:
+        """Exclusive prefix of per-shard live counts — the rank offset
+        that lifts shard-local ranks to global positions."""
+        counts = self._live_counts()
+        return np.concatenate([[0], np.cumsum(counts)[:-1]])
+
+    def _invalidate(self) -> None:
+        self._counts = None
+
+    # -- reads ----------------------------------------------------------------
+
+    def batch(self) -> QueryBatch:
+        return QueryBatch()
+
+    def lookup(self, queries: KeyArray) -> cgrx.LookupResult:
+        plan = QueryBatch().add_points(queries).plan()
+        return self.execute(plan).points
+
+    def range_lookup(self, lo: KeyArray, hi: KeyArray,
+                     max_hits: int = 64) -> cgrx.RangeResult:
+        plan = QueryBatch().add_ranges(lo, hi).plan(max_hits=max_hits)
+        return self.execute(plan).ranges
+
+    def execute(self, plan: QueryPlan):
+        """Serve a planned mixed point/range batch across shards.
+
+        The flat lane plan is split back into its point/range sections
+        (the lane layout is static: [points | lows | highs | pad]), each
+        shard re-plans only its owned slice through the same QueryBatch
+        planner, and one engine dispatch per touched shard serves it.
+        """
+        np_, nr = plan.n_point, plan.n_range
+        pts = plan.keys[:np_]
+        lo = plan.keys[np_:np_ + nr]
+        hi = plan.keys[np_ + nr:np_ + 2 * nr]
+
+        owners = self.route(pts) if np_ else np.zeros(0, np.int32)
+        if nr:
+            first_d, last_d = _route_ranges(self.splitters, lo, hi)
+            first, last = np.asarray(first_d), np.asarray(last_d)
+        else:
+            first = last = np.zeros(0, np.int32)
+        prefix = self._live_prefix()
+
+        # Per-shard sub-batches -> one engine dispatch per touched shard.
+        point_parts: List[Tuple[np.ndarray, object]] = []
+        range_parts: List[Tuple[int, np.ndarray, object]] = []
+        for s, shard in enumerate(self.shards):
+            p_idx = np.nonzero(owners == s)[0]
+            r_idx = np.nonzero((first <= s) & (s <= last))[0]
+            if not len(p_idx) and not len(r_idx):
+                continue
+            qb = QueryBatch()
+            if len(p_idx):
+                qb.add_points(pts[p_idx])
+            if len(r_idx):
+                qb.add_ranges(lo[r_idx], hi[r_idx])
+            res = shard.execute(qb.plan(max_hits=plan.max_hits))
+            if len(p_idx):
+                point_parts.append((p_idx, _shift_points(res.points,
+                                                         prefix[s])))
+            if len(r_idx):
+                range_parts.append((s, r_idx, res.ranges))
+
+        points = _merge_points(np_, point_parts)
+        ranges = _merge_ranges(nr, plan.max_hits, range_parts, first, prefix)
+        return BatchResult(points=points, ranges=ranges)
+
+    # -- writes ---------------------------------------------------------------
+
+    def apply(self, ins_keys: Optional[KeyArray] = None,
+              ins_rows: Optional[jnp.ndarray] = None,
+              del_keys: Optional[KeyArray] = None,
+              *, auto_compact: Optional[bool] = None) -> Optional[str]:
+        """Route one mixed batch to owning shards, one apply per shard.
+
+        Returns the policy summary string (see ``maybe_compact``) when any
+        shard compacted or a rebalance fired, else None.
+        """
+        n_ins = int(ins_keys.shape[0]) if ins_keys is not None else 0
+        n_del = int(del_keys.shape[0]) if del_keys is not None else 0
+        if n_ins or n_del:
+            owner_i = self.route(ins_keys) if n_ins else np.zeros(0, np.int32)
+            owner_d = self.route(del_keys) if n_del else np.zeros(0, np.int32)
+            if n_ins and ins_rows is not None:
+                ins_rows = jnp.asarray(ins_rows, jnp.int32)
+            for s, shard in enumerate(self.shards):
+                i_idx = np.nonzero(owner_i == s)[0]
+                d_idx = np.nonzero(owner_d == s)[0]
+                if not len(i_idx) and not len(d_idx):
+                    continue
+                shard.apply(
+                    ins_keys[i_idx] if len(i_idx) else None,
+                    ins_rows[i_idx] if len(i_idx) else None,
+                    del_keys[d_idx] if len(d_idx) else None,
+                    auto_compact=False)
+            self.applies += 1
+            self.inserts += n_ins
+            self.deletes += n_del
+            self._invalidate()
+        ac = self.config.live.auto_compact if auto_compact is None \
+            else auto_compact
+        return self.maybe_compact() if ac else None
+
+    def insert(self, keys: KeyArray, rows: jnp.ndarray) -> Optional[str]:
+        return self.apply(ins_keys=keys, ins_rows=rows)
+
+    def delete(self, keys: KeyArray) -> Optional[str]:
+        return self.apply(del_keys=keys)
+
+    # -- maintenance: per-shard compaction + skew rebalance -------------------
+
+    def maybe_compact(self) -> Optional[str]:
+        """Evaluate every shard's compaction policy independently, then
+        the skew monitor.  Returns a summary like ``'s1:chain,s3:fill'``
+        (or ``'rebalance'``, or both) when anything fired, else None —
+        the same Optional[str] contract the frontend's tick loop expects
+        from a single ``LiveIndex``."""
+        fired = []
+        for i, shard in enumerate(self.shards):
+            reason = shard.maybe_compact()
+            if reason:
+                fired.append(f"s{i}:{reason}")
+        if self.config.auto_rebalance and self.maybe_rebalance():
+            fired.append("rebalance")
+        return ",".join(fired) or None
+
+    def compact_shard(self, shard_id: int, reason: str = "manual") -> None:
+        """Foreground-compact ONE shard; siblings keep serving untouched
+        (their epochs, chains and engines don't move)."""
+        self.shards[shard_id].compact(reason)
+
+    def maybe_rebalance(self) -> bool:
+        """Fire a splitter rebalance when per-shard fill diverged past
+        ``max_imbalance``.  Skipped while any shard has an in-flight
+        compaction task (its replay log references the store being
+        replaced)."""
+        cfg = self.config
+        if cfg.max_imbalance is None or self.compacting:
+            return False
+        counts = self._live_counts()
+        total = int(counts.sum())
+        if total < max(cfg.min_rebalance_keys, cfg.num_shards):
+            return False
+        if counts.max() <= cfg.max_imbalance * (total / cfg.num_shards):
+            return False
+        self.rebalance()
+        return True
+
+    def rebalance(self) -> None:
+        """Recompute equal-count splitters and migrate boundary buckets.
+
+        Migration IS the existing extract→presorted-build path: each
+        shard's ``nodes.extract`` emits its live set sorted; shard cuts
+        concatenate in shard order (already globally sorted — shards are
+        ordered key ranges) and reload into fresh equal partitions.  Every
+        shard restarts at epoch 0 with chains folded flat; store-level
+        counters (applies/inserts/deletes/rebalances) survive.
+        """
+        parts_k, parts_r = [], []
+        for shard in self.shards:
+            skeys, srows, n_live = nodes.extract(shard.store)
+            parts_k.append(skeys[:n_live])
+            parts_r.append(srows[:n_live])
+        all_keys = parts_k[0]
+        all_rows = parts_r[0]
+        for k, r in zip(parts_k[1:], parts_r[1:]):
+            all_keys = concat_keys(all_keys, k)
+            all_rows = jnp.concatenate([all_rows, r])
+        self.splitters = compute_splitters(all_keys, self.config.num_shards)
+        self.shards = _load_shards(all_keys, all_rows, self.config)
+        self.rebalances += 1
+        self._invalidate()
+
+    # -- stats ----------------------------------------------------------------
+
+    def stats(self) -> metrics.ShardedStats:
+        return metrics.collect_sharded(self)
+
+
+# ---------------------------------------------------------------------------
+# Build/merge helpers.
+# ---------------------------------------------------------------------------
+
+def _load_shards(sorted_keys: KeyArray, sorted_rows: jnp.ndarray,
+                 cfg: ShardedConfig) -> List[LiveIndex]:
+    """Contiguous equal slices of a sorted key set -> one LiveIndex each,
+    through the presorted bulk-load path.  Slice bounds come from the
+    same ``partition_cuts`` that ``compute_splitters`` derives splitters
+    from, so shard contents and routing cannot drift.  All shards share
+    the store's executable-cache scope."""
+    cuts = partition_cuts(sorted_keys.shape[0], cfg.num_shards)
+    live_cfg = dataclasses.replace(
+        cfg.live, cache_scope=cfg.live.cache_scope or cfg.cache_scope)
+    return [LiveIndex.build(sorted_keys[int(a):int(b)],
+                            sorted_rows[int(a):int(b)],
+                            live_cfg, presorted=True)
+            for a, b in zip(cuts[:-1], cuts[1:])]
+
+
+def _shift_points(res: cgrx.LookupResult, offset: int) -> cgrx.LookupResult:
+    """Lift shard-local rank positions to global ones (rank-offset
+    prefix); found/row_id are location-independent, bucket_id stays
+    shard-local (documented — shard bucketing differs from any
+    single-shard build's)."""
+    return res._replace(position=(res.position
+                                  + jnp.int32(offset)).astype(jnp.int32))
+
+
+def _merge_points(n_point: int,
+                  parts: List[Tuple[np.ndarray, cgrx.LookupResult]]
+                  ) -> cgrx.LookupResult:
+    """Scatter per-shard point results back into request order."""
+    z = jnp.zeros((0,), jnp.int32)
+    if n_point == 0:
+        return cgrx.LookupResult(bucket_id=z, row_id=z,
+                                 found=jnp.zeros((0,), bool), position=z)
+    found = np.zeros(n_point, bool)
+    row = np.full(n_point, MISS, np.int32)
+    pos = np.zeros(n_point, np.int32)
+    bucket = np.zeros(n_point, np.int32)
+    for idx, res in parts:
+        found[idx] = np.asarray(res.found)
+        row[idx] = np.asarray(res.row_id)
+        pos[idx] = np.asarray(res.position)
+        bucket[idx] = np.asarray(res.bucket_id)
+    return cgrx.LookupResult(bucket_id=jnp.asarray(bucket),
+                             row_id=jnp.asarray(row),
+                             found=jnp.asarray(found),
+                             position=jnp.asarray(pos))
+
+
+def _merge_ranges(n_range: int, max_hits: int,
+                  parts: List[Tuple[int, np.ndarray, cgrx.RangeResult]],
+                  first: np.ndarray, prefix: np.ndarray) -> cgrx.RangeResult:
+    """Merge per-shard sub-range results into global ones.
+
+    start = prefix[first shard] + its local start (shards before the span
+    hold only keys < lo, so their full live counts ARE the rank offset);
+    counts add across the span; row blocks concatenate in shard order —
+    bit-identical to the single-shard scan because shard order IS sorted
+    order.
+    """
+    if n_range == 0:
+        z = jnp.zeros((0,), jnp.int32)
+        return cgrx.RangeResult(start=z, count=z,
+                                row_ids=jnp.zeros((0, max_hits), jnp.int32))
+    start = np.zeros(n_range, np.int32)
+    count = np.zeros(n_range, np.int32)
+    rows = np.full((n_range, max_hits), MISS, np.int32)
+    fill = np.zeros(n_range, np.int32)  # rows already merged per range
+    for s, idx, res in sorted(parts, key=lambda p: p[0]):
+        r_start = np.asarray(res.start)
+        r_count = np.asarray(res.count)
+        r_rows = np.asarray(res.row_ids)
+        for k, j in enumerate(idx):
+            c = int(r_count[k])
+            if s == first[j]:
+                start[j] = prefix[s] + int(r_start[k])
+            count[j] += c
+            take = min(c, max_hits - int(fill[j]))
+            if take > 0:
+                rows[j, fill[j]:fill[j] + take] = r_rows[k, :take]
+                fill[j] += take
+    return cgrx.RangeResult(start=jnp.asarray(start),
+                            count=jnp.asarray(count),
+                            row_ids=jnp.asarray(rows))

@@ -1,0 +1,92 @@
+"""Perf-CI plumbing: JSON result recording + the regression gate.
+
+The contract the perf-smoke CI job relies on: ``benchmarks.common.emit``
+records every metric into the machine-readable ``{suite: {metric: us}}``
+map, ``benchmarks.run --json`` dumps it, and ``benchmarks.compare`` exits
+non-zero when any tracked metric regresses past the threshold — verified
+here with a synthetic 2x slowdown.
+"""
+import json
+
+import pytest
+
+from benchmarks import common
+from benchmarks import compare as cmp
+
+
+BASE = {
+    "live_store": {"wave0": 100.0, "wave1": 200.0},
+    "sharded_store": {"points": 50.0},
+}
+
+
+def _dump(tmp_path, name, data):
+    p = tmp_path / name
+    p.write_text(json.dumps(data))
+    return str(p)
+
+
+# ---------------------------------------------------------------------------
+# emit() -> RESULTS recording (what --json serializes).
+# ---------------------------------------------------------------------------
+
+def test_emit_records_under_current_suite(capsys):
+    common.set_suite("unit_suite")
+    common.emit("metric_a", 1.5e-3, "derived=x")
+    common.emit("metric_b", 2e-6)
+    out = capsys.readouterr().out
+    assert "metric_a,1500.0us,derived=x" in out
+    assert common.RESULTS["unit_suite"]["metric_a"] == pytest.approx(1500.0)
+    assert common.RESULTS["unit_suite"]["metric_b"] == pytest.approx(2.0)
+
+
+# ---------------------------------------------------------------------------
+# compare(): the gate logic.
+# ---------------------------------------------------------------------------
+
+def test_synthetic_2x_slowdown_fails_build(tmp_path, capsys):
+    slow = {"live_store": {"wave0": 200.0, "wave1": 400.0},
+            "sharded_store": {"points": 100.0}}
+    rc = cmp.main([_dump(tmp_path, "base.json", BASE),
+                   _dump(tmp_path, "cur.json", slow)])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert out.count("REGRESSION") == 3
+    assert "live_store/wave0: 100.0us -> 200.0us (+100.0%)" in out
+
+
+def test_within_threshold_passes(tmp_path):
+    ok = {"live_store": {"wave0": 120.0, "wave1": 240.0},
+          "sharded_store": {"points": 60.0}}  # +20% < 25% default
+    assert cmp.main([_dump(tmp_path, "base.json", BASE),
+                     _dump(tmp_path, "cur.json", ok)]) == 0
+
+
+def test_improvement_and_custom_threshold(tmp_path):
+    cur = {"live_store": {"wave0": 10.0, "wave1": 260.0},
+           "sharded_store": {"points": 50.0}}  # wave1 is +30%
+    base = _dump(tmp_path, "base.json", BASE)
+    assert cmp.main([base, _dump(tmp_path, "a.json", cur)]) == 1
+    assert cmp.main([base, _dump(tmp_path, "b.json", cur),
+                     "--threshold", "0.5"]) == 0
+
+
+def test_track_regex_limits_the_gate(tmp_path):
+    slow = {"live_store": {"wave0": 1000.0, "wave1": 1000.0},
+            "sharded_store": {"points": 50.0}}
+    base = _dump(tmp_path, "base.json", BASE)
+    cur = _dump(tmp_path, "cur.json", slow)
+    assert cmp.main([base, cur, "--track", "sharded_store/"]) == 0
+    assert cmp.main([base, cur, "--track", "live_store/"]) == 1
+
+
+def test_missing_and_new_metrics(tmp_path, capsys):
+    cur = {"live_store": {"wave0": 100.0},
+           "brand_new_suite": {"m": 1.0}}
+    base = _dump(tmp_path, "base.json", BASE)
+    c = _dump(tmp_path, "cur.json", cur)
+    assert cmp.main([base, c]) == 0  # missing is a warning by default
+    out = capsys.readouterr().out
+    assert "MISSING live_store/wave1" in out
+    assert "NEW brand_new_suite/m" in out
+    assert cmp.main([base, c, "--strict"]) == 1

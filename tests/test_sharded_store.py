@@ -1,0 +1,358 @@
+"""ShardedLiveStore vs a single-shard oracle.
+
+The sharded tier's acceptance property: routing + cross-shard range
+decomposition + the rank-offset prefix merge must be invisible — after
+ANY sequence of routed insert/delete batches, lookups and range lookups
+over the S-shard store are bit-identical to a fresh single ``cgrx.build``
+over the same live set (found/row_id/position for points; start/count/
+row_ids for ranges — bucket_id is shard-local by documentation).  Plus:
+ranges spanning 3+ shards and empty shards, per-shard compaction
+independence under concurrent reads, the skew-triggered splitter
+rebalance on a Zipf insert stream, and the shard-aware frontend tick.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import cgrx
+from repro.core.distributed import compute_splitters, route_keys, route_ranges
+from repro.core.keys import KeyArray
+from repro.query import QueryBatch
+from repro.store import (CompactionPolicy, LiveConfig, LiveFrontend,
+                         ShardedConfig, ShardedLiveStore, ShardedStats)
+
+NEVER = CompactionPolicy().never()
+
+
+def mk(raw):
+    return KeyArray.from_u64(np.asarray(raw, dtype=np.uint64))
+
+
+def build_store(raw, num_shards=4, rows=None, **cfg_kwargs):
+    live = cfg_kwargs.pop("live", None) or LiveConfig(node_cap=16,
+                                                     policy=NEVER)
+    cfg_kwargs.setdefault("auto_rebalance", False)
+    cfg = ShardedConfig(num_shards=num_shards, live=live, **cfg_kwargs)
+    if rows is None:
+        rows = jnp.arange(len(raw), dtype=jnp.int32)
+    return ShardedLiveStore.build(mk(raw), rows, cfg)
+
+
+def build_oracle(live_dict, bucket_size=16):
+    ks = np.array(sorted(live_dict), dtype=np.uint64)
+    rows = np.array([live_dict[int(k)] for k in ks], dtype=np.int32)
+    return cgrx.build(mk(ks), jnp.asarray(rows), bucket_size,
+                      presorted=True), ks
+
+
+def assert_points_equal(got, want, ctx):
+    # bucket_id is shard-local by design; everything else is global.
+    for f in ("found", "row_id", "position"):
+        g, w = np.asarray(getattr(got, f)), np.asarray(getattr(want, f))
+        assert (g == w).all(), f"{ctx}: field {f} diverges"
+
+
+def assert_ranges_equal(got, want, ctx):
+    for f in want._fields:
+        g, w = np.asarray(getattr(got, f)), np.asarray(getattr(want, f))
+        assert (g == w).all(), f"{ctx}: field {f} diverges"
+
+
+def check_against_oracle(store, live_dict, rng, ctx, n_q=150,
+                         max_hits=32, wide_frac=0.6):
+    """Points (hits+misses) and cross-shard ranges vs a fresh build."""
+    oracle, ks = build_oracle(live_dict)
+    space = 1 << 44
+    hits = ks[rng.integers(0, len(ks), n_q)]
+    misses = np.setdiff1d(
+        np.unique(rng.integers(0, space, n_q // 2, dtype=np.uint64)), ks)
+    q = mk(np.concatenate([hits, misses]))
+    assert_points_equal(store.lookup(q), cgrx.lookup(oracle, q),
+                        f"{ctx}/points")
+
+    # Wide ranges: spans covering >= 3 of the shards, plus narrow ones.
+    span = max(int(len(ks) * wide_frac), 2)
+    starts = rng.integers(0, len(ks) - span, 25)
+    lo, hi = mk(ks[starts]), mk(ks[starts + span - 1])
+    assert_ranges_equal(store.range_lookup(lo, hi, max_hits),
+                        cgrx.range_lookup(oracle, lo, hi, max_hits),
+                        f"{ctx}/wide-ranges")
+    starts = rng.integers(0, len(ks) - 10, 25)
+    lo, hi = mk(ks[starts]), mk(ks[starts + 9])
+    assert_ranges_equal(store.range_lookup(lo, hi, max_hits),
+                        cgrx.range_lookup(oracle, lo, hi, max_hits),
+                        f"{ctx}/narrow-ranges")
+
+
+# ---------------------------------------------------------------------------
+# Router / splitter math (shared with core.distributed's static tier).
+# ---------------------------------------------------------------------------
+
+def test_router_ownership_is_contiguous_and_total():
+    raw = np.sort(np.unique(
+        np.random.default_rng(0).integers(0, 1 << 40, 4000,
+                                          dtype=np.uint64)))
+    splitters = compute_splitters(mk(raw), 4)
+    owners = np.asarray(route_keys(splitters, mk(raw)))
+    assert (np.diff(owners) >= 0).all()          # contiguous ranges
+    assert set(np.unique(owners)) == {0, 1, 2, 3}
+    # Beyond-max keys go to the last shard; range spans are [first, last].
+    beyond = np.asarray(route_keys(splitters, mk([(1 << 44) - 1])))
+    assert beyond[0] == 3
+    first, last = route_ranges(splitters, mk([raw[0]]), mk([raw[-1]]))
+    assert int(first[0]) == 0 and int(last[0]) == 3
+
+
+def test_build_routes_every_built_key_to_its_shard():
+    raw = np.sort(np.unique(
+        np.random.default_rng(1).integers(0, 1 << 40, 3000,
+                                          dtype=np.uint64)))
+    store = build_store(raw)
+    owners = store.route(mk(raw))
+    for s in range(store.num_shards):
+        sel = mk(raw[owners == s])
+        assert bool(np.asarray(store.shards[s].lookup(sel).found).all())
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity vs the single-shard oracle.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("num_shards", [2, 4, 7])
+def test_cross_shard_bit_identity_after_waves(num_shards):
+    rng = np.random.default_rng(2)
+    space = 1 << 44
+    raw = np.unique(rng.integers(0, space, 5000, dtype=np.uint64))[:3000]
+    store = build_store(raw, num_shards=num_shards)
+    live_dict = {int(k): i for i, k in enumerate(raw)}
+    nxt = len(raw)
+    check_against_oracle(store, live_dict, rng, "init")
+    for wave in range(3):
+        la = np.array(sorted(live_dict), dtype=np.uint64)
+        ins = np.setdiff1d(
+            np.unique(rng.integers(0, space, 2500, dtype=np.uint64)),
+            la)[:800]
+        dels = la[rng.choice(len(la), 500, replace=False)]
+        rows = np.arange(nxt, nxt + len(ins), dtype=np.int32)
+        nxt += len(ins)
+        store.apply(mk(ins), jnp.asarray(rows), mk(dels))
+        for k, r in zip(ins, rows):
+            live_dict[int(k)] = int(r)
+        for k in dels:
+            live_dict.pop(int(k))
+        check_against_oracle(store, live_dict, rng, f"wave{wave}")
+    assert store.stats().max_chain > 1   # chains actually degraded
+    assert store.applies == 3
+
+
+def test_range_spanning_all_shards_with_empty_shard():
+    """A middle shard emptied by deletes must stay transparent: ranges
+    spanning it keep exact global start/count/rows."""
+    rng = np.random.default_rng(3)
+    raw = np.arange(0, 40960, 10, dtype=np.uint64)   # 4096 keys
+    store = build_store(raw)
+    live_dict = {int(k): i for i, k in enumerate(raw)}
+    # Empty shard 1 completely (its span is the second quarter).
+    owners = store.route(mk(raw))
+    victims = raw[owners == 1]
+    assert len(victims) > 0
+    store.delete(mk(victims))
+    for k in victims:
+        live_dict.pop(int(k))
+    assert store.stats().shard_live[1] == 0
+    check_against_oracle(store, live_dict, rng, "empty-shard")
+    # A range that starts inside the emptied span.
+    oracle, ks = build_oracle(live_dict)
+    lo, hi = mk([int(victims[0])]), mk([int(raw[-1])])
+    assert_ranges_equal(store.range_lookup(lo, hi, 16),
+                        cgrx.range_lookup(oracle, lo, hi, 16),
+                        "range-from-empty-shard")
+
+
+def test_mixed_plan_one_dispatch_per_shard():
+    """A mixed point/range plan through execute() == the per-call APIs,
+    and only touched shards dispatch."""
+    rng = np.random.default_rng(4)
+    raw = np.unique(rng.integers(0, 1 << 40, 4000, dtype=np.uint64))[:3000]
+    store = build_store(raw)
+    pts = mk(raw[rng.integers(0, len(raw), 60)])
+    sraw = np.sort(raw)
+    starts = rng.integers(0, len(sraw) - 2500, 20)
+    lo, hi = mk(sraw[starts]), mk(sraw[starts + 2499])
+    plan = QueryBatch().add_points(pts).add_ranges(lo, hi).plan(max_hits=32)
+    res = store.execute(plan)
+    assert_points_equal(res.points, store.lookup(pts), "plan/points")
+    assert_ranges_equal(res.ranges, store.range_lookup(lo, hi, 32),
+                        "plan/ranges")
+    # A plan confined to shard 0's span leaves sibling engines untouched.
+    lo0 = mk(sraw[:8])
+    hi0 = mk(sraw[8:16])
+    engines_before = [s._engine for s in store.shards]
+    store.execute(QueryBatch().add_ranges(lo0, hi0).plan(max_hits=8))
+    assert store.shards[0]._engine is not None
+    for s, before in zip(store.shards[1:], engines_before[1:]):
+        assert s._engine is before   # untouched shard: no new engine bind
+
+
+def test_inserts_beyond_last_splitter_land_in_last_shard():
+    raw = np.arange(1000, 5096, dtype=np.uint64)
+    store = build_store(raw)
+    live_dict = {int(k): i for i, k in enumerate(raw)}
+    big = np.arange(1 << 43, (1 << 43) + 300, dtype=np.uint64)
+    store.insert(mk(big), jnp.arange(90000, 90300, dtype=jnp.int32))
+    for i, k in enumerate(big):
+        live_dict[int(k)] = 90000 + i
+    assert (store.route(mk(big)) == store.num_shards - 1).all()
+    check_against_oracle(store, live_dict, np.random.default_rng(5),
+                         "beyond-max")
+
+
+# ---------------------------------------------------------------------------
+# Per-shard compaction: independence + consistency under concurrent reads.
+# ---------------------------------------------------------------------------
+
+def test_hot_shard_compacts_alone():
+    raw = np.arange(0, 40960, 10, dtype=np.uint64)
+    pol = CompactionPolicy(max_chain=3, min_fill=None,
+                           max_tombstone_ratio=None)
+    store = build_store(raw, live=LiveConfig(node_cap=8, policy=pol))
+    # Dense burst confined to shard 0's key span.
+    ins = np.arange(1, 2000, 2, dtype=np.uint64)
+    summary = store.insert(mk(ins),
+                           jnp.arange(50000, 50000 + len(ins),
+                                      dtype=jnp.int32))
+    st = store.stats()
+    assert summary is not None and "s0:" in summary
+    assert st.epochs[0] >= 1
+    assert all(e == 0 for e in st.epochs[1:]), "compaction leaked to siblings"
+    assert store.epoch == max(st.epochs)
+
+
+def test_reads_consistent_during_one_shards_compaction():
+    rng = np.random.default_rng(7)
+    raw = np.unique(rng.integers(0, 1 << 40, 5000, dtype=np.uint64))[:3000]
+    store = build_store(raw)
+    live_dict = {int(k): i for i, k in enumerate(raw)}
+    ins = np.setdiff1d(np.unique(rng.integers(0, 1 << 40, 2000,
+                                              dtype=np.uint64)), raw)[:600]
+    store.insert(mk(ins), jnp.arange(10_000, 10_000 + len(ins),
+                                     dtype=jnp.int32))
+    for i, k in enumerate(ins):
+        live_dict[int(k)] = 10_000 + i
+
+    task = store.shards[1].begin_compaction("test")
+    assert store.compacting
+    # Reads across ALL shards (including the one mid-swap) stay exact.
+    check_against_oracle(store, live_dict, rng, "mid-shard-compaction")
+    # A routed write mid-swap: shard 1's slice lands in its replay log.
+    la = np.array(sorted(live_dict), dtype=np.uint64)
+    ins2 = np.setdiff1d(np.unique(rng.integers(0, 1 << 40, 1200,
+                                               dtype=np.uint64)), la)[:300]
+    store.insert(mk(ins2), jnp.arange(20_000, 20_000 + len(ins2),
+                                      dtype=jnp.int32))
+    for i, k in enumerate(ins2):
+        live_dict[int(k)] = 20_000 + i
+    owners2 = store.route(mk(ins2))
+    assert len(task.replay) == (1 if (owners2 == 1).any() else 0)
+    store.shards[1].finish_compaction(task)
+    assert not store.compacting
+    check_against_oracle(store, live_dict, rng, "post-shard-swap")
+
+
+def test_manual_compact_shard():
+    raw = np.arange(0, 8192, 2, dtype=np.uint64)
+    store = build_store(raw)
+    store.compact_shard(2)
+    assert store.stats().epochs == (0, 0, 1, 0)
+
+
+# ---------------------------------------------------------------------------
+# Skew monitor: splitter rebalance on a Zipf-skewed insert stream.
+# ---------------------------------------------------------------------------
+
+def test_zipf_skew_triggers_rebalance_and_stays_exact():
+    rng = np.random.default_rng(8)
+    raw = np.arange(0, 1 << 20, 256, dtype=np.uint64)    # 4096 keys
+    store = build_store(raw, auto_rebalance=True, max_imbalance=1.5,
+                        min_rebalance_keys=256)
+    live_dict = {int(k): i for i, k in enumerate(raw)}
+    # Zipf head: almost all inserts land in shard 0's key span.
+    z = rng.zipf(1.3, 40000)
+    z = np.setdiff1d(np.unique(z[z < (1 << 18)]).astype(np.uint64), raw)[:5000]
+    summary = store.insert(mk(z), jnp.arange(90000, 90000 + len(z),
+                                             dtype=jnp.int32))
+    for i, k in enumerate(z):
+        live_dict[int(k)] = 90000 + i
+    st = store.stats()
+    assert summary is not None and "rebalance" in summary
+    assert st.rebalances >= 1
+    assert st.imbalance < 1.5            # splitters recomputed to equal fill
+    check_against_oracle(store, live_dict, rng, "post-rebalance")
+    # Routing agrees with the NEW splitters: every live key still hits.
+    ks = np.array(sorted(live_dict), dtype=np.uint64)
+    res = store.lookup(mk(ks[rng.integers(0, len(ks), 400)]))
+    assert bool(np.asarray(res.found).all())
+
+
+def test_rebalance_skipped_below_min_keys_and_while_compacting():
+    raw = np.arange(0, 1280, 10, dtype=np.uint64)        # 128 keys
+    store = build_store(raw, auto_rebalance=True, max_imbalance=1.2,
+                        min_rebalance_keys=100_000)
+    ins = np.arange(1, 300, 2, dtype=np.uint64)
+    store.insert(mk(ins), jnp.arange(5000, 5000 + len(ins),
+                                     dtype=jnp.int32))
+    assert store.rebalances == 0         # too small to churn
+    store2 = build_store(raw, auto_rebalance=True, max_imbalance=1.2,
+                         min_rebalance_keys=0)
+    task = store2.shards[0].begin_compaction("test")
+    assert not store2.maybe_rebalance()  # in-flight swap blocks rebalance
+    store2.shards[0].abort_compaction()
+    del task
+
+
+# ---------------------------------------------------------------------------
+# Stats rollup + shard-aware frontend tick.
+# ---------------------------------------------------------------------------
+
+def test_sharded_stats_rollup():
+    raw = np.arange(0, 8192, 2, dtype=np.uint64)
+    store = build_store(raw)
+    store.insert(mk([1, 3, 5]), jnp.asarray([900, 901, 902], jnp.int32))
+    store.delete(mk([0, 2]))
+    st = store.stats()
+    assert isinstance(st, ShardedStats)
+    assert st.num_shards == 4 and len(st.shards) == 4
+    assert st.live_keys == 4096 + 3 - 2
+    assert st.live_keys == sum(st.shard_live)
+    assert st.applies == 2 and st.inserts == 3 and st.deletes == 2
+    assert st.compactions == 0 and st.rebalances == 0
+    assert st.total_bytes == sum(s.total_bytes for s in st.shards)
+    assert st.imbalance >= 1.0 and not st.compacting
+
+
+def test_frontend_drives_sharded_store():
+    rng = np.random.default_rng(11)
+    raw = np.unique(rng.integers(0, 1 << 40, 4000, dtype=np.uint64))[:3000]
+    store = build_store(raw)
+    fe = LiveFrontend(store, max_hits=16)
+
+    ins = np.setdiff1d(np.unique(rng.integers(0, 1 << 40, 500,
+                                              dtype=np.uint64)), raw)[:100]
+    dels = raw[rng.choice(len(raw), 80, replace=False)]
+    keep = np.setdiff1d(raw, dels)
+    t_ins = fe.submit_insert(mk(ins), np.arange(7000, 7100, dtype=np.int32))
+    t_del = fe.submit_delete(mk(dels))
+    t_new = fe.submit_point(mk(ins[:20]))     # same-tick read sees write
+    t_gone = fe.submit_point(mk(dels[:20]))
+    sl = np.sort(np.concatenate([keep, ins]))
+    starts = rng.integers(0, len(sl) - 2000, 10)
+    t_rng = fe.submit_range(mk(sl[starts]), mk(sl[starts + 1999]))
+
+    rep = fe.tick()
+    assert (rep.n_insert, rep.n_delete) == (100, 80)
+    assert fe.result(t_ins) == 100 and fe.result(t_del) == 80
+    assert bool(fe.result(t_new).found.all())
+    assert not bool(fe.result(t_gone).found.any())
+    r = fe.result(t_rng)
+    assert (np.asarray(r.count) == 2000).all()
+    assert rep.epoch == store.epoch
