@@ -2,9 +2,10 @@
 PY ?= python
 export JAX_PLATFORMS ?= cpu
 
-.PHONY: check test lint bench-smoke bench-json bench-compare quickstart
+.PHONY: check test lint bench-smoke bench-json bench-compare quickstart \
+	examples
 
-check: lint test bench-smoke
+check: lint test bench-smoke examples
 
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
@@ -30,3 +31,9 @@ bench-compare: bench-json
 
 quickstart:
 	PYTHONPATH=src $(PY) examples/quickstart.py
+
+# Examples are executable docs of the public repro.db API: smoke-run the
+# session-based ones in CI so API drift in examples fails the build.
+examples:
+	PYTHONPATH=src $(PY) examples/quickstart.py
+	PYTHONPATH=src $(PY) examples/distributed_index.py

@@ -1,13 +1,14 @@
 """Live store under mixed read/write traffic vs rebuild-per-wave.
 
 The lifecycle complement of Fig. 15 (bench_updates.py): instead of timing
-one update primitive, drive the whole ``LiveIndex`` store — epoch
-snapshot + chains + compaction policy + tick frontend — with mixed
-workloads (90/10 and 50/50 lookup/update) and compare against the naive
-serving strategy of rebuilding a fresh ``CgrxIndex`` every wave.
+one update primitive, drive the whole live tier through the unified
+session API (``repro.db``, tier='live') — epoch snapshot + chains +
+compaction policy + flush admission batching — with mixed workloads
+(90/10 and 50/50 lookup/update) and compare against the naive serving
+strategy of rebuilding a fresh ``CgrxIndex`` every wave.
 
 Emitted per wave: live-path wall time (one apply dispatch + one engine
-dispatch per tick, ops/s derived) vs the rebuild baseline, plus the
+dispatch per flush, ops/s derived) vs the rebuild baseline, plus the
 compaction pauses the policy actually took (the cost the epoch swap moves
 off the read path).
 
@@ -17,7 +18,7 @@ bucketing in ``nodes.apply_batch`` and the engine's shared executable
 cache keep that set small); later waves show the steady state.  Fig. 15
 (bench_updates.py) times the raw update primitive without the lifecycle.
 """
-from benchmarks.common import emit, parse_args, timeit
+from benchmarks.common import emit, parse_args
 
 import time
 
@@ -25,10 +26,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.db as db
 from repro.core import cgrx
 from repro.data import keygen
 from repro.query import QueryBatch, RankEngine
-from repro.store import CompactionPolicy, LiveConfig, LiveFrontend, LiveIndex
 
 WAVES = 8
 
@@ -49,6 +50,7 @@ def _mixed_wave(rng, live_np, space, n_ops, read_frac):
 
 def main(args=None) -> None:
     args = args or parse_args()
+    seed = getattr(args, "seed", None)
     # Scaled workload: the store path is eager host-driven (chain walks,
     # per-version engines); sizes track --n/--q but stay container-sane.
     n = max(2048, min(args.n, 1 << 20) >> 6)
@@ -56,28 +58,29 @@ def main(args=None) -> None:
     space = np.uint64((1 << 44) - 1)
 
     for read_frac, tag in ((0.9, "mix90"), (0.5, "mix50")):
-        keys, rows, raw = keygen.keyset(n, 1.0, bits=64, seed=0)
-        cfg = LiveConfig(node_cap=32,
-                         policy=CompactionPolicy(max_chain=3, min_fill=0.2,
-                                                 max_tombstone_ratio=0.5))
-        live = LiveIndex.build(keys, jnp.asarray(rows), cfg)
-        fe = LiveFrontend(live, max_hits=16)
+        keys, rows, raw = keygen.keyset(n, 1.0, bits=64,
+                                        seed=0 if seed is None else seed)
+        spec = db.IndexSpec(
+            tier="live", node_cap=32, max_hits=16,
+            policy=db.CompactionPolicy(max_chain=3, min_fill=0.2,
+                                       max_tombstone_ratio=0.5))
+        sess = db.open(spec, keys, rows)
 
         live_np = raw.copy()
         next_row = n
-        rng = np.random.default_rng(2)
+        rng = np.random.default_rng(2 if seed is None else seed + 1)
         pauses = []
         for wave in range(WAVES):
             q, ins, dels = _mixed_wave(rng, live_np, space, ops, read_frac)
 
-            # --- live path: one tick = one write dispatch + one read ---
-            fe.submit_insert(keygen.as_keys(ins, 64),
-                             np.arange(next_row, next_row + len(ins),
-                                       dtype=np.int32))
-            fe.submit_delete(keygen.as_keys(dels, 64))
-            fe.submit_point(keygen.as_keys(q, 64))
+            # --- live path: one flush = one write + one read dispatch ---
+            sess.insert(keygen.as_keys(ins, 64),
+                        np.arange(next_row, next_row + len(ins),
+                                  dtype=np.int32))
+            sess.delete(keygen.as_keys(dels, 64))
+            sess.lookup(keygen.as_keys(q, 64))
             t0 = time.perf_counter()
-            rep = fe.tick()
+            rep = sess.flush()
             t_live = time.perf_counter() - t0
             if rep.compacted:
                 pauses.append(rep.compact_seconds)
@@ -99,18 +102,18 @@ def main(args=None) -> None:
                  f"ops={ops};rebuild={t_reb*1e3:.1f}ms;"
                  f"speedup={t_reb/max(t_live,1e-9):.2f}x;"
                  f"epoch={rep.epoch};compacted={rep.compacted or '-'};"
-                 f"chains<={live.store.max_chain}")
+                 f"chains<={sess.stats().max_chain}")
 
-        s = live.stats()
+        s = sess.stats()
         pause_ms = ";".join(f"{p*1e3:.1f}" for p in pauses) or "-"
         emit(f"live_store_{tag}_summary", sum(pauses),
              f"compactions={s.compactions};epoch={s.epoch};"
-             f"live={s.live_keys};fill={s.fill_factor:.2f};"
+             f"live={s.live_keys};fill={s.detail.fill_factor:.2f};"
              f"pauses_ms={pause_ms}")
 
         # Sanity: the store still answers exactly like a fresh rebuild.
         sel = np.random.default_rng(3).integers(0, len(live_np), 256)
-        got = live.lookup(keygen.as_keys(live_np[sel], 64))
+        got = sess.lookup(keygen.as_keys(live_np[sel], 64)).result()
         assert bool(np.asarray(got.found).all()), "live store lost keys"
 
 

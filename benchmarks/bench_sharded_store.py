@@ -1,10 +1,11 @@
 """Sharded live store: cross-shard ranges + non-blocking compaction.
 
 The scaling complement of bench_live_store.py: drive the range-partitioned
-``ShardedLiveStore`` (S splitter-routed LiveIndex shards) and measure
+sharded tier through the unified session API (``repro.db``,
+tier='sharded') and measure
 
-  * routed point lookups vs a single-shard ``LiveIndex`` oracle over the
-    same live set (found/row_id/position asserted bit-identical);
+  * routed point lookups vs a single-shard live-tier session oracle over
+    the same live set (found/row_id/position asserted bit-identical);
   * cross-shard range lookups — every range spans all S shards, decomposed
     at the splitters, merged with the rank-offset prefix (start/count/rows
     asserted bit-identical to the oracle);
@@ -21,13 +22,10 @@ from benchmarks.common import emit, parse_args, timeit
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.keys import KeyArray
+import repro.db as db
 from repro.data import keygen
-from repro.store import (CompactionPolicy, LiveConfig, LiveIndex,
-                         ShardedConfig, ShardedLiveStore)
 
 NUM_SHARDS = 4
 
@@ -46,36 +44,41 @@ def _assert_ranges_identical(got, want):
 
 def main(args=None) -> None:
     args = args or parse_args()
+    seed = getattr(args, "seed", None)
     n = max(2048, min(args.n, 1 << 20) >> 4)
     q = max(256, min(args.q, 1 << 21) >> 7)
 
-    keys, rows, raw = keygen.keyset(n, 1.0, bits=64, seed=0)
-    never = CompactionPolicy().never()
-    cfg = ShardedConfig(num_shards=NUM_SHARDS,
-                        live=LiveConfig(node_cap=32, policy=never),
-                        auto_rebalance=False)
-    store = ShardedLiveStore.build(keys, jnp.asarray(rows), cfg)
-    oracle = LiveIndex.build(keys, jnp.asarray(rows),
-                             LiveConfig(node_cap=32, policy=never))
+    keys, rows, raw = keygen.keyset(n, 1.0, bits=64,
+                                    seed=0 if seed is None else seed)
+    never = db.CompactionPolicy().never()
+    store = db.open(db.IndexSpec(tier="sharded", shards=NUM_SHARDS,
+                                 node_cap=32, policy=never,
+                                 max_imbalance=None, max_hits=32),
+                    keys, rows)
+    oracle = db.open(db.IndexSpec(tier="live", node_cap=32, policy=never,
+                                  max_hits=32), keys, rows)
 
-    rng = np.random.default_rng(3)
+    rng = np.random.default_rng(3 if seed is None else seed + 1)
     # Mutate both identically so chains actually exist on the read path.
     space = np.uint64((1 << 44) - 1)
     ins = np.setdiff1d(np.unique(
         rng.integers(0, space, n // 2, dtype=np.uint64)), raw)[:n // 4]
     dels = raw[rng.choice(n, n // 8, replace=False)]
     ins_k = keygen.as_keys(ins, 64)
-    ins_r = jnp.arange(n, n + len(ins), dtype=jnp.int32)
+    ins_r = np.arange(n, n + len(ins), dtype=np.int32)
     del_k = keygen.as_keys(dels, 64)
-    store.apply(ins_k, ins_r, del_k)
-    oracle.apply(ins_k, ins_r, del_k)
+    for sess in (store, oracle):
+        sess.insert(ins_k, ins_r)
+        sess.delete(del_k)
+        sess.flush()
     live_np = np.sort(np.setdiff1d(np.concatenate([raw, ins]), dels))
 
     # ---- routed point lookups, bit-identity asserted ----
     pts = keygen.as_keys(live_np[rng.integers(0, len(live_np), q)], 64)
-    t_shard = timeit(lambda: store.lookup(pts).row_id)
-    t_single = timeit(lambda: oracle.lookup(pts).row_id)
-    _assert_points_identical(store.lookup(pts), oracle.lookup(pts))
+    t_shard = timeit(lambda: store.lookup(pts).result().row_id)
+    t_single = timeit(lambda: oracle.lookup(pts).result().row_id)
+    _assert_points_identical(store.lookup(pts).result(),
+                             oracle.lookup(pts).result())
     emit("sharded_points", t_shard,
          f"q={q};shards={NUM_SHARDS};single={t_single*1e6:.1f}us;"
          f"bit_identical=yes")
@@ -86,10 +89,10 @@ def main(args=None) -> None:
     starts = rng.integers(0, len(live_np) - span, n_rng)
     lo = keygen.as_keys(live_np[starts], 64)
     hi = keygen.as_keys(live_np[starts + span - 1], 64)
-    t_shard = timeit(lambda: store.range_lookup(lo, hi, 32).row_ids)
-    t_single = timeit(lambda: oracle.range_lookup(lo, hi, 32).row_ids)
-    _assert_ranges_identical(store.range_lookup(lo, hi, 32),
-                             oracle.range_lookup(lo, hi, 32))
+    t_shard = timeit(lambda: store.range(lo, hi).result().row_ids)
+    t_single = timeit(lambda: oracle.range(lo, hi).result().row_ids)
+    _assert_ranges_identical(store.range(lo, hi).result(),
+                             oracle.range(lo, hi).result())
     emit("sharded_cross_shard_ranges", t_shard,
          f"ranges={n_rng};span~{span};single={t_single*1e6:.1f}us;"
          f"bit_identical=yes")
@@ -99,16 +102,17 @@ def main(args=None) -> None:
         live_np[rng.integers(len(live_np) // 2, len(live_np), q)], 64)
 
     def sibling_reads():
-        return store.lookup(sib_pts).row_id
+        return store.lookup(sib_pts).result().row_id
 
-    t_before = timeit(sibling_reads)
-    task = store.shards[0].begin_compaction("bench")   # hot shard swaps
+    shards = store.tier.store.shards      # the one below-the-API reach:
+    t_before = timeit(sibling_reads)      # drive an in-flight epoch swap
+    task = shards[0].begin_compaction("bench")    # hot shard swaps
     t_during = timeit(sibling_reads)
     t0 = time.perf_counter()
-    store.shards[0].finish_compaction(task)
-    jax.block_until_ready(store.shards[0].store.node_keys.lo)
+    shards[0].finish_compaction(task)
+    jax.block_until_ready(shards[0].store.node_keys.lo)
     t_swap = time.perf_counter() - t0
-    epochs = [s.epoch for s in store.shards]
+    epochs = list(store.stats().detail.epochs)
     emit("sharded_reads_during_sibling_compaction", t_during,
          f"before={t_before*1e6:.1f}us;"
          f"ratio={t_during/max(t_before,1e-9):.2f};"

@@ -43,6 +43,8 @@ def parse_args(extra: Callable = None):
                     help="paper-scale 2^26 keys / 2^27 lookups")
     ap.add_argument("--n", type=int, default=None)
     ap.add_argument("--q", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=None,
+                    help="workload seed (suites that accept one)")
     if extra:
         extra(ap)
     args = ap.parse_args()

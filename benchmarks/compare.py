@@ -27,9 +27,15 @@ DEFAULT_THRESHOLD = 0.25
 
 
 def flatten(results: Dict[str, Dict[str, float]]) -> Dict[str, float]:
-    """{suite: {metric: us}} -> {'suite/metric': us}."""
+    """{suite: {metric: us}} -> {'suite/metric': us}.
+
+    ``_``-prefixed pseudo-suites are provenance, not metrics: run.py
+    stamps its ``--json`` payload with ``_meta`` (git SHA, jax version,
+    seed) so artifacts stay traceable without entering the gate.
+    """
     return {f"{suite}/{metric}": float(us)
             for suite, metrics in results.items()
+            if not suite.startswith("_")
             for metric, us in metrics.items()}
 
 

@@ -1,12 +1,17 @@
 """Run every paper-table benchmark.  Output: ``name,us_per_call,derived``.
 
-    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig12] \
-                                            [--json out.json]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--suites a,b] \
+                                            [--seed S] [--json out.json]
 
 Default sizes are container-scale (2^18 keys); --full is paper-scale
-(2^26 keys / 2^27 lookups, needs paper-class memory).  ``--json`` also
-writes the machine-readable ``{suite: {metric: us_per_call}}`` map —
-the perf-CI artifact benchmarks/compare.py gates regressions against.
+(2^26 keys / 2^27 lookups, needs paper-class memory).  ``--suites``
+filters by comma-separated substrings (``--only`` is the historical
+single-pattern spelling); ``--seed`` threads a workload seed into the
+suites that accept one.  ``--json`` also writes the machine-readable
+``{suite: {metric: us_per_call}}`` map — stamped with provenance under
+the ``_meta`` pseudo-suite (git SHA, jax version, seed, sizes) so
+``benchmarks/compare.py`` artifacts are traceable to the tree and
+toolchain that produced them (compare.py ignores ``_``-prefixed suites).
 """
 import os
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
@@ -14,6 +19,7 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import argparse
 import importlib
 import json
+import subprocess
 import sys
 import time
 import traceback
@@ -37,42 +43,93 @@ SUITES = [
 
 
 class _Args:
-    def __init__(self, n, q):
-        self.n, self.q, self.full = n, q, False
+    def __init__(self, n, q, seed=None):
+        self.n, self.q, self.seed, self.full = n, q, seed, False
+
+
+def _git_sha() -> str:
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10, cwd=root).stdout.strip()
+        if not sha:
+            return "unknown"
+        dirty = subprocess.run(
+            ["git", "status", "--porcelain"], capture_output=True,
+            text=True, timeout=10, cwd=root).stdout.strip()
+        return f"{sha}-dirty" if dirty else sha
+    except Exception:                                      # noqa: BLE001
+        return "unknown"
+
+
+def _selected(name: str, args) -> bool:
+    if args.only and args.only not in name:
+        return False
+    if args.suites:
+        pats = [p.strip() for p in args.suites.split(",") if p.strip()]
+        return any(p in name for p in pats)
+    return True
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="single substring filter (historical)")
+    ap.add_argument("--suites", default=None, metavar="A,B",
+                    help="comma-separated suite-name substrings to run")
     ap.add_argument("--n", type=int, default=None)
     ap.add_argument("--q", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=None,
+                    help="workload seed for suites that accept one")
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="write {suite: {metric: us_per_call}} JSON")
+                    help="write {suite: {metric: us_per_call}} JSON "
+                         "(+ provenance under '_meta')")
     args = ap.parse_args()
     n = args.n or (1 << 26 if args.full else 1 << 18)
     q = args.q or (1 << 27 if args.full else 1 << 19)
 
     failures = []
+    n_ran = 0
     for name, mod_name in SUITES:
-        if args.only and args.only not in name:
+        if not _selected(name, args):
             continue
+        n_ran += 1
         print(f"# === {name} (n={n}, q={q}) ===", flush=True)
         t0 = time.time()
         common.set_suite(name)
         try:
             mod = importlib.import_module(mod_name)
-            mod.main(_Args(n, q))
+            mod.main(_Args(n, q, args.seed))
             print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
         except Exception:                                  # noqa: BLE001
             failures.append(name)
             print(f"# {name} FAILED:\n{traceback.format_exc()[-2000:]}",
                   flush=True)
+    if n_ran == 0:
+        # A typo'd filter must not produce a green (and, with --json,
+        # metric-free) run that measured nothing.
+        print(f"# ERROR: no suites matched --only={args.only!r} "
+              f"--suites={args.suites!r}; known: "
+              f"{[n for n, _ in SUITES]}")
+        sys.exit(2)
     if args.json:
+        import jax
+
+        payload = dict(common.RESULTS)
+        payload["_meta"] = {
+            "git_sha": _git_sha(),
+            "jax_version": jax.__version__,
+            "seed": args.seed,
+            "n": n,
+            "q": q,
+        }
         with open(args.json, "w") as fh:
-            json.dump(common.RESULTS, fh, indent=2, sort_keys=True)
+            json.dump(payload, fh, indent=2, sort_keys=True)
         print(f"# wrote {args.json} "
-              f"({sum(len(m) for m in common.RESULTS.values())} metrics)")
+              f"({sum(len(m) for m in common.RESULTS.values())} metrics, "
+              f"sha {payload['_meta']['git_sha'][:12]})")
     if failures:
         print(f"# FAILURES: {failures}")
         sys.exit(1)

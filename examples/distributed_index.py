@@ -1,4 +1,4 @@
-"""Sharded cgRX serving: static mesh mode + the live sharded store.
+"""Sharded cgRX serving: static mesh mode + the live sharded tier.
 
 Two tiers over the same splitter math (core/distributed.py):
 
@@ -7,12 +7,14 @@ Two tiers over the same splitter math (core/distributed.py):
    costs exactly one small all-reduce (index size never enters the
    collective).  Runs on 8 emulated host devices, the same code path the
    512-chip dry-run exercises.
-2. **Live mode** — ``repro.store.ShardedLiveStore``: every shard owns an
-   epoch-versioned ``LiveIndex``; mixed insert/delete batches route to
-   owning shards (one apply dispatch per shard), cross-shard ranges
-   decompose at the splitters and merge with a rank-offset prefix, and a
-   hot shard compacts without pausing its siblings.  The accelerated
-   structures never move.
+2. **Live mode** — the unified session API (``repro.db``) with
+   ``tier='sharded'``: every shard owns an epoch-versioned ``LiveIndex``;
+   mixed insert/delete batches route to owning shards (one apply dispatch
+   per shard), cross-shard ranges decompose at the splitters and merge
+   with a rank-offset prefix, and a hot shard compacts without pausing
+   its siblings.  The accelerated structures never move — and the tier
+   is just a spec knob: the same ``Session`` calls serve a single-node
+   live store or a static index unchanged.
 
     PYTHONPATH=src python examples/distributed_index.py
 """
@@ -24,10 +26,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+import repro.db as db
 from repro.core import distributed as dist
-from repro.core.keys import KeyArray
-from repro.store import (CompactionPolicy, LiveConfig, ShardedConfig,
-                         ShardedLiveStore)
 
 
 def main() -> None:
@@ -35,7 +35,7 @@ def main() -> None:
     n = 200_000
     raw = np.unique(rng.integers(0, 1 << 45, int(1.3 * n),
                                  dtype=np.uint64))[:n]
-    keys = KeyArray.from_u64(raw)
+    keys = db.as_key_array(raw)
 
     # ---- static read-only mode: mesh-mapped lookups, one psum each ----
     mesh = jax.make_mesh((2, 4), ("data", "model"))
@@ -54,47 +54,54 @@ def main() -> None:
     sraw = np.sort(raw)
     starts = rng.integers(0, n - 2000, 1024)
     lo, hi = sraw[starts], sraw[starts + 999]
-    cnt = dist.sharded_range_count(sidx, KeyArray.from_u64(lo),
-                                   KeyArray.from_u64(hi))
+    cnt = dist.sharded_range_count(sidx, db.as_key_array(lo),
+                                   db.as_key_array(hi))
     assert (np.asarray(cnt) == 1000).all()
     print("static mode range counts: 1024 ranges spanning shard "
           "boundaries, all exact")
 
-    # ---- live mode: ShardedLiveStore — routed updates, cross-shard ----
-    # ---- ranges, per-shard compaction, skew-triggered rebalance    ----
-    cfg = ShardedConfig(
-        num_shards=4,
-        live=LiveConfig(node_cap=32, policy=CompactionPolicy(max_chain=4)),
-        max_imbalance=2.0)
-    store = ShardedLiveStore.build(keys, jnp.arange(n, dtype=jnp.int32), cfg)
+    # ---- live mode: repro.db session over the sharded tier — routed ----
+    # ---- updates, cross-shard ranges, per-shard compaction, skew    ----
+    spec = db.IndexSpec(tier="sharded", shards=4, node_cap=32,
+                        policy=db.CompactionPolicy(max_chain=4),
+                        max_imbalance=2.0, max_hits=16)
+    sess = db.open(spec, keys, np.arange(n, dtype=np.int32))
 
     upd = np.setdiff1d(np.unique(rng.integers(0, 1 << 45, 6000,
                                               dtype=np.uint64)), raw)[:4096]
     dels = np.unique(raw[rng.integers(0, n, 2048)])
-    summary = store.apply(KeyArray.from_u64(upd),
-                          jnp.arange(n, n + len(upd), dtype=jnp.int32),
-                          KeyArray.from_u64(dels))
-    st = store.stats()
+    sess.insert(db.as_key_array(upd),
+                np.arange(n, n + len(upd), dtype=np.int32))
+    sess.delete(db.as_key_array(dels))
+    rep = sess.flush()                    # ONE routed apply for the flush
+    st = sess.stats()
     print(f"live mode updates: {len(upd)} inserts + {len(dels)} deletes "
-          f"routed via splitters, 1 apply/shard; epochs {list(st.epochs)}; "
-          f"policy={summary or '-'}")
+          f"routed via splitters, 1 apply/shard; "
+          f"epochs {list(st.detail.epochs)}; "
+          f"policy={rep.compacted or '-'}")
 
-    res = store.lookup(KeyArray.from_u64(upd))
-    gone = store.lookup(KeyArray.from_u64(dels))
+    res = sess.lookup(db.as_key_array(upd)).result()
+    gone = sess.lookup(db.as_key_array(dels)).result()
     assert bool(np.asarray(res.found).all())
     assert not bool(np.asarray(gone.found).any())
 
     live_np = np.sort(np.setdiff1d(np.concatenate([raw, upd]), dels))
     starts = rng.integers(0, len(live_np) - 150_000, 256)
-    lo = KeyArray.from_u64(live_np[starts])
-    hi = KeyArray.from_u64(live_np[starts + 149_999])
-    rng_res = store.range_lookup(lo, hi, max_hits=16)
+    lo = db.as_key_array(live_np[starts])
+    hi = db.as_key_array(live_np[starts + 149_999])
+    rng_res = sess.range(lo, hi).result()
     assert (np.asarray(rng_res.count) == 150_000).all()
-    spans = 1 + store.route(hi) - store.route(lo)
-    print(f"live mode ranges: 256 ranges each spanning "
-          f"{spans.min()}-{spans.max()} shards, counts exact after "
-          f"updates (imbalance {st.imbalance:.2f}, "
-          f"rebalances {st.rebalances})")
+    st = sess.stats()
+    print(f"live mode ranges: 256 ranges decomposed at the splitters "
+          f"across {st.num_shards} shards, counts exact after updates "
+          f"(imbalance {st.detail.imbalance:.2f}, "
+          f"rebalances {st.detail.rebalances})")
+
+    # Global rank scans merge with the same rank-offset prefix.
+    ranks = sess.scan_ranks(lo).result()
+    assert (np.asarray(ranks) == starts).all()
+    print(f"live mode rank scans: 256 global ranks bit-identical to the "
+          f"host oracle (session dispatches: {sess.dispatches})")
 
 
 if __name__ == "__main__":

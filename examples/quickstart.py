@@ -1,4 +1,11 @@
-"""Quickstart: build a cgRX index, run point/range lookups, apply updates.
+"""Quickstart: the unified ``repro.db`` session API end-to-end.
+
+One declarative ``IndexSpec`` picks the deployment tier — ``static``
+(immutable, cheapest reads), ``live`` (updatable epoch store), or
+``sharded`` (range-partitioned) — and the returned ``Session`` is the
+same typed surface for all of them: ``lookup`` / ``range`` / ``insert``
+/ ``delete`` / ``scan_ranks`` tickets, resolved by one ``flush()`` with
+ONE device dispatch per op class.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -6,9 +13,8 @@ import os
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import numpy as np
-import jax.numpy as jnp
 
-from repro.core import cgrx, footprint, nodes
+import repro.db as db
 from repro.data import keygen
 
 
@@ -17,18 +23,19 @@ def main(n: int = 100_000, lookups: int = 10_000) -> None:
     keys, rows, raw = keygen.keyset(n, uniformity=0.5, bits=32, seed=0)
     print(f"key set: {len(raw):,} keys, uniformity 50%")
 
-    # 2. Build the coarse-granular index (bucket size 16 — the paper's
-    #    recommendation, Sec. 5.4).
-    idx = cgrx.build(keys, jnp.asarray(rows), bucket_size=16)
-    fp = footprint.footprint(idx)
-    print(f"cgRX built: {idx.num_buckets:,} buckets, "
-          f"{fp['total_bytes']/1e6:.1f} MB "
-          f"(reps {fp['rep_bytes']/1e6:.2f} MB, "
-          f"tree {fp['tree_bytes']/1e3:.1f} KB)")
+    # 2. Open a STATIC session (bucket size 16 — the paper's
+    #    recommendation, Sec. 5.4).  The tier is a spec knob.
+    sess = db.open(db.IndexSpec(tier="static", bucket_size=16), keys, rows)
+    st = sess.stats()
+    nb = sess.nbytes()
+    print(f"cgRX built: {st.num_buckets:,} buckets, "
+          f"{nb['total_bytes']/1e6:.1f} MB "
+          f"(reps {nb['rep_bytes']/1e6:.2f} MB, "
+          f"tree {nb['tree_bytes']/1e3:.1f} KB)")
 
-    # 3. Point lookups.
+    # 3. Point lookups (a Ticket auto-flushes on result access).
     q_raw = keygen.uniform_lookups(raw, lookups, seed=1)
-    res = cgrx.lookup(idx, keygen.as_keys(q_raw, 32))
+    res = sess.lookup(keygen.as_keys(q_raw, 32)).result()
     assert bool(res.found.all())
     assert (raw[np.asarray(res.row_id)] == q_raw).all()
     print(f"{lookups:,} point lookups: all hit, rowIDs verified")
@@ -36,36 +43,52 @@ def main(n: int = 100_000, lookups: int = 10_000) -> None:
     # 4. Range lookup: one successor search + sequential scan (Sec. 3.2).
     sraw = np.sort(raw)
     lo, hi = keygen.range_lookups(sraw, 4, 64, seed=2)
-    rr = cgrx.range_lookup(idx, keygen.as_keys(lo, 32),
-                           keygen.as_keys(hi, 32), max_hits=64)
+    rr = sess.range(keygen.as_keys(lo, 32), keygen.as_keys(hi, 32)).result()
     print(f"range lookups: counts={np.asarray(rr.count).tolist()}")
 
-    # 5. Batched serving: plan mixed point/range traffic into padded
-    #    lanes and serve the whole batch in ONE device call (repro.query).
-    from repro.query import QueryBatch, RankEngine
+    # 5. Batched serving is the API's execution model: queue mixed
+    #    traffic, then ONE flush = one coalesced engine dispatch.
+    t_pts = sess.lookup(keygen.as_keys(q_raw[:256], 32))
+    t_rng = sess.range(keygen.as_keys(lo, 32), keygen.as_keys(hi, 32))
+    t_rnk = sess.scan_ranks(keygen.as_keys(q_raw[:64], 32))
+    before = dict(sess.dispatches)
+    rep = sess.flush()
+    spent = {k: sess.dispatches[k] - before[k] for k in before}
+    assert bool(t_pts.result().found.all())
+    assert (np.asarray(t_rng.result().count)
+            == np.asarray(rr.count)).all()
+    assert (np.asarray(t_rnk.result())
+            == np.searchsorted(sraw, q_raw[:64])).all()
+    print(f"batched flush: {rep.n_point} points + {rep.n_range} ranges "
+          f"+ {rep.n_rank} rank scans in one dispatch per class "
+          f"(this flush: {spent})")
 
-    engine = RankEngine(idx)                       # backend = build method
-    plan = (QueryBatch()
-            .add_points(keygen.as_keys(q_raw[:256], 32))
-            .add_ranges(keygen.as_keys(lo, 32), keygen.as_keys(hi, 32))
-            .plan(max_hits=64))
-    batch_res = engine.execute(plan)
-    assert bool(batch_res.points.found.all())
-    print(f"batched engine: {plan.n_point} points + {plan.n_range} ranges "
-          f"in one call ({plan.lanes} lanes, backend '{engine.backend_name}')")
+    # 6. The static tier rejects writes with a typed error...
+    try:
+        sess.insert(keygen.as_keys(q_raw[:1], 32), np.zeros(1, np.int32))
+    except db.ReadOnlyTierError:
+        print("static tier: writes rejected (ReadOnlyTierError)")
+    else:
+        raise AssertionError("static tier accepted a write")
 
-    # 6. Updates via the node-chain variant (Sec. 4): the search structure
-    #    is immutable; buckets grow bucket-locally.
-    store = nodes.build(keys, jnp.asarray(rows), node_cap=32)
+    # 7. ...so switch the SPEC to the live tier (paper Sec. 4: chains
+    #    grow bucket-locally, the search structure is immutable).
+    live = db.open(db.IndexSpec(tier="live", node_cap=32,
+                                policy=db.CompactionPolicy().never()),
+                   keys, rows)
     ins = np.setdiff1d(np.arange(raw.max() + 1, raw.max() + 1001,
                                  dtype=np.uint64), raw)
-    store = nodes.apply_batch(
-        store, keygen.as_keys(ins, 32),
-        jnp.arange(len(raw), len(raw) + len(ins), dtype=jnp.int32), None)
-    r = nodes.lookup(store, keygen.as_keys(ins, 32))
-    assert bool(r.found.all())
-    print(f"inserted {len(ins)} keys without touching the rep structure "
-          f"(max chain {store.max_chain})")
+    t_ins = live.insert(keygen.as_keys(ins, 32),
+                        np.arange(len(raw), len(raw) + len(ins),
+                                  dtype=np.int32))
+    t_hit = live.lookup(keygen.as_keys(ins, 32))   # same-flush read hits
+    live.flush()
+    assert t_ins.result() == len(ins)
+    assert bool(t_hit.result().found.all())
+    ls = live.stats()
+    print(f"live tier: inserted {len(ins)} keys without touching the rep "
+          f"structure (epoch {ls.epoch}, max chain {ls.max_chain}, "
+          f"{ls.live_keys:,} live keys)")
 
 
 if __name__ == "__main__":

@@ -27,10 +27,11 @@ def main() -> None:
         eng.submit(rng.integers(0, cfg.vocab_size, 8 + i), max_new_tokens=8)
     results = eng.run_to_completion()
     s = eng.stats
+    ts = eng.cache.table.stats()          # unified repro.db Stats surface
     print(f"completed {len(results)} requests, {s.tokens_out} tokens")
     print(f"page-table churn: +{s.index_inserts} / -{s.index_deletes} blocks "
-          f"(chains <= {eng.cache.table.max_chain}, reps untouched: "
-          f"{eng.cache.table.num_buckets} buckets since build)")
+          f"(chains <= {ts.max_chain}, reps untouched: "
+          f"{ts.num_buckets} buckets at epoch {ts.epoch} since build)")
     assert len(eng.cache.free_pages) == 128, "page leak"
 
 

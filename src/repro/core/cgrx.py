@@ -40,6 +40,7 @@ import numpy as np
 
 from . import fanout
 from .bucketing import BucketedSet, build_buckets
+from .deprecation import warn_once
 from .keys import KeyArray, key_eq
 
 MISS = jnp.int32(-1)
@@ -142,7 +143,21 @@ def lookup_from_rank(index: CgrxIndex, pos: jnp.ndarray,
                         found=found, position=pos.astype(jnp.int32))
 
 
+def empty_lookup_result() -> LookupResult:
+    """A zero-query ``LookupResult`` — the shared shape for empty plans
+    and empty submissions (repro.query engine, repro.db sessions)."""
+    z = jnp.zeros((0,), jnp.int32)
+    return LookupResult(bucket_id=z, row_id=z,
+                        found=jnp.zeros((0,), bool), position=z)
+
+
 def lookup(index: CgrxIndex, queries: KeyArray) -> LookupResult:
+    """Single-call point lookup.  Prefer ``repro.db`` sessions (or the
+    batched ``repro.query.RankEngine``) for serving traffic."""
+    warn_once("cgrx.lookup",
+              "core.cgrx.lookup is a deprecated convenience path; open a "
+              "repro.db session (repro.db.open) for unified batched "
+              "point/range/update traffic")
     pos = rank(index, queries, side="left")
     return lookup_from_rank(index, pos, queries)
 
@@ -174,8 +189,21 @@ def range_from_ranks(index: CgrxIndex, start: jnp.ndarray, end: jnp.ndarray,
                        count=count.astype(jnp.int32), row_ids=rows)
 
 
+def empty_range_result(max_hits: int) -> RangeResult:
+    """A zero-query ``RangeResult`` with ``max_hits`` row capacity."""
+    z = jnp.zeros((0,), jnp.int32)
+    return RangeResult(start=z, count=z,
+                       row_ids=jnp.zeros((0, max_hits), jnp.int32))
+
+
 def range_lookup(index: CgrxIndex, lo: KeyArray, hi: KeyArray,
                  max_hits: int) -> RangeResult:
+    """Single-call range lookup.  Prefer ``repro.db`` sessions (or the
+    batched ``repro.query.RankEngine``) for serving traffic."""
+    warn_once("cgrx.range_lookup",
+              "core.cgrx.range_lookup is a deprecated convenience path; "
+              "open a repro.db session (repro.db.open) for unified "
+              "batched point/range/update traffic")
     start = rank(index, lo, side="left")
     end = rank(index, hi, side="right")
     return range_from_ranks(index, start, end, max_hits)

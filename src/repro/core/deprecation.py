@@ -1,0 +1,34 @@
+"""One-shot deprecation warnings for pre-``repro.db`` surfaces.
+
+The unified session API (``repro.db``) is the supported front door over
+the static / live / sharded index tiers; the older per-tier conveniences
+(``core.cgrx.lookup``-style single calls, ``store.LiveFrontend``) keep
+working as thin shims but announce themselves exactly once per process —
+loud enough to steer migrations, quiet enough not to spam a serving loop
+that calls a deprecated path per tick.
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Optional
+
+_seen: set = set()
+
+
+def warn_once(key: str, message: str, *, stacklevel: int = 3) -> bool:
+    """Emit ``DeprecationWarning(message)`` the first time ``key`` is
+    seen this process; later calls are free no-ops.  Returns True when
+    the warning actually fired (tests assert on it)."""
+    if key in _seen:
+        return False
+    _seen.add(key)
+    warnings.warn(message, DeprecationWarning, stacklevel=stacklevel)
+    return True
+
+
+def reset(key: Optional[str] = None) -> None:
+    """Forget emitted keys (all, or one) — test isolation hook."""
+    if key is None:
+        _seen.clear()
+    else:
+        _seen.discard(key)

@@ -1,0 +1,97 @@
+"""``repro.db`` — one front door over static, live, and sharded indexes.
+
+The paper's pitch is that ONE design change (coarse-granular buckets)
+unifies point lookups, range lookups, and updates behind a single index;
+this package is the API-level mirror of that claim: one declarative
+``IndexSpec`` picks the deployment tier, ``open()`` builds it, and the
+returned ``Session`` is the single typed surface every caller programs
+against — benchmarks, examples, serving.  The tiering ladder
+(static -> live -> sharded) is a spec knob, not a code path::
+
+    import repro.db as db
+
+    sess = db.open(db.IndexSpec(tier="live"), keys, row_ids)
+    t = sess.lookup(queries)          # future-style Ticket
+    sess.insert(new_keys, new_rows)   # writes batch with everything else
+    rng = sess.range(lo, hi)
+    rep = sess.flush()                # ONE device dispatch per op class
+    res, rows = t.result(), rng.result()
+
+Layering: ``core`` (index math) -> ``query`` (batched rank engine) ->
+``store`` (live/sharded lifecycles) -> ``db`` (this package).  Module
+map: ``spec`` (IndexSpec), ``tiers`` (IndexTier protocol + the three
+implementations, unified ``Stats``), ``session`` (Session/Ticket/
+FlushReport), ``errors`` (typed errors).  See docs/ARCHITECTURE.md
+("Public API").
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+# Re-exported so spec construction needs only `import repro.db`.
+from repro.core.keys import KeyArray
+from repro.store.compaction import CompactionPolicy
+
+from .errors import DbError, InvalidSpecError, ReadOnlyTierError
+from .session import FlushReport, Session, Ticket
+from .spec import IndexSpec
+from .tiers import (IndexTier, LiveTier, ShardedTier, Stats, StaticTier,
+                    build_tier, wrap_store)
+
+__all__ = [
+    "CompactionPolicy",
+    "DbError",
+    "FlushReport",
+    "IndexSpec",
+    "IndexTier",
+    "InvalidSpecError",
+    "KeyArray",
+    "LiveTier",
+    "ReadOnlyTierError",
+    "Session",
+    "ShardedTier",
+    "Stats",
+    "StaticTier",
+    "Ticket",
+    "as_key_array",
+    "build_tier",
+    "open",
+    "wrap_store",
+]
+
+
+def as_key_array(keys) -> KeyArray:
+    """Coerce host key containers to ``KeyArray`` (uint64 -> packed
+    (hi, lo) pairs, uint32 -> single-word keys); passes KeyArrays
+    through untouched."""
+    if isinstance(keys, KeyArray):
+        return keys
+    arr = np.asarray(keys)
+    if arr.dtype == np.uint32:
+        return KeyArray.from_u32(arr)
+    if arr.dtype == np.uint64:
+        return KeyArray.from_u64(arr)
+    raise TypeError(
+        f"keys must be a KeyArray or a uint32/uint64 array, got "
+        f"dtype {arr.dtype}")
+
+
+def open(spec: Optional[IndexSpec] = None, keys=None,
+         row_ids=None) -> Session:   # noqa: A001 - deliberate front door
+    """Build the tier ``spec`` describes over ``keys``/``row_ids`` and
+    return the ``Session`` serving it.
+
+    ``spec`` defaults to ``IndexSpec()`` (a live tier with the paper's
+    recommended geometry).  ``keys`` may be a ``KeyArray`` or a host
+    uint32/uint64 array; ``row_ids`` defaults to positions.
+    """
+    spec = spec or IndexSpec()
+    if keys is None:
+        raise ValueError("repro.db.open needs a key set to index")
+    karr = as_key_array(keys)
+    rows = None if row_ids is None else jnp.asarray(row_ids, jnp.int32)
+    tier = build_tier(spec, karr, rows)
+    return Session(tier, max_hits=spec.max_hits)

@@ -1,0 +1,23 @@
+"""Typed errors of the ``repro.db`` session API."""
+from __future__ import annotations
+
+
+class DbError(Exception):
+    """Base class for every ``repro.db`` error."""
+
+
+class ReadOnlyTierError(DbError):
+    """A write (insert/delete) was submitted to a read-only tier.
+
+    The ``static`` tier wraps an immutable ``CgrxIndex``: it serves
+    point/range/rank traffic at the lowest cost but rejects mutation at
+    submission time — switch the spec to ``tier='live'`` (or
+    ``'sharded'``) to accept writes.
+    """
+
+
+class InvalidSpecError(DbError, ValueError):
+    """An ``IndexSpec`` field is invalid: unknown tier or backend,
+    non-positive bucket/node/hit sizes, or a non-positive shard count on
+    the sharded tier.  (Sharding knobs on an unsharded tier are inert,
+    not an error — a spec may be flipped between tiers in place.)"""

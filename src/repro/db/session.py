@@ -1,0 +1,362 @@
+"""``Session``: the one typed surface for all index traffic.
+
+Every request kind — point lookup, range lookup, insert, delete, raw
+rank scan — is submitted as a future-style ``Ticket`` and served by
+``flush()``, which drains the queues with ONE device dispatch per op
+class:
+
+    writes:  one ``tier.apply`` covering every insert AND delete of the
+             flush (deletions-before-insertions semantics; ins∩del
+             pairs cancel — the contract of ``nodes.apply_batch``);
+    policy:  one compaction/rebalance check (timed: the pause an epoch
+             swap takes is the number benchmarks plot);
+    reads:   one ``tier.execute`` over a ``QueryBatch`` coalescing all
+             points and ranges into a single padded lane batch;
+    ranks:   one ``tier.scan_ranks`` covering every rank scan.
+
+Within a flush, writes land before reads: a lookup submitted in the same
+flush as an insert of its key hits.  Admission batching is therefore the
+API's *built-in* execution model — callers never hand-roll a tick loop —
+and a flush with nothing pending is a cheap no-op (no plan, no
+executable, no device call).  Accessing an unresolved ``Ticket``'s
+result auto-flushes, so single-call usage reads naturally::
+
+    sess = repro.db.open(spec, keys, rows)
+    res = sess.lookup(queries).result()          # auto-flush
+    sess.insert(k, r); sess.delete(d)
+    rng = sess.range(lo, hi)
+    rep = sess.flush()                           # one dispatch per class
+    rows = rng.result()
+
+``dispatches`` counts coalesced dispatch *rounds* per op class (at most
+one per class per flush) — the observable the perf gate uses to pin
+"dispatch-per-flush count unchanged".  On the sharded tier one round
+fans out to one device dispatch per *touched shard* (that is the tier's
+routing contract, not per-request dispatch); the counter deliberately
+counts rounds, the thing the session controls.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cgrx
+from repro.core.keys import KeyArray, concat_keys
+from repro.query import QueryBatch
+from repro.query.batch import SIDE_LEFT, SIDE_RIGHT
+
+from .errors import ReadOnlyTierError
+from .tiers import IndexTier, Stats
+
+_UNSET = object()
+
+_SIDES = {"left": SIDE_LEFT, "right": SIDE_RIGHT}
+
+
+class Ticket:
+    """Future-style handle on one submitted request.
+
+    ``result()`` returns the op's result, flushing the session first if
+    the request is still queued (auto-flush); repeated calls return the
+    same value.  Result types by kind: ``point`` -> ``LookupResult``,
+    ``range`` -> ``RangeResult`` (fields sliced to the submission's
+    shape), ``insert``/``delete`` -> submitted batch size (NOT the net
+    change: cancelled pairs and deletes of absent keys still count),
+    ``rank`` -> int32 global-rank array.
+
+    The resolved value lives on the ticket itself (the session holds no
+    reference back once the flush drains its queue), so fire-and-forget
+    submissions — a serving loop that never retains its read tickets —
+    cost nothing after the flush: dropped tickets are garbage-collected
+    together with their results.  Resolution also drops the ticket's own
+    session reference (a ready ticket never needs it again), so retained
+    result tickets cannot pin a closed session's index buffers either.
+    """
+
+    __slots__ = ("_session", "id", "kind", "_value", "__weakref__")
+
+    def __init__(self, session: "Session", tid: int, kind: str):
+        self._session = session
+        self.id = tid
+        self.kind = kind
+        self._value = _UNSET
+
+    def _resolve(self, value) -> None:
+        self._value = value
+        self._session = None
+
+    @property
+    def ready(self) -> bool:
+        return self._value is not _UNSET
+
+    def result(self):
+        if self._value is _UNSET:
+            self._session.flush()
+        if self._value is _UNSET:
+            # Only reachable when a previous flush() raised after it had
+            # already drained its queues (e.g. mixed key widths in one
+            # flush, or a device error mid-dispatch): this ticket's op
+            # was lost with that flush.  Fail loudly, not with a leaked
+            # sentinel posing as a result.
+            raise RuntimeError(
+                f"{self!r} was dropped by a failed flush(); "
+                f"resubmit the request")
+        return self._value
+
+    def __repr__(self) -> str:
+        state = "ready" if self.ready else "pending"
+        return f"Ticket({self.kind} #{self.id}, {state})"
+
+
+@dataclasses.dataclass(frozen=True)
+class FlushReport:
+    """What one ``flush()`` did and what it cost."""
+
+    flush: int                 # 0-based flush counter
+    epoch: int                 # tier epoch serving this flush's reads
+    n_point: int
+    n_range: int
+    n_insert: int
+    n_delete: int
+    n_rank: int
+    compacted: Optional[str]   # firing trigger summary, or None
+    update_seconds: float      # apply wall time
+    lookup_seconds: float      # engine execute wall time
+    rank_seconds: float        # scan_ranks wall time
+    compact_seconds: float     # epoch-swap pause (0.0 when none fired)
+
+
+class Session:
+    """The single front door over one ``IndexTier`` (see module doc)."""
+
+    def __init__(self, tier: IndexTier, *, max_hits: int = 64):
+        self.tier = tier
+        self.max_hits = max_hits
+        self._next_ticket = 0
+        self._flush_count = 0
+        # Queues hold the Ticket objects themselves; flush resolves onto
+        # them and drops the queue reference, so the session never
+        # retains results the caller discarded.
+        self._points: List[Tuple[Ticket, KeyArray]] = []
+        self._ranges: List[Tuple[Ticket, KeyArray, KeyArray]] = []
+        self._ins: List[Tuple[Ticket, KeyArray, jnp.ndarray]] = []
+        self._dels: List[Tuple[Ticket, KeyArray]] = []
+        self._scans: List[Tuple[Ticket, KeyArray, int]] = []
+        # Coalesced dispatch rounds per op class since open (one per
+        # class per non-empty flush is the invariant the perf gate
+        # tracks; a sharded tier fans one round out per touched shard).
+        self.dispatches: Dict[str, int] = {"apply": 0, "query": 0,
+                                           "rank": 0}
+
+    # -- submission -----------------------------------------------------------
+
+    def _ticket(self, kind: str) -> Ticket:
+        t = Ticket(self, self._next_ticket, kind)
+        self._next_ticket += 1
+        return t
+
+    # Zero-length submissions resolve immediately (empty result / an
+    # applied-count of 0) instead of queueing: an all-empty flush
+    # dispatches nothing, so their tickets would otherwise never settle.
+
+    def lookup(self, keys: KeyArray) -> Ticket:
+        """Queue a point-lookup batch; resolves to ``LookupResult``."""
+        t = self._ticket("point")
+        if int(keys.shape[0]) == 0:
+            t._resolve(cgrx.empty_lookup_result())
+        else:
+            self._points.append((t, keys))
+        return t
+
+    def range(self, lo: KeyArray, hi: KeyArray) -> Ticket:
+        """Queue a range-lookup batch; resolves to ``RangeResult`` with
+        ``max_hits`` row capacity per range."""
+        if lo.shape != hi.shape:
+            raise ValueError("range lo/hi shapes differ")
+        t = self._ticket("range")
+        if int(lo.shape[0]) == 0:
+            t._resolve(cgrx.empty_range_result(self.max_hits))
+        else:
+            self._ranges.append((t, lo, hi))
+        return t
+
+    def insert(self, keys: KeyArray, rows: jnp.ndarray) -> Ticket:
+        """Queue an insert batch; resolves to the submitted count."""
+        self._check_writable("insert")
+        t = self._ticket("insert")
+        if int(keys.shape[0]) == 0:
+            t._resolve(0)
+        else:
+            self._ins.append((t, keys, jnp.asarray(rows, jnp.int32)))
+        return t
+
+    def delete(self, keys: KeyArray) -> Ticket:
+        """Queue a delete batch; resolves to the submitted count."""
+        self._check_writable("delete")
+        t = self._ticket("delete")
+        if int(keys.shape[0]) == 0:
+            t._resolve(0)
+        else:
+            self._dels.append((t, keys))
+        return t
+
+    def scan_ranks(self, keys: KeyArray, side: str = "left") -> Ticket:
+        """Queue a raw rank scan (#keys < q, or <= q with
+        ``side='right'``); resolves to an int32 global-rank array."""
+        if side not in _SIDES:
+            raise ValueError(f"side must be 'left' or 'right', got {side!r}")
+        t = self._ticket("rank")
+        if int(keys.shape[0]) == 0:
+            t._resolve(jnp.zeros((0,), jnp.int32))
+        else:
+            self._scans.append((t, keys, _SIDES[side]))
+        return t
+
+    def _check_writable(self, op: str) -> None:
+        if not self.tier.writable:
+            raise ReadOnlyTierError(
+                f"{op} submitted to the read-only '{self.tier.tier}' "
+                f"tier; re-open with IndexSpec(tier='live') or "
+                f"tier='sharded' to accept writes")
+
+    @property
+    def pending(self) -> int:
+        """Queued (unserved) requests awaiting the next flush."""
+        return (len(self._points) + len(self._ranges) + len(self._ins)
+                + len(self._dels) + len(self._scans))
+
+    # -- introspection --------------------------------------------------------
+
+    @property
+    def epoch(self) -> int:
+        return self.tier.epoch
+
+    def stats(self) -> Stats:
+        return self.tier.stats()
+
+    def nbytes(self) -> dict:
+        return self.tier.nbytes()
+
+    # -- the flush ------------------------------------------------------------
+
+    def flush(self) -> FlushReport:
+        """Drain every queue with one device dispatch per op class.
+
+        Order: writes -> policy -> reads -> rank scans.  An all-empty
+        flush is a cheap no-op: nothing is planned, compiled or
+        dispatched (see tests/test_db.py).
+        """
+        points, self._points = self._points, []
+        ranges, self._ranges = self._ranges, []
+        ins, self._ins = self._ins, []
+        dels, self._dels = self._dels, []
+        scans, self._scans = self._scans, []
+
+        n_insert = sum(int(k.shape[0]) for _, k, _ in ins)
+        n_delete = sum(int(k.shape[0]) for _, k in dels)
+        n_point = sum(int(k.shape[0]) for _, k in points)
+        n_range = sum(int(lo.shape[0]) for _, lo, _ in ranges)
+        n_rank = sum(int(k.shape[0]) for _, k, _ in scans)
+
+        # ---- writes first: one apply for the whole flush ----
+        t0 = time.perf_counter()
+        if n_insert or n_delete:
+            ik = ir = dk = None
+            if ins:
+                ik = _concat([k for _, k, _ in ins])
+                ir = jnp.concatenate([r for _, _, r in ins])
+            if dels:
+                dk = _concat([k for _, k in dels])
+            self.tier.apply(ik, ir, dk)
+            self.tier.sync()
+            self.dispatches["apply"] += 1
+            for t, k, _ in ins:
+                t._resolve(int(k.shape[0]))
+            for t, k in dels:
+                t._resolve(int(k.shape[0]))
+        t_update = time.perf_counter() - t0
+
+        # ---- policy check (the pause, when it fires) ----
+        # Honors the spec's auto_compact knob: with it off, flush never
+        # takes an epoch-swap pause — compaction timing belongs to the
+        # caller (tier.maybe_compact() / the underlying store's compact).
+        t0 = time.perf_counter()
+        compacted = (self.tier.maybe_compact()
+                     if (n_insert or n_delete) and self.tier.auto_compact
+                     else None)
+        if compacted:
+            self.tier.sync()
+        t_compact = time.perf_counter() - t0
+
+        # ---- reads: one engine call for all points + ranges ----
+        t0 = time.perf_counter()
+        if n_point or n_range:
+            batch = QueryBatch()
+            for _, k in points:
+                batch.add_points(k)
+            for _, lo, hi in ranges:
+                batch.add_ranges(lo, hi)
+            res = self.tier.execute(batch.plan(max_hits=self.max_hits))
+            self.dispatches["query"] += 1
+            jax.block_until_ready(res.points.row_id if n_point
+                                  else res.ranges.row_ids)
+            off = 0
+            for t, k in points:
+                m = int(k.shape[0])
+                t._resolve(_slice_tuple(res.points, off, off + m))
+                off += m
+            off = 0
+            for t, lo, _ in ranges:
+                m = int(lo.shape[0])
+                t._resolve(_slice_tuple(res.ranges, off, off + m))
+                off += m
+        t_lookup = time.perf_counter() - t0
+
+        # ---- rank scans: one scan_ranks call for all of them ----
+        t0 = time.perf_counter()
+        if n_rank:
+            qk = _concat([k for _, k, _ in scans])
+            sides = jnp.asarray(np.concatenate(
+                [np.full(int(k.shape[0]), s, np.int32)
+                 for _, k, s in scans]))
+            ranks = self.tier.scan_ranks(qk, sides)
+            self.dispatches["rank"] += 1
+            jax.block_until_ready(ranks)
+            off = 0
+            for t, k, _ in scans:
+                m = int(k.shape[0])
+                t._resolve(ranks[off:off + m])
+                off += m
+        t_rank = time.perf_counter() - t0
+
+        self._flush_count += 1
+        return FlushReport(flush=self._flush_count - 1,
+                           epoch=self.tier.epoch,
+                           n_point=n_point, n_range=n_range,
+                           n_insert=n_insert, n_delete=n_delete,
+                           n_rank=n_rank, compacted=compacted,
+                           update_seconds=t_update,
+                           lookup_seconds=t_lookup,
+                           rank_seconds=t_rank,
+                           compact_seconds=t_compact if compacted else 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Helpers.
+# ---------------------------------------------------------------------------
+
+def _concat(parts: List[KeyArray]) -> KeyArray:
+    out = parts[0]
+    for p in parts[1:]:
+        out = concat_keys(out, p)
+    return out
+
+
+def _slice_tuple(res, lo: int, hi: int):
+    """Slice every field of a NamedTuple result along axis 0."""
+    return type(res)(*(f[lo:hi] for f in res))

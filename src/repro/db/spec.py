@@ -1,0 +1,97 @@
+"""``IndexSpec``: the declarative description of an index deployment.
+
+One spec describes WHAT to build — bucket geometry, successor-search
+backend, compaction policy, range capacity — and WHERE on the tiering
+ladder it runs:
+
+    tier='static'    immutable ``CgrxIndex`` behind the rank engine;
+                     cheapest reads, writes rejected with a typed error
+    tier='live'      epoch-versioned ``LiveIndex`` (snapshot + chains)
+    tier='sharded'   ``ShardedLiveStore``: S splitter-routed live shards
+
+so moving a workload from read-only to updatable to range-partitioned is
+a *spec edit*, not a code path: every tier serves the same ``Session``
+surface (``repro.db.session``).  The spec maps onto the underlying
+configs (``store.LiveConfig`` / ``store.ShardedConfig``) in one place
+(``to_live_config`` / ``to_sharded_config``) so the knobs cannot drift.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.store.compaction import CompactionPolicy
+from repro.store.live import LiveConfig
+from repro.store.sharded import ShardedConfig
+
+from .errors import InvalidSpecError
+
+TIERS = ("static", "live", "sharded")
+BACKENDS = ("tree", "binary", "kernel")
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexSpec:
+    """Declarative index deployment (see module docstring).
+
+    ``bucket_size``   keys per bucket: the static tier's B, and the
+                      live/sharded tiers' immutable epoch-snapshot B;
+    ``backend``       successor-search implementation for the rep stage
+                      ('tree' | 'binary' | 'kernel') — the static tier's
+                      engine backend and the live tiers' ``rep_method``;
+    ``node_cap``      slots per chain node (live/sharded tiers);
+    ``shards``        shard count (sharded tier only);
+    ``policy``        compaction triggers (``store.CompactionPolicy``;
+                      its ``max_chain`` bounds the lookup walk cost);
+    ``auto_compact``  evaluate the policy on every write flush; off =
+                      flush never pauses, maintenance is the caller's
+                      (e.g. ``session.tier.maybe_compact()`` off-peak);
+    ``max_hits``      row-id capacity per range result;
+    ``max_imbalance`` sharded skew-rebalance trigger (None disables);
+    ``jit``           jit the engine pipelines;
+    ``cache_scope``   executable-cache namespace (see query/engine.py).
+    """
+
+    tier: str = "live"
+    bucket_size: int = 16
+    backend: str = "tree"
+    node_cap: int = 32
+    shards: int = 4
+    policy: CompactionPolicy = dataclasses.field(
+        default_factory=CompactionPolicy)
+    auto_compact: bool = True
+    max_hits: int = 64
+    max_imbalance: Optional[float] = 2.0
+    jit: bool = True
+    cache_scope: Optional[str] = None
+
+    def __post_init__(self):
+        if self.tier not in TIERS:
+            raise InvalidSpecError(
+                f"unknown tier {self.tier!r}; expected one of {TIERS}")
+        if self.backend not in BACKENDS:
+            raise InvalidSpecError(
+                f"unknown backend {self.backend!r}; expected one of "
+                f"{BACKENDS}")
+        if self.bucket_size <= 0 or self.node_cap <= 0 or self.max_hits <= 0:
+            raise InvalidSpecError(
+                "bucket_size, node_cap and max_hits must be positive")
+        if self.tier == "sharded" and self.shards < 1:
+            raise InvalidSpecError("sharded tier needs shards >= 1")
+
+    # -- mappings onto the underlying configs ---------------------------------
+
+    def to_live_config(self) -> LiveConfig:
+        return LiveConfig(node_cap=self.node_cap,
+                          snapshot_bucket_size=self.bucket_size,
+                          rep_method=self.backend,
+                          policy=self.policy,
+                          auto_compact=self.auto_compact,
+                          jit=self.jit,
+                          cache_scope=self.cache_scope)
+
+    def to_sharded_config(self) -> ShardedConfig:
+        return ShardedConfig(num_shards=self.shards,
+                             live=self.to_live_config(),
+                             max_imbalance=self.max_imbalance,
+                             cache_scope=self.cache_scope or "sharded")

@@ -1,0 +1,333 @@
+"""The ``IndexTier`` protocol and its three implementations.
+
+A tier is the deployment-level backing of a ``Session``: it knows how to
+serve one planned mixed batch (``execute``), absorb one mixed write batch
+(``apply``), answer raw rank queries (``scan_ranks``), evaluate its
+maintenance policy (``maybe_compact``), fence device work (``sync``), and
+report itself through ONE unified ``Stats``/``nbytes`` shape regardless
+of what machinery sits underneath:
+
+    StaticTier    immutable ``CgrxIndex`` + ``RankEngine`` — rejects
+                  writes with ``ReadOnlyTierError`` at apply time
+    LiveTier      ``store.LiveIndex`` (epoch snapshot + chain delta)
+    ShardedTier   ``store.ShardedLiveStore`` (splitter-routed shards);
+                  rank queries merge with the same rank-offset prefix
+                  the read path uses, so global ranks stay bit-identical
+                  to a single-shard oracle
+
+``build_tier`` constructs a tier from an ``IndexSpec``; ``wrap_store``
+adopts an already-built ``LiveIndex``/``ShardedLiveStore`` (the
+compatibility path ``store.LiveFrontend`` rides on).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cgrx
+from repro.core.keys import KeyArray
+from repro.query import BatchResult, QueryPlan, RankEngine
+from repro.store import metrics as store_metrics
+from repro.store.live import LiveIndex
+from repro.store.sharded import ShardedLiveStore
+
+from .errors import ReadOnlyTierError
+from .spec import IndexSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class Stats:
+    """One stats shape for every tier (the operator's dashboard row).
+
+    ``detail`` carries the tier-native snapshot (``None`` for static,
+    ``store.LiveStats`` for live, ``store.ShardedStats`` for sharded)
+    for callers that need tier-specific depth — everything above it is
+    tier-independent.
+    """
+
+    tier: str
+    live_keys: int
+    epoch: int
+    num_shards: int            # 1 unless sharded
+    num_buckets: int           # summed across shards
+    max_chain: int             # 1 for the flat static tier
+    total_bytes: int
+    applies: int
+    inserts: int
+    deletes: int
+    compactions: int
+    compacting: bool
+    detail: object = None
+
+
+@runtime_checkable
+class IndexTier(Protocol):
+    """What a ``Session`` needs from its backing tier.
+
+    ``auto_compact`` gates the session's per-flush policy step: with it
+    off, ``flush()`` never takes an epoch-swap pause and maintenance
+    timing belongs to the caller.
+    """
+
+    tier: str
+    writable: bool
+    auto_compact: bool
+
+    def execute(self, plan: QueryPlan) -> BatchResult: ...
+
+    def scan_ranks(self, queries: KeyArray,
+                   sides: jnp.ndarray) -> jnp.ndarray: ...
+
+    def apply(self, ins_keys: Optional[KeyArray],
+              ins_rows: Optional[jnp.ndarray],
+              del_keys: Optional[KeyArray]) -> None: ...
+
+    def maybe_compact(self) -> Optional[str]: ...
+
+    def sync(self) -> None: ...
+
+    @property
+    def epoch(self) -> int: ...
+
+    def stats(self) -> Stats: ...
+
+    def nbytes(self) -> dict: ...
+
+
+# ---------------------------------------------------------------------------
+# Static: immutable CgrxIndex behind the rank engine.
+# ---------------------------------------------------------------------------
+
+class StaticTier:
+    """Read-only tier over an immutable ``CgrxIndex``."""
+
+    tier = "static"
+    writable = False
+    auto_compact = False          # nothing to compact, ever
+
+    def __init__(self, index: cgrx.CgrxIndex, *, jit: bool = True,
+                 cache_scope: Optional[str] = None):
+        self.index = index
+        self.engine = RankEngine(index, jit=jit, cache_scope=cache_scope)
+
+    @classmethod
+    def build(cls, spec: IndexSpec, keys: KeyArray,
+              row_ids: Optional[jnp.ndarray]) -> "StaticTier":
+        index = cgrx.build(keys, row_ids, spec.bucket_size,
+                           method=spec.backend)
+        return cls(index, jit=spec.jit, cache_scope=spec.cache_scope)
+
+    def execute(self, plan: QueryPlan) -> BatchResult:
+        return self.engine.execute(plan)
+
+    def scan_ranks(self, queries: KeyArray,
+                   sides: jnp.ndarray) -> jnp.ndarray:
+        return self.engine.rank_batch(queries, sides)
+
+    def apply(self, ins_keys, ins_rows, del_keys) -> None:
+        n_ins = int(ins_keys.shape[0]) if ins_keys is not None else 0
+        n_del = int(del_keys.shape[0]) if del_keys is not None else 0
+        raise ReadOnlyTierError(
+            f"static tier rejects writes ({n_ins} inserts, {n_del} "
+            f"deletes submitted); re-open with IndexSpec(tier='live') or "
+            f"tier='sharded' for an updatable index")
+
+    def maybe_compact(self) -> Optional[str]:
+        return None
+
+    def sync(self) -> None:
+        jax.block_until_ready(self.index.buckets.keys.lo)
+
+    @property
+    def epoch(self) -> int:
+        return 0
+
+    def stats(self) -> Stats:
+        return Stats(tier=self.tier, live_keys=self.index.n, epoch=0,
+                     num_shards=1, num_buckets=self.index.num_buckets,
+                     max_chain=1,
+                     total_bytes=self.nbytes()["total_bytes"],
+                     applies=0, inserts=0, deletes=0, compactions=0,
+                     compacting=False, detail=None)
+
+    def nbytes(self) -> dict:
+        return cgrx.index_nbytes(self.index)
+
+
+# ---------------------------------------------------------------------------
+# Live: one epoch-versioned LiveIndex.
+# ---------------------------------------------------------------------------
+
+class LiveTier:
+    """Updatable tier over a single ``store.LiveIndex``."""
+
+    tier = "live"
+    writable = True
+
+    def __init__(self, live: LiveIndex):
+        self.live = live
+        # Plain attribute (configs are frozen): overridable by adopters
+        # like the LiveFrontend shim, whose historical contract runs the
+        # policy every tick regardless of the store's own knob.  getattr
+        # because wrap_store also adopts duck-typed stores with no
+        # config (the old frontend's contract).
+        self.auto_compact = getattr(getattr(live, "config", None),
+                                    "auto_compact", True)
+
+    @classmethod
+    def build(cls, spec: IndexSpec, keys: KeyArray,
+              row_ids: Optional[jnp.ndarray]) -> "LiveTier":
+        return cls(LiveIndex.build(keys, row_ids, spec.to_live_config()))
+
+    # Session drives the policy itself (after the write step, timed), so
+    # apply never auto-compacts here.
+    def apply(self, ins_keys, ins_rows, del_keys) -> None:
+        self.live.apply(ins_keys, ins_rows, del_keys, auto_compact=False)
+
+    def execute(self, plan: QueryPlan) -> BatchResult:
+        return self.live.execute(plan)
+
+    def scan_ranks(self, queries: KeyArray,
+                   sides: jnp.ndarray) -> jnp.ndarray:
+        return self.live.engine.rank_batch(queries, sides)
+
+    def maybe_compact(self) -> Optional[str]:
+        return self.live.maybe_compact()
+
+    def sync(self) -> None:
+        self.live.sync()
+
+    @property
+    def epoch(self) -> int:
+        return self.live.epoch
+
+    def stats(self) -> Stats:
+        s = self.live.stats()
+        return Stats(tier=self.tier, live_keys=s.live_keys, epoch=s.epoch,
+                     num_shards=1, num_buckets=s.num_buckets,
+                     max_chain=s.max_chain, total_bytes=s.total_bytes,
+                     applies=s.applies, inserts=s.inserts,
+                     deletes=s.deletes, compactions=s.compactions,
+                     compacting=s.compacting, detail=s)
+
+    def nbytes(self) -> dict:
+        s = self.live.stats()
+        return {"store_bytes": s.store_bytes,
+                "snapshot_bytes": s.snapshot_bytes,
+                "total_bytes": s.total_bytes}
+
+
+# ---------------------------------------------------------------------------
+# Sharded: S splitter-routed LiveIndex shards.
+# ---------------------------------------------------------------------------
+
+class ShardedTier:
+    """Updatable range-partitioned tier over a ``ShardedLiveStore``."""
+
+    tier = "sharded"
+    writable = True
+
+    def __init__(self, store: ShardedLiveStore):
+        self.store = store
+        # See LiveTier.__init__ (incl. the duck-typed-store getattr).
+        self.auto_compact = getattr(
+            getattr(getattr(store, "config", None), "live", None),
+            "auto_compact", True)
+
+    @classmethod
+    def build(cls, spec: IndexSpec, keys: KeyArray,
+              row_ids: Optional[jnp.ndarray]) -> "ShardedTier":
+        return cls(ShardedLiveStore.build(keys, row_ids,
+                                          spec.to_sharded_config()))
+
+    def apply(self, ins_keys, ins_rows, del_keys) -> None:
+        self.store.apply(ins_keys, ins_rows, del_keys, auto_compact=False)
+
+    def execute(self, plan: QueryPlan) -> BatchResult:
+        return self.store.execute(plan)
+
+    def scan_ranks(self, queries: KeyArray,
+                   sides: jnp.ndarray) -> jnp.ndarray:
+        """Global mixed-side ranks across shards.
+
+        Each key's owning shard answers locally; shards before the owner
+        hold only smaller keys, so the rank-offset prefix over per-shard
+        live counts lifts the local rank to the global one — the same
+        merge identity the point/range read path uses, hence the same
+        bit-identity to a single-shard oracle.
+        """
+        owners = self.store.route(queries)
+        prefix = self.store.live_prefix()
+        sides_np = np.asarray(sides)
+        out = np.zeros(owners.shape[0], np.int32)
+        for s, shard in enumerate(self.store.shards):
+            idx = np.nonzero(owners == s)[0]
+            if not len(idx):
+                continue
+            local = shard.engine.rank_batch(queries[idx],
+                                            jnp.asarray(sides_np[idx]))
+            out[idx] = np.asarray(local) + int(prefix[s])
+        return jnp.asarray(out)
+
+    def maybe_compact(self) -> Optional[str]:
+        return self.store.maybe_compact()
+
+    def sync(self) -> None:
+        self.store.sync()
+
+    @property
+    def epoch(self) -> int:
+        return self.store.epoch
+
+    def stats(self) -> Stats:
+        s: store_metrics.ShardedStats = self.store.stats()
+        return Stats(tier=self.tier, live_keys=s.live_keys,
+                     epoch=max(s.epochs), num_shards=s.num_shards,
+                     num_buckets=sum(sh.num_buckets for sh in s.shards),
+                     max_chain=s.max_chain, total_bytes=s.total_bytes,
+                     applies=s.applies, inserts=s.inserts,
+                     deletes=s.deletes, compactions=s.compactions,
+                     compacting=s.compacting, detail=s)
+
+    def nbytes(self) -> dict:
+        s = self.store.stats()
+        return {"store_bytes": sum(sh.store_bytes for sh in s.shards),
+                "snapshot_bytes": sum(sh.snapshot_bytes for sh in s.shards),
+                "total_bytes": s.total_bytes}
+
+
+# ---------------------------------------------------------------------------
+# Construction.
+# ---------------------------------------------------------------------------
+
+_TIER_CLASSES = {"static": StaticTier, "live": LiveTier,
+                 "sharded": ShardedTier}
+
+
+def build_tier(spec: IndexSpec, keys: KeyArray,
+               row_ids: Optional[jnp.ndarray] = None) -> IndexTier:
+    """Build the tier an ``IndexSpec`` names over a key/rowID set."""
+    if row_ids is None:
+        row_ids = jnp.arange(keys.shape[0], dtype=jnp.int32)
+    return _TIER_CLASSES[spec.tier].build(spec, keys, row_ids)
+
+
+def wrap_store(store) -> IndexTier:
+    """Adopt an already-built store object as a tier (the compatibility
+    path: ``store.LiveFrontend`` hands its LiveIndex/ShardedLiveStore
+    here).  Duck-typed fallback mirrors the old frontend's contract."""
+    if isinstance(store, ShardedLiveStore):
+        return ShardedTier(store)
+    if isinstance(store, LiveIndex):
+        return LiveTier(store)
+    if hasattr(store, "shards"):          # sharded-shaped duck
+        return ShardedTier(store)
+    if hasattr(store, "apply"):           # live-shaped duck
+        return LiveTier(store)
+    if isinstance(store, cgrx.CgrxIndex):
+        return StaticTier(store)
+    raise TypeError(f"cannot adopt {type(store).__name__} as an IndexTier")

@@ -48,10 +48,12 @@ def main() -> None:
           f"({s.tokens_out / max(dt, 1e-9):.1f} tok/s)")
     print(f"prefills={s.prefills} decode_steps={s.decode_steps} "
           f"tokens={s.tokens_out}")
-    print(f"cgRX page-table: inserts={s.index_inserts} "
-          f"deletes={s.index_deletes} "
-          f"chains<= {eng.cache.table.max_chain} "
-          f"nodes={eng.cache.table.free_ptr}/{eng.cache.table.capacity}")
+    ts = eng.cache.table.stats()          # unified repro.db Stats surface
+    print(f"cgRX page-table: inserts={ts.inserts} "
+          f"deletes={ts.deletes} "
+          f"chains<= {ts.max_chain} "
+          f"nodes={ts.detail.allocated_nodes} "
+          f"({ts.total_bytes / 1e3:.1f} KB)")
     for rid, toks in sorted(results.items()):
         print(f"  req {rid}: {len(toks)} tokens: {toks[:8]}...")
 

@@ -110,9 +110,21 @@ class QueryBatch:
     # -- planning ------------------------------------------------------------
 
     def plan(self, lane: int = LANE, max_hits: int = 64) -> QueryPlan:
-        """Flatten to the padded lane layout (one concat, one pad)."""
+        """Flatten to the padded lane layout (one concat, one pad).
+
+        A batch whose every submission was zero-length plans to a
+        canonical zero-lane ``QueryPlan`` without any concat/pad work;
+        the engine serves it without building an executable or touching
+        the device (the empty-flush fast path).
+        """
         if self._is64 is None:
             raise ValueError("empty QueryBatch: add points or ranges first")
+        if self.n_point == 0 and self.n_range == 0:
+            zeros = KeyArray(jnp.zeros((0,), jnp.uint32),
+                             jnp.zeros((0,), jnp.uint32) if self._is64
+                             else None)
+            return QueryPlan(keys=zeros, sides=jnp.zeros((0,), jnp.int32),
+                             n_point=0, n_range=0, max_hits=max_hits)
         parts: List[KeyArray] = []
         parts.extend(self._points)
         parts.extend(lo for lo, _ in self._ranges)

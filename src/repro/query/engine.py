@@ -115,7 +115,16 @@ class RankEngine:
     # -- plan execution ------------------------------------------------------
 
     def execute(self, plan: QueryPlan) -> BatchResult:
-        """Serve an entire plan — one device call for the whole batch."""
+        """Serve an entire plan — one device call for the whole batch.
+
+        A plan with zero queries (every submission was empty) dispatches
+        NOTHING: no executable is built or cached and no device call is
+        made — the empty-flush fast path ``repro.db.Session.flush``
+        relies on (regression-tested in tests/test_query_engine.py).
+        """
+        if plan.n_point == 0 and plan.n_range == 0:
+            return BatchResult(points=cgrx.empty_lookup_result(),
+                               ranges=cgrx.empty_range_result(plan.max_hits))
         sig = (plan.lanes, plan.n_point, plan.n_range, plan.max_hits,
                plan.keys.is64)
         fn = self._exec_cache.get(sig)

@@ -1,20 +1,28 @@
-"""Paged KV cache whose page table is a cgRX node-store index.
+"""Paged KV cache whose page table is a cgRX index session.
 
 Serving with continuous batching is an insert/delete-heavy key->value
 workload: logical cache blocks (seq_id, block_idx) map to physical pages
 that are allocated as sequences grow and freed when they retire — exactly
 the paper's Section 4 use case.  The page table here *is* the updatable
-cgRX variant (core/nodes.py):
+cgRX variant, served through the unified session API (``repro.db``,
+tier='live' — the epoch snapshot + node-chain store):
 
     key    = seq_id << BLOCK_BITS | block_idx        (uint32/uint64)
     rowID  = physical page index
 
-  * page allocation  -> nodes.apply_batch(insert)    (reps/BVH untouched)
-  * sequence retire  -> nodes.apply_batch(delete)
-  * decode gather    -> batched successor lookup + post-filter
+  * page allocation  -> table.insert(...)           (reps/BVH untouched)
+  * sequence retire  -> table.delete(...)
+  * decode gather    -> table.lookup(...)            (batched successor
+                        search + chain post-filter via the rank engine)
 
-so lookup throughput does not degrade as the serving mix churns — the
-property Fig. 15b demonstrates against the rebuild baseline.
+Each paged call submits one batch and resolves it (auto-flush), so the
+engine's tick-level batching (serving/engine.py coalesces ALL requests'
+page-table traffic into one call per tick) maps to exactly one device
+dispatch per op class per tick — the session's execution model.
+Compaction is disabled (policy ``never()``): churn is the point, and the
+paper's Fig. 15b property is that lookups do not degrade without
+rebuilds.  All paged tables share one executable-cache scope, so every
+cache in a process reuses the same compiled lookup pipelines.
 
 The KV pages themselves are a (L, num_pages, page, KV, hd) pool; decode
 gathers each sequence's pages by table lookup and attends over the
@@ -23,17 +31,22 @@ gathered window.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import nodes
+from repro import db
 from repro.core.keys import KeyArray
 
 BLOCK_BITS = 20   # up to 2^20 blocks per sequence
 MAX_SEQS = 1 << 11
+
+# One spec for every page table: updatable tier, no compaction (the
+# accelerated structure must never rebuild under churn), shared compiled
+# pipelines across caches.
+_TABLE_SPEC_KW = dict(tier="live", bucket_size=16,
+                      cache_scope="serving.paged")
 
 
 def block_key(seq_id, block_idx):
@@ -42,13 +55,13 @@ def block_key(seq_id, block_idx):
 
 @dataclasses.dataclass
 class PagedKVCache:
-    """Physical page pool + cgRX page table."""
+    """Physical page pool + cgRX page-table session."""
 
     k_pages: jnp.ndarray     # (L, P, page_size, KV, hd)
     v_pages: jnp.ndarray
     page_size: int
     num_pages: int
-    table: nodes.NodeStore   # cgRX updatable index: block key -> page id
+    table: db.Session        # cgRX updatable index: block key -> page id
     free_pages: List[int]
     seq_len: Dict[int, int]  # live sequences -> current length (host)
 
@@ -62,8 +75,11 @@ def create(num_layers: int, num_pages: int, page_size: int, kv_heads: int,
            ) -> PagedKVCache:
     shape = (num_layers, num_pages, page_size, kv_heads, head_dim)
     # Bootstrap table with a sentinel mapping so the structure is non-empty.
-    boot = KeyArray.from_u64(np.array([np.uint64((MAX_SEQS + 1) << BLOCK_BITS)]))
-    table = nodes.build(boot, jnp.array([-1], jnp.int32), node_cap=node_cap)
+    boot = np.array([np.uint64((MAX_SEQS + 1) << BLOCK_BITS)])
+    spec = db.IndexSpec(node_cap=node_cap,
+                        policy=db.CompactionPolicy().never(),
+                        **_TABLE_SPEC_KW)
+    table = db.open(spec, boot, np.array([-1], np.int32))
     return PagedKVCache(
         k_pages=jnp.zeros(shape, dtype), v_pages=jnp.zeros(shape, dtype),
         page_size=page_size, num_pages=num_pages, table=table,
@@ -76,18 +92,28 @@ def create(num_layers: int, num_pages: int, page_size: int, kv_heads: int,
 
 def alloc_blocks(cache: PagedKVCache, seq_ids: List[int],
                  blocks: List[int]) -> Tuple[PagedKVCache, List[int]]:
-    """Allocate physical pages for (seq, block) pairs; insert into table."""
+    """Allocate physical pages for (seq, block) pairs; insert into table.
+
+    Mutates ``cache`` in place (the table is a stateful session and
+    ``free_pages`` is popped); the cache is also returned for call-site
+    symmetry with the device-side ops, NOT as a fresh snapshot — the
+    passed-in reference observes the allocation too.
+    """
     assert len(cache.free_pages) >= len(seq_ids), "page pool exhausted"
     pages = [cache.free_pages.pop() for _ in seq_ids]
     keys = KeyArray.from_u64(np.array(
         [block_key(s, b) for s, b in zip(seq_ids, blocks)], dtype=np.uint64))
-    rows = jnp.asarray(np.array(pages, dtype=np.int32))
-    table = nodes.apply_batch(cache.table, keys, rows, None)
-    return dataclasses.replace(cache, table=table), pages
+    rows = np.array(pages, dtype=np.int32)
+    cache.table.insert(keys, rows).result()      # one apply dispatch
+    return cache, pages
 
 
 def free_sequence(cache: PagedKVCache, seq_id: int) -> PagedKVCache:
-    """Retire a sequence: delete all its block keys, reclaim pages."""
+    """Retire a sequence: delete all its block keys, reclaim pages.
+
+    Mutates ``cache`` in place (see ``alloc_blocks``): the returned
+    cache IS the argument, not a pre-retirement snapshot.
+    """
     length = cache.seq_len.pop(seq_id, 0)
     nblocks = -(-length // cache.page_size) if length else 0
     if nblocks == 0:
@@ -96,12 +122,12 @@ def free_sequence(cache: PagedKVCache, seq_id: int) -> PagedKVCache:
                        dtype=np.uint64)
     keys = KeyArray.from_u64(keys_np)
     # Look up pages before deleting so we can reclaim them.
-    res = nodes.lookup(cache.table, keys)
+    res = cache.table.lookup(keys).result()
     pages = np.asarray(res.row_id)
     found = np.asarray(res.found)
-    table = nodes.apply_batch(cache.table, None, None, keys)
-    free = cache.free_pages + [int(p) for p, f in zip(pages, found) if f]
-    return dataclasses.replace(cache, table=table, free_pages=free)
+    cache.table.delete(keys).result()
+    cache.free_pages.extend(int(p) for p, f in zip(pages, found) if f)
+    return cache
 
 
 def lookup_pages(cache: PagedKVCache, seq_ids: np.ndarray,
@@ -109,7 +135,7 @@ def lookup_pages(cache: PagedKVCache, seq_ids: np.ndarray,
     """Batched (seq, block) -> physical page via the cgRX index."""
     keys_np = (seq_ids.astype(np.uint64) << np.uint64(BLOCK_BITS)) \
         | block_idx.astype(np.uint64)
-    res = nodes.lookup(cache.table, KeyArray.from_u64(keys_np))
+    res = cache.table.lookup(KeyArray.from_u64(keys_np)).result()
     return res.row_id, res.found
 
 

@@ -12,9 +12,11 @@ turns them into one long-lived, updatable, queryable index:
                 ratio) + the begin/finish epoch-swap task that rebuilds
                 off the read path and replays mid-compaction writes;
 ``metrics``     ``LiveStats``, the operator-facing stats surface;
-``frontend``    ``LiveFrontend`` — tick-based mixed-op queue, one device
-                dispatch per op class per tick (serving/engine.py's
-                admission pattern applied to the index itself);
+``frontend``    DEPRECATED ``LiveFrontend`` — the tick-based mixed-op
+                queue is now the built-in execution model of the unified
+                session API (``repro.db.Session.flush``); this shim
+                adopts an existing store into a Session and keeps the
+                historical ticket/tick surface alive;
 ``sharded``     ``ShardedLiveStore`` — the range-partitioned serving
                 tier: splitter-routed LiveIndex shards, cross-shard range
                 decomposition + rank-offset merge, per-shard compaction

@@ -1,61 +1,42 @@
-"""Tick-based mixed-workload frontend over a LiveIndex (or sharded store).
+"""DEPRECATED tick frontend — a thin compatibility shim over ``repro.db``.
 
-Mirrors the serving engine's admission discipline (serving/engine.py):
-requests of all four kinds — point lookup, range lookup, insert, delete —
-queue between ticks, and each ``tick()`` drains them with one device
-dispatch per op class:
+``LiveFrontend`` used to hand-roll the admission discipline (queue mixed
+requests, drain with one device dispatch per op class per ``tick()``).
+That execution model is now the *built-in* behavior of the unified
+session API: ``repro.db.open(spec, ...)`` returns a ``Session`` whose
+``flush()`` is exactly the old tick.  This class survives as a shim that
+adopts an already-built ``LiveIndex``/``ShardedLiveStore`` into a
+``Session`` (``repro.db.wrap_store``) and translates the historical
+ticket-int / ``TickReport`` surface onto it — behavior-identical
+(tests/test_live_store.py, tests/test_db.py), but every construction
+emits one ``DeprecationWarning`` pointing at ``repro.db``.
 
-    writes:  ONE ``nodes.apply_batch`` covering every insert AND delete
-             submitted this tick (deletions-before-insertions semantics,
-             insert∩delete pairs cancel);
-    reads:   ONE ``RankEngine.execute`` over a QueryBatch coalescing all
-             points and ranges into a single padded lane batch;
-    policy:  one compaction check (the pause, when it fires, is timed and
-             reported — the number bench_live_store.py plots).
+Migration map:
 
-Within a tick, writes land before reads: a lookup submitted in the same
-tick as an insert of its key hits.  Tickets are dense ints; results are
-retrievable (once) after the tick that served them.
-
-The backing store is duck-typed: anything exposing ``apply`` /
-``maybe_compact`` / ``execute`` / ``sync`` / ``epoch`` serves.  With a
-``ShardedLiveStore`` the same tick loop becomes shard-aware for free —
-writes route to owning shards (one apply dispatch per touched shard),
-reads decompose at the splitters (one engine dispatch per touched shard),
-and the policy step compacts/rebalances shards independently.
+    LiveFrontend(live)        ->  repro.db.open(IndexSpec(tier='live'|
+                                  'sharded'), keys, rows)
+    submit_point/submit_range ->  session.lookup / session.range
+    submit_insert/submit_delete -> session.insert / session.delete
+    tick()                    ->  session.flush()  (-> FlushReport)
+    result(ticket)            ->  Ticket.result()  (auto-flushes)
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import cgrx
-from repro.core.keys import KeyArray, concat_keys
-from repro.query import QueryBatch
+from repro.core.deprecation import warn_once
+from repro.core.keys import KeyArray
 
 from .live import LiveIndex
 
 
-def _empty_points() -> cgrx.LookupResult:
-    z = jnp.zeros((0,), jnp.int32)
-    return cgrx.LookupResult(bucket_id=z, row_id=z,
-                             found=jnp.zeros((0,), bool), position=z)
-
-
-def _empty_ranges(max_hits: int) -> cgrx.RangeResult:
-    z = jnp.zeros((0,), jnp.int32)
-    return cgrx.RangeResult(start=z, count=z,
-                            row_ids=jnp.zeros((0, max_hits), jnp.int32))
-
-
 @dataclasses.dataclass(frozen=True)
 class TickReport:
-    """What one ``tick()`` did and what it cost."""
+    """What one ``tick()`` did and what it cost (legacy shape; the
+    session's ``FlushReport`` adds rank-scan fields)."""
 
     tick: int
     epoch: int                 # epoch serving this tick's reads
@@ -70,158 +51,71 @@ class TickReport:
 
 
 class LiveFrontend:
-    """Queue + tick loop driving a ``LiveIndex`` like a service."""
+    """Queue + tick loop driving a ``LiveIndex`` like a service.
+
+    DEPRECATED: open a ``repro.db`` session instead (see module doc).
+    """
 
     def __init__(self, live: LiveIndex, max_hits: int = 64):
+        warn_once("store.LiveFrontend",
+                  "store.LiveFrontend is deprecated; repro.db sessions "
+                  "(repro.db.open) batch mixed traffic per flush() "
+                  "natively — see the migration table in README.md")
+        from repro import db  # deferred: store is imported by repro.db
+
         self.live = live
         self.max_hits = max_hits
-        self._next_ticket = 0
-        self._tick = 0
-        self._points: List[Tuple[int, KeyArray]] = []
-        self._ranges: List[Tuple[int, KeyArray, KeyArray]] = []
-        self._ins: List[Tuple[int, KeyArray, jnp.ndarray]] = []
-        self._dels: List[Tuple[int, KeyArray]] = []
-        self._results: Dict[int, object] = {}
+        tier = db.wrap_store(live)
+        # Historical tick contract: the policy step runs on every tick
+        # with writes, regardless of the store's own auto_compact knob
+        # (which only governed direct apply() calls).
+        tier.auto_compact = True
+        self.session = db.Session(tier, max_hits=max_hits)
+        self._tickets: Dict[int, object] = {}
 
-    # -- submission -----------------------------------------------------------
+    # -- submission (session tickets behind the historical dense ints) -------
 
-    def _ticket(self) -> int:
-        t = self._next_ticket
-        self._next_ticket += 1
-        return t
-
-    # Zero-length submissions resolve immediately (an empty result / an
-    # applied-count of 0) instead of queueing: a tick with only empty ops
-    # dispatches nothing, so their tickets would otherwise never settle.
+    def _track(self, ticket) -> int:
+        self._tickets[ticket.id] = ticket
+        return ticket.id
 
     def submit_point(self, keys: KeyArray) -> int:
-        t = self._ticket()
-        if int(keys.shape[0]) == 0:
-            self._results[t] = _empty_points()
-        else:
-            self._points.append((t, keys))
-        return t
+        return self._track(self.session.lookup(keys))
 
     def submit_range(self, lo: KeyArray, hi: KeyArray) -> int:
-        if lo.shape != hi.shape:
-            raise ValueError("range lo/hi shapes differ")
-        t = self._ticket()
-        if int(lo.shape[0]) == 0:
-            self._results[t] = _empty_ranges(self.max_hits)
-        else:
-            self._ranges.append((t, lo, hi))
-        return t
+        return self._track(self.session.range(lo, hi))
 
     def submit_insert(self, keys: KeyArray, rows: jnp.ndarray) -> int:
-        t = self._ticket()
-        if int(keys.shape[0]) == 0:
-            self._results[t] = 0
-        else:
-            self._ins.append((t, keys, jnp.asarray(rows, jnp.int32)))
-        return t
+        return self._track(self.session.insert(keys, rows))
 
     def submit_delete(self, keys: KeyArray) -> int:
-        t = self._ticket()
-        if int(keys.shape[0]) == 0:
-            self._results[t] = 0
-        else:
-            self._dels.append((t, keys))
-        return t
+        return self._track(self.session.delete(keys))
 
     @property
     def pending(self) -> int:
-        return (len(self._points) + len(self._ranges)
-                + len(self._ins) + len(self._dels))
+        return self.session.pending
 
     # -- results --------------------------------------------------------------
 
     def result(self, ticket: int):
-        """Pop a served request's result.
-
-        Points -> ``cgrx.LookupResult``; ranges -> ``cgrx.RangeResult``
-        (fields sliced to the submission's shape); writes -> the
-        submitted batch size (NOT the net change: cancelled pairs and
-        deletes of absent keys still count).  Raises KeyError while
-        still queued/unserved.
-        """
-        return self._results.pop(ticket)
+        """Pop a served request's result (legacy pop-once contract:
+        raises KeyError while still queued/unserved, and again on a
+        second pop).  Never auto-flushes — that is the session API's
+        affordance, not the tick loop's."""
+        t = self._tickets.get(ticket)
+        if t is None or not t.ready:
+            raise KeyError(ticket)
+        del self._tickets[ticket]
+        return t.result()
 
     # -- the tick -------------------------------------------------------------
 
     def tick(self) -> TickReport:
-        points, self._points = self._points, []
-        ranges, self._ranges = self._ranges, []
-        ins, self._ins = self._ins, []
-        dels, self._dels = self._dels, []
-
-        n_insert = sum(int(k.shape[0]) for _, k, _ in ins)
-        n_delete = sum(int(k.shape[0]) for _, k in dels)
-        n_point = sum(int(k.shape[0]) for _, k in points)
-        n_range = sum(int(lo.shape[0]) for _, lo, _ in ranges)
-
-        # ---- writes first: one apply_batch for the whole tick ----
-        t0 = time.perf_counter()
-        if n_insert or n_delete:
-            ik = ir = dk = None
-            if ins:
-                ik = _concat([k for _, k, _ in ins])
-                ir = jnp.concatenate([r for _, _, r in ins])
-            if dels:
-                dk = _concat([k for _, k in dels])
-            self.live.apply(ik, ir, dk, auto_compact=False)
-            self.live.sync()
-            for t, k, _ in ins:
-                self._results[t] = int(k.shape[0])
-            for t, k in dels:
-                self._results[t] = int(k.shape[0])
-        t_update = time.perf_counter() - t0
-
-        # ---- compaction check (the pause, when it fires) ----
-        t0 = time.perf_counter()
-        compacted = self.live.maybe_compact() if (n_insert or n_delete) else None
-        if compacted:
-            self.live.sync()
-        t_compact = time.perf_counter() - t0
-
-        # ---- reads: one engine call for all points + ranges ----
-        t0 = time.perf_counter()
-        if n_point or n_range:
-            batch = QueryBatch()
-            for _, k in points:
-                batch.add_points(k)
-            for _, lo, hi in ranges:
-                batch.add_ranges(lo, hi)
-            res = self.live.execute(batch.plan(max_hits=self.max_hits))
-            jax.block_until_ready(res.points.row_id if n_point
-                                  else res.ranges.row_ids)
-            off = 0
-            for t, k in points:
-                m = int(k.shape[0])
-                self._results[t] = _slice_tuple(res.points, off, off + m)
-                off += m
-            off = 0
-            for t, lo, _ in ranges:
-                m = int(lo.shape[0])
-                self._results[t] = _slice_tuple(res.ranges, off, off + m)
-                off += m
-        t_lookup = time.perf_counter() - t0
-
-        self._tick += 1
-        return TickReport(tick=self._tick - 1, epoch=self.live.epoch,
-                          n_point=n_point, n_range=n_range,
-                          n_insert=n_insert, n_delete=n_delete,
-                          compacted=compacted, update_seconds=t_update,
-                          lookup_seconds=t_lookup,
-                          compact_seconds=t_compact if compacted else 0.0)
-
-
-def _concat(parts: List[KeyArray]) -> KeyArray:
-    out = parts[0]
-    for p in parts[1:]:
-        out = concat_keys(out, p)
-    return out
-
-
-def _slice_tuple(res, lo: int, hi: int):
-    """Slice every field of a NamedTuple result along axis 0."""
-    return type(res)(*(f[lo:hi] for f in res))
+        rep = self.session.flush()
+        return TickReport(tick=rep.flush, epoch=rep.epoch,
+                          n_point=rep.n_point, n_range=rep.n_range,
+                          n_insert=rep.n_insert, n_delete=rep.n_delete,
+                          compacted=rep.compacted,
+                          update_seconds=rep.update_seconds,
+                          lookup_seconds=rep.lookup_seconds,
+                          compact_seconds=rep.compact_seconds)

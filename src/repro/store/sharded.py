@@ -174,9 +174,11 @@ class ShardedLiveStore:
                                     np.int64)
         return self._counts
 
-    def _live_prefix(self) -> np.ndarray:
+    def live_prefix(self) -> np.ndarray:
         """Exclusive prefix of per-shard live counts — the rank offset
-        that lifts shard-local ranks to global positions."""
+        that lifts shard-local ranks to global positions (public: the
+        db tier's ``scan_ranks`` merges with the same identity this
+        module's read path uses)."""
         counts = self._live_counts()
         return np.concatenate([[0], np.cumsum(counts)[:-1]])
 
@@ -206,6 +208,9 @@ class ShardedLiveStore:
         planner, and one engine dispatch per touched shard serves it.
         """
         np_, nr = plan.n_point, plan.n_range
+        if np_ == 0 and nr == 0:  # empty flush: no routing, no dispatch
+            return BatchResult(points=cgrx.empty_lookup_result(),
+                               ranges=cgrx.empty_range_result(plan.max_hits))
         pts = plan.keys[:np_]
         lo = plan.keys[np_:np_ + nr]
         hi = plan.keys[np_ + nr:np_ + 2 * nr]
@@ -216,7 +221,7 @@ class ShardedLiveStore:
             first, last = np.asarray(first_d), np.asarray(last_d)
         else:
             first = last = np.zeros(0, np.int32)
-        prefix = self._live_prefix()
+        prefix = self.live_prefix()
 
         # Per-shard sub-batches -> one engine dispatch per touched shard.
         point_parts: List[Tuple[np.ndarray, object]] = []
@@ -387,10 +392,8 @@ def _merge_points(n_point: int,
                   parts: List[Tuple[np.ndarray, cgrx.LookupResult]]
                   ) -> cgrx.LookupResult:
     """Scatter per-shard point results back into request order."""
-    z = jnp.zeros((0,), jnp.int32)
     if n_point == 0:
-        return cgrx.LookupResult(bucket_id=z, row_id=z,
-                                 found=jnp.zeros((0,), bool), position=z)
+        return cgrx.empty_lookup_result()
     found = np.zeros(n_point, bool)
     row = np.full(n_point, MISS, np.int32)
     pos = np.zeros(n_point, np.int32)
@@ -418,9 +421,7 @@ def _merge_ranges(n_range: int, max_hits: int,
     order.
     """
     if n_range == 0:
-        z = jnp.zeros((0,), jnp.int32)
-        return cgrx.RangeResult(start=z, count=z,
-                                row_ids=jnp.zeros((0, max_hits), jnp.int32))
+        return cgrx.empty_range_result(max_hits)
     start = np.zeros(n_range, np.int32)
     count = np.zeros(n_range, np.int32)
     rows = np.full((n_range, max_hits), MISS, np.int32)

@@ -90,3 +90,19 @@ def test_missing_and_new_metrics(tmp_path, capsys):
     assert "MISSING live_store/wave1" in out
     assert "NEW brand_new_suite/m" in out
     assert cmp.main([base, c, "--strict"]) == 1
+
+
+def test_meta_pseudo_suite_ignored_by_gate(tmp_path):
+    """run.py stamps provenance under '_meta' (git SHA, jax version,
+    seed); the gate must neither track it nor choke on its non-float
+    values."""
+    base = dict(BASE, _meta={"git_sha": "abc123", "jax_version": "0.4.37",
+                             "seed": None})
+    cur = dict(BASE, _meta={"git_sha": "def456", "jax_version": "0.5.0",
+                            "seed": 7})
+    assert "_meta/git_sha" not in cmp.flatten(base)
+    b = _dump(tmp_path, "base.json", base)
+    c = _dump(tmp_path, "cur.json", cur)
+    assert cmp.main([b, c]) == 0
+    # strict mode too: _meta never counts as a missing metric
+    assert cmp.main([b, c, "--strict"]) == 0

@@ -1,0 +1,429 @@
+"""The unified ``repro.db`` session API: cross-tier parity + semantics.
+
+The acceptance property of the redesign: the SAME mixed op sequence —
+point lookups (hits and misses), multi-shard ranges, rank scans,
+inserts, deletes — submitted through the one ``Session`` surface on the
+``static`` (reads-only prefix), ``live``, and ``sharded`` tiers yields
+bit-identical results and rank outputs to the pre-redesign oracles
+(``core.cgrx`` single calls for static, a directly-driven
+``store.LiveIndex`` for the updatable tiers).  Plus: ticket/auto-flush
+semantics, the one-dispatch-per-op-class flush invariant, the all-empty
+flush no-op, typed write rejection on the static tier, the unified
+stats/nbytes surface, spec validation, and the deprecation shims
+(``LiveFrontend``, ``cgrx.lookup``-style conveniences) warning once with
+unchanged behavior.
+"""
+import warnings
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+import repro.db as db
+from repro.core import cgrx, deprecation
+from repro.core.keys import KeyArray
+from repro.store import CompactionPolicy, LiveConfig, LiveFrontend, LiveIndex
+
+NEVER = CompactionPolicy().never()
+
+
+def mk(raw):
+    return KeyArray.from_u64(np.asarray(raw, dtype=np.uint64))
+
+
+def assert_points_equal(got, want, ctx):
+    for f in ("found", "row_id", "position"):
+        g, w = np.asarray(getattr(got, f)), np.asarray(getattr(want, f))
+        assert (g == w).all(), f"{ctx}: field {f} diverges"
+
+
+def assert_ranges_equal(got, want, ctx):
+    for f in want._fields:
+        g, w = np.asarray(getattr(got, f)), np.asarray(getattr(want, f))
+        assert (g == w).all(), f"{ctx}: field {f} diverges"
+
+
+def spec_for(tier):
+    return db.IndexSpec(tier=tier, node_cap=16, bucket_size=16,
+                        policy=NEVER, max_hits=32,
+                        shards=4, max_imbalance=None)
+
+
+@pytest.fixture(scope="module")
+def workload():
+    rng = np.random.default_rng(7)
+    raw = np.unique(rng.integers(0, 1 << 44, 5000, dtype=np.uint64))[:3000]
+    rows = np.arange(len(raw), dtype=np.int32)
+    sraw = np.sort(raw)
+    hits = raw[rng.integers(0, len(raw), 120)]
+    misses = np.setdiff1d(
+        np.unique(rng.integers(0, 1 << 44, 80, dtype=np.uint64)), raw)[:60]
+    pts = np.concatenate([hits, misses])
+    # Ranges spanning most of the key space -> cross 3+ shard boundaries
+    # on the 4-shard tier.
+    starts = rng.integers(0, len(sraw) - 2500, 24)
+    lo, hi = sraw[starts], sraw[starts + 2400]
+    ins = np.setdiff1d(np.unique(
+        rng.integers(0, 1 << 44, 1500, dtype=np.uint64)), raw)[:500]
+    dels = raw[rng.choice(len(raw), 300, replace=False)]
+    return dict(raw=raw, rows=rows, pts=pts, lo=lo, hi=hi,
+                ins=ins, dels=dels)
+
+
+# ---------------------------------------------------------------------------
+# Cross-tier parity vs the pre-redesign oracles.
+# ---------------------------------------------------------------------------
+
+def run_read_prefix(sess, w):
+    """The reads-only prefix of the shared op sequence, as one flush."""
+    t_p = sess.lookup(mk(w["pts"]))
+    t_r = sess.range(mk(w["lo"]), mk(w["hi"]))
+    t_l = sess.scan_ranks(mk(w["pts"]), side="left")
+    t_h = sess.scan_ranks(mk(w["pts"]), side="right")
+    sess.flush()
+    return (t_p.result(), t_r.result(),
+            np.asarray(t_l.result()), np.asarray(t_h.result()))
+
+
+@pytest.mark.parametrize("tier", ["static", "live", "sharded"])
+def test_read_prefix_matches_cgrx_oracle(tier, workload):
+    """Every tier, same Session calls, bit-identical to the pre-redesign
+    ``core.cgrx`` single-call oracle (and its rank outputs)."""
+    w = workload
+    sess = db.open(spec_for(tier), mk(w["raw"]), w["rows"])
+    points, ranges, rk_l, rk_r = run_read_prefix(sess, w)
+
+    oracle = cgrx.build(mk(np.sort(w["raw"])),
+                        jnp.asarray(w["rows"][np.argsort(w["raw"])]),
+                        16, presorted=True)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        o_pts = cgrx.lookup(oracle, mk(w["pts"]))
+        o_rng = cgrx.range_lookup(oracle, mk(w["lo"]), mk(w["hi"]),
+                                  max_hits=32)
+    o_l = np.asarray(cgrx.rank(oracle, mk(w["pts"]), side="left"))
+    o_r = np.asarray(cgrx.rank(oracle, mk(w["pts"]), side="right"))
+
+    assert_points_equal(points, o_pts, f"{tier}/points")
+    assert_ranges_equal(ranges, o_rng, f"{tier}/ranges")
+    assert (rk_l == o_l).all() and (rk_r == o_r).all(), f"{tier}/ranks"
+    # Host oracle for the ranks too (independent of cgrx):
+    sraw = np.sort(w["raw"])
+    assert (rk_l == np.searchsorted(sraw, w["pts"], "left")).all()
+    assert (rk_r == np.searchsorted(sraw, w["pts"], "right")).all()
+
+
+@pytest.mark.parametrize("tier", ["live", "sharded"])
+def test_mixed_sequence_matches_live_oracle(tier, workload):
+    """Full sequence (reads, then a mixed write+read flush, then reads)
+    vs a directly-driven pre-redesign ``LiveIndex`` oracle."""
+    w = workload
+    sess = db.open(spec_for(tier), mk(w["raw"]), w["rows"])
+    oracle = LiveIndex.build(mk(w["raw"]), jnp.asarray(w["rows"]),
+                             LiveConfig(node_cap=16, policy=NEVER))
+
+    # reads-only prefix
+    points, ranges, rk_l, _ = run_read_prefix(sess, w)
+    assert_points_equal(points, oracle.lookup(mk(w["pts"])),
+                        f"{tier}/pre/points")
+    assert_ranges_equal(ranges, oracle.range_lookup(mk(w["lo"]),
+                                                    mk(w["hi"]), 32),
+                        f"{tier}/pre/ranges")
+
+    # one mixed flush: writes land before the same flush's reads
+    ins_rows = np.arange(9000, 9000 + len(w["ins"]), dtype=np.int32)
+    t_i = sess.insert(mk(w["ins"]), ins_rows)
+    t_d = sess.delete(mk(w["dels"]))
+    t_new = sess.lookup(mk(w["ins"]))
+    t_gone = sess.lookup(mk(w["dels"]))
+    t_rng = sess.range(mk(w["lo"]), mk(w["hi"]))
+    rep = sess.flush()
+    assert (rep.n_insert, rep.n_delete) == (len(w["ins"]), len(w["dels"]))
+    assert t_i.result() == len(w["ins"]) and t_d.result() == len(w["dels"])
+
+    oracle.apply(mk(w["ins"]), jnp.asarray(ins_rows), mk(w["dels"]))
+    assert_points_equal(t_new.result(), oracle.lookup(mk(w["ins"])),
+                        f"{tier}/post/ins")
+    assert_points_equal(t_gone.result(), oracle.lookup(mk(w["dels"])),
+                        f"{tier}/post/dels")
+    assert not bool(np.asarray(t_gone.result().found).any())
+    assert_ranges_equal(t_rng.result(),
+                        oracle.range_lookup(mk(w["lo"]), mk(w["hi"]), 32),
+                        f"{tier}/post/ranges")
+
+    # rank outputs after the writes, vs oracle engine + host truth
+    live_np = np.sort(np.setdiff1d(
+        np.concatenate([w["raw"], w["ins"]]), w["dels"]))
+    rk = np.asarray(sess.scan_ranks(mk(w["pts"])).result())
+    assert (rk == np.searchsorted(live_np, w["pts"], "left")).all()
+    o_rk = np.asarray(oracle.engine.rank_batch(
+        mk(w["pts"]), jnp.zeros(len(w["pts"]), jnp.int32)))
+    assert (rk == o_rk).all()
+
+    # unified stats reflect the traffic
+    st = sess.stats()
+    assert st.tier == tier
+    assert st.live_keys == len(live_np)
+    assert st.inserts == len(w["ins"]) and st.deletes == len(w["dels"])
+    assert st.num_shards == (4 if tier == "sharded" else 1)
+
+
+def test_multi_shard_ranges_cross_boundaries(workload):
+    """The parity ranges really do span 3+ shards (guards the fixture)."""
+    w = workload
+    sess = db.open(spec_for("sharded"), mk(w["raw"]), w["rows"])
+    store = sess.tier.store
+    spans = 1 + store.route(mk(w["hi"])) - store.route(mk(w["lo"]))
+    assert spans.max() >= 3
+
+
+# ---------------------------------------------------------------------------
+# Session semantics: tickets, flush batching, empty flush.
+# ---------------------------------------------------------------------------
+
+def small_session(tier="live", **kw):
+    raw = np.arange(0, 4096, 2, dtype=np.uint64)
+    spec = spec_for(tier)
+    sess = db.open(spec, mk(raw), np.arange(len(raw), dtype=np.int32))
+    return sess, raw
+
+
+def test_ticket_auto_flush_and_idempotent_result():
+    sess, raw = small_session()
+    t = sess.lookup(mk(raw[:10]))
+    assert not t.ready and sess.pending == 1
+    res = t.result()                      # auto-flush
+    assert sess.pending == 0 and t.ready
+    assert bool(np.asarray(res.found).all())
+    assert t.result() is res              # idempotent, not pop-once
+
+    t2 = sess.insert(mk([1]), np.asarray([777], np.int32))
+    assert t2.result() == 1               # auto-flush on write tickets too
+    assert np.asarray(sess.lookup(mk([1])).result().row_id)[0] == 777
+
+
+def test_one_dispatch_per_op_class_per_flush():
+    sess, raw = small_session()
+    # several submissions of every class -> exactly one dispatch each
+    sess.insert(mk([1, 3]), np.asarray([900, 901], np.int32))
+    sess.insert(mk([5]), np.asarray([902], np.int32))
+    sess.delete(mk(raw[:4]))
+    sess.lookup(mk(raw[4:8]))
+    sess.lookup(mk(raw[8:12]))
+    sess.range(mk(raw[4:6]), mk(raw[6:8]))
+    sess.scan_ranks(mk(raw[:6]))
+    sess.scan_ranks(mk(raw[:6]), side="right")
+    rep = sess.flush()
+    assert sess.dispatches == {"apply": 1, "query": 1, "rank": 1}
+    assert (rep.n_insert, rep.n_delete) == (3, 4)
+    assert (rep.n_point, rep.n_range, rep.n_rank) == (8, 2, 12)
+
+
+def test_empty_flush_is_cheap_noop():
+    """All-empty flush: no dispatch, no executable, tickets settle
+    (the satellite regression: zero points AND zero ranges must not
+    build a degenerate padded batch)."""
+    sess, raw = small_session()
+    empty = mk(np.zeros(0, np.uint64))
+    t_p = sess.lookup(empty)
+    t_r = sess.range(empty, empty)
+    t_i = sess.insert(empty, np.zeros(0, np.int32))
+    t_d = sess.delete(empty)
+    t_s = sess.scan_ranks(empty)
+    assert sess.pending == 0              # all resolved at submission
+    rep = sess.flush()
+    assert (rep.n_point, rep.n_range, rep.n_insert, rep.n_delete,
+            rep.n_rank) == (0,) * 5
+    assert sess.dispatches == {"apply": 0, "query": 0, "rank": 0}
+    assert t_p.result().found.shape == (0,)
+    assert t_r.result().row_ids.shape == (0, 32)
+    assert t_i.result() == 0 and t_d.result() == 0
+    assert t_s.result().shape == (0,)
+
+
+def test_auto_compact_off_means_flush_never_pauses():
+    """IndexSpec(auto_compact=False): the policy would fire, but flush
+    must not take the epoch-swap pause — maintenance belongs to the
+    caller (who can run tier.maybe_compact() explicitly)."""
+    raw = np.arange(0, 4096, 8, dtype=np.uint64)
+    pol = CompactionPolicy(max_chain=2, min_fill=None,
+                           max_tombstone_ratio=None)
+    spec = db.IndexSpec(tier="live", node_cap=8, policy=pol,
+                        auto_compact=False)
+    sess = db.open(spec, mk(raw), np.arange(len(raw), dtype=np.int32))
+    ins = np.arange(1, 400, 2, dtype=np.uint64)   # dense burst -> chains
+    sess.insert(mk(ins), np.arange(len(ins), dtype=np.int32))
+    rep = sess.flush()
+    assert rep.compacted is None and rep.compact_seconds == 0.0
+    assert sess.epoch == 0 and sess.stats().compactions == 0
+    # the caller-driven path still works
+    assert sess.tier.maybe_compact() == "chain"
+    assert sess.epoch == 1
+
+
+def test_discarded_tickets_do_not_accumulate_results():
+    """Fire-and-forget submissions: once a flush drains its queues the
+    session holds no reference to the tickets (or their results) — a
+    serving loop that never retains read tickets cannot leak."""
+    import weakref
+
+    sess, raw = small_session()
+    t = sess.lookup(mk(raw[:8]))
+    ref = weakref.ref(t)
+    sess.flush()
+    assert t.ready
+    # ...and the reverse direction: a resolved ticket drops its session
+    # reference, so retained result tickets cannot pin index buffers.
+    assert t._session is None
+    del t
+    assert ref() is None, "session retained a resolved ticket"
+
+
+def test_flush_report_counts_compaction():
+    raw = np.arange(0, 4096, 8, dtype=np.uint64)
+    spec = db.IndexSpec(tier="live", node_cap=8,
+                        policy=CompactionPolicy(max_chain=2, min_fill=None,
+                                                max_tombstone_ratio=None))
+    sess = db.open(spec, mk(raw), np.arange(len(raw), dtype=np.int32))
+    ins = np.arange(1, 400, 2, dtype=np.uint64)   # dense burst -> chains
+    sess.insert(mk(ins), np.arange(len(ins), dtype=np.int32))
+    rep = sess.flush()
+    assert rep.compacted is not None and rep.compact_seconds > 0.0
+    assert sess.epoch >= 1
+
+
+# ---------------------------------------------------------------------------
+# Static tier: typed write rejection; spec validation.
+# ---------------------------------------------------------------------------
+
+def test_static_tier_rejects_writes_typed():
+    sess, raw = small_session("static")
+    with pytest.raises(db.ReadOnlyTierError):
+        sess.insert(mk([1]), np.asarray([0], np.int32))
+    with pytest.raises(db.ReadOnlyTierError):
+        sess.delete(mk(raw[:2]))
+    # reads unaffected after the rejection
+    assert bool(np.asarray(sess.lookup(mk(raw[:8])).result().found).all())
+
+
+def test_spec_validation():
+    with pytest.raises(db.InvalidSpecError):
+        db.IndexSpec(tier="nope")
+    with pytest.raises(db.InvalidSpecError):
+        db.IndexSpec(backend="bvh")
+    with pytest.raises(db.InvalidSpecError):
+        db.IndexSpec(bucket_size=0)
+    with pytest.raises(db.InvalidSpecError):
+        db.IndexSpec(tier="sharded", shards=0)
+    # InvalidSpecError is a ValueError: old-style callers still catch it.
+    assert issubclass(db.InvalidSpecError, ValueError)
+
+
+def test_stats_and_nbytes_uniform_across_tiers():
+    raw = np.unique(np.random.default_rng(0).integers(
+        0, 1 << 40, 3000, dtype=np.uint64))[:2000]
+    rows = np.arange(len(raw), dtype=np.int32)
+    for tier in ("static", "live", "sharded"):
+        sess = db.open(spec_for(tier), mk(raw), rows)
+        st = sess.stats()
+        assert isinstance(st, db.Stats) and st.tier == tier
+        assert st.live_keys == len(raw)
+        assert st.total_bytes > 0 and st.max_chain >= 1
+        nb = sess.nbytes()
+        assert nb["total_bytes"] == st.total_bytes
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims: warn once, behavior unchanged.
+# ---------------------------------------------------------------------------
+
+def test_cgrx_convenience_warns_once_behavior_unchanged():
+    raw = np.arange(0, 2048, 2, dtype=np.uint64)
+    idx = cgrx.build(mk(raw), jnp.arange(len(raw), dtype=jnp.int32), 16)
+    q = mk(raw[:32])
+    deprecation.reset("cgrx.lookup")
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        r1 = cgrx.lookup(idx, q)
+        r2 = cgrx.lookup(idx, q)          # second call: silent
+    deps = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(deps) == 1 and "repro.db" in str(deps[0].message)
+    # unchanged behavior: identical to the session over the same index
+    sess = db.Session(db.StaticTier(idx))
+    assert_points_equal(r1, sess.lookup(q).result(), "dep/cgrx.lookup")
+    assert_points_equal(r2, r1, "dep/second-call")
+
+
+def test_frontend_shim_warns_once_behavior_unchanged():
+    raw = np.arange(0, 2048, 2, dtype=np.uint64)
+    live = LiveIndex.build(mk(raw), jnp.arange(len(raw), dtype=jnp.int32),
+                           LiveConfig(node_cap=16, policy=NEVER))
+    deprecation.reset("store.LiveFrontend")
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        fe = LiveFrontend(live, max_hits=8)
+        LiveFrontend(live, max_hits=8)    # second construction: silent
+    deps = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(deps) == 1 and "repro.db" in str(deps[0].message)
+
+    # unchanged behavior: the historical ticket/tick contract
+    t_i = fe.submit_insert(mk([1, 3]), np.asarray([900, 901], np.int32))
+    t_p = fe.submit_point(mk([1, 3, 0]))
+    with pytest.raises(KeyError):
+        fe.result(t_p)                    # unserved -> KeyError, no flush
+    rep = fe.tick()
+    assert (rep.n_insert, rep.n_point) == (2, 3)
+    assert fe.result(t_i) == 2
+    res = fe.result(t_p)
+    assert np.asarray(res.found).tolist() == [True, True, True]
+    with pytest.raises(KeyError):
+        fe.result(t_p)                    # pop-once
+
+
+def test_frontend_shim_runs_policy_even_with_auto_compact_off():
+    """Historical tick contract: tick() evaluated the policy on every
+    write tick regardless of the store's auto_compact knob (which only
+    governed direct apply() calls) — the shim must preserve that."""
+    raw = np.arange(0, 4096, 8, dtype=np.uint64)
+    live = LiveIndex.build(
+        mk(raw), jnp.arange(len(raw), dtype=jnp.int32),
+        LiveConfig(node_cap=8, auto_compact=False,
+                   policy=CompactionPolicy(max_chain=2, min_fill=None,
+                                           max_tombstone_ratio=None)))
+    fe = LiveFrontend(live)
+    ins = np.arange(1, 400, 2, dtype=np.uint64)   # dense burst -> chains
+    fe.submit_insert(mk(ins), np.arange(len(ins), dtype=np.int32))
+    rep = fe.tick()
+    assert rep.compacted == "chain" and live.epoch == 1
+
+
+def test_failed_flush_drops_tickets_loudly():
+    """A flush that raises after draining its queues must not leave
+    tickets that later return the private sentinel as a result."""
+    sess, raw = small_session()
+    t = sess.lookup(mk(raw[:4]))
+    # mixed 32/64-bit keys in one flush -> QueryBatch raises mid-flush
+    sess.lookup(db.KeyArray.from_u32(np.array([1], np.uint32)))
+    with pytest.raises(ValueError):
+        sess.flush()
+    with pytest.raises(RuntimeError, match="failed flush"):
+        t.result()
+
+
+def test_wrap_store_adopts_existing_stores(workload):
+    """repro.db.wrap_store: an already-built store serves via a Session
+    with bit-identical results (the shim path under LiveFrontend)."""
+    w = workload
+    live = LiveIndex.build(mk(w["raw"]), jnp.asarray(w["rows"]),
+                           LiveConfig(node_cap=16, policy=NEVER))
+    sess = db.Session(db.wrap_store(live), max_hits=32)
+    assert_points_equal(sess.lookup(mk(w["pts"])).result(),
+                        live.lookup(mk(w["pts"])), "wrap/points")
+    with pytest.raises(TypeError):
+        db.wrap_store(object())
+
+    class DuckStore:                      # old frontend's duck contract:
+        apply = maybe_compact = execute = sync = None  # no .config
+
+    tier = db.wrap_store(DuckStore())
+    assert isinstance(tier, db.LiveTier) and tier.auto_compact is True

@@ -1,0 +1,126 @@
+"""Property tests for the splitter math in core/distributed.py.
+
+The routing layer (``route_keys`` / ``route_ranges`` over
+``compute_splitters``/``partition_cuts``) is the ownership contract BOTH
+serving tiers build on — the static mesh path and the live sharded store
+agree on which shard owns a key only because they share these functions.
+These tests pin the contract against brute-force host oracles:
+
+  * a splitter is a shard's max key; shard ``s`` owns the half-open
+    interval ``(splitters[s-1], splitters[s]]`` and the LAST shard also
+    absorbs everything beyond the last splitter;
+  * round-trip: every key of the build set routes to the shard whose
+    ``partition_cuts`` slice physically holds it;
+  * a range's ``(first, last)`` span is exactly the set of shards whose
+    owned interval intersects ``[lo, hi]``.
+
+Runs hypothesis-driven when hypothesis is installed (randomized key sets
+and cut points) and as fixed-seed sweeps always, via the
+``tests/_hypothesis_compat.py`` shim.
+"""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.distributed import (compute_splitters, partition_cuts,
+                                    route_keys, route_ranges)
+from repro.core.keys import KeyArray
+
+
+def brute_route(splitters_np: np.ndarray, keys_np: np.ndarray) -> np.ndarray:
+    """Oracle owner per key: first shard whose max-key splitter is >= the
+    key (linear scan, not a searchsorted — deliberately a different
+    algorithm); keys beyond every splitter go to the last shard."""
+    S = len(splitters_np)
+    out = np.empty(len(keys_np), np.int32)
+    for i, k in enumerate(keys_np):
+        for s in range(S):
+            if k <= splitters_np[s]:
+                out[i] = s
+                break
+        else:
+            out[i] = S - 1
+    return out
+
+
+def brute_span(splitters_np: np.ndarray, lo: np.ndarray,
+               hi: np.ndarray):
+    """Oracle (first, last) intersecting shard per range, by checking
+    every shard's owned interval (prev_splitter, splitter] (+inf for the
+    last shard) against [lo, hi]."""
+    S = len(splitters_np)
+    firsts, lasts = [], []
+    for L, U in zip(lo, hi):
+        hit = []
+        for s in range(S):
+            lower = int(splitters_np[s - 1]) if s else -1
+            upper = int(splitters_np[s]) if s < S - 1 else (1 << 63)
+            if int(U) > lower and int(L) <= upper:
+                hit.append(s)
+        # Empty intersection can't happen: shard 0's interval starts
+        # below every key and the last shard's is unbounded above.
+        firsts.append(hit[0])
+        lasts.append(hit[-1])
+    return np.array(firsts, np.int32), np.array(lasts, np.int32)
+
+
+def check_splitter_contract(seed: int, n: int, num_shards: int) -> None:
+    rng = np.random.default_rng(seed)
+    raw = np.unique(rng.integers(0, 1 << 44, int(n * 1.5) + num_shards,
+                                 dtype=np.uint64))[:max(n, num_shards)]
+    skeys = KeyArray.from_u64(raw)
+    splitters = compute_splitters(skeys, num_shards)
+    splitters_np = splitters.to_numpy()
+    cuts = partition_cuts(len(raw), num_shards)
+
+    # compute_splitters = last key of each partition_cuts slice.
+    want = raw[np.maximum(cuts[1:] - 1, 0)]
+    assert (splitters_np == want).all()
+
+    # Round-trip: each build key routes to the slice that holds it.
+    owner = np.asarray(route_keys(splitters, skeys))
+    slice_of = np.searchsorted(cuts[1:], np.arange(len(raw)), side="right")
+    assert (owner == slice_of).all(), "route_keys disagrees with the cuts"
+
+    # Probe keys (members, misses, beyond-max) vs the brute-force oracle.
+    probes = np.unique(np.concatenate([
+        raw[rng.integers(0, len(raw), 64)],
+        rng.integers(0, 1 << 44, 64, dtype=np.uint64),
+        np.array([0, raw.max(), raw.max() + 7], dtype=np.uint64),
+    ]))
+    got = np.asarray(route_keys(splitters, KeyArray.from_u64(probes)))
+    assert (got == brute_route(splitters_np, probes)).all()
+
+    # Ranges (random endpoints, ordered) vs the interval-intersection
+    # oracle; also the route_keys consistency first == owner(lo).
+    a = rng.integers(0, 1 << 44, 48, dtype=np.uint64)
+    b = rng.integers(0, 1 << 44, 48, dtype=np.uint64)
+    lo, hi = np.minimum(a, b), np.maximum(a, b)
+    first, last = route_ranges(splitters, KeyArray.from_u64(lo),
+                               KeyArray.from_u64(hi))
+    first, last = np.asarray(first), np.asarray(last)
+    wfirst, wlast = brute_span(splitters_np, lo, hi)
+    assert (first == wfirst).all() and (last == wlast).all()
+    assert (first <= last).all()
+
+
+@pytest.mark.parametrize("seed,n,num_shards", [
+    (0, 500, 4), (1, 64, 8), (2, 1000, 3), (3, 17, 5), (4, 300, 1),
+])
+def test_splitter_contract_fixed(seed, n, num_shards):
+    check_splitter_contract(seed, n, num_shards)
+
+
+def test_partition_cuts_shape_and_errors():
+    cuts = partition_cuts(10, 4)
+    assert cuts[0] == 0 and cuts[-1] == 10
+    assert (np.diff(cuts) >= 0).all()
+    assert len(cuts) == 5
+    with pytest.raises(ValueError):
+        partition_cuts(3, 4)
+
+
+@given(st.integers(0, 2**31), st.integers(8, 600), st.integers(1, 9))
+@settings(max_examples=20, deadline=None)
+def test_property_splitter_contract(seed, n, num_shards):
+    check_splitter_contract(seed, n, num_shards)

@@ -156,3 +156,21 @@ def test_registry_errors():
     with pytest.raises(ValueError):
         QueryBatch().add_points(mk([1])).add_points(
             KeyArray.from_u32(np.array([1], np.uint32)))  # width mix
+
+
+def test_all_empty_plan_dispatches_nothing():
+    """Zero points AND zero ranges (every submission empty): the plan is
+    a canonical zero-lane batch and the engine returns empty results
+    without building/caching an executable or touching the device — the
+    empty-flush fast path repro.db.Session relies on."""
+    _, _, idx = build(n=500)
+    engine = RankEngine(idx)
+    empty = mk(np.zeros(0, np.uint64))
+    plan = (QueryBatch().add_points(empty).add_ranges(empty, empty)
+            .plan(max_hits=8))
+    assert plan.lanes == 0 and plan.n_point == 0 and plan.n_range == 0
+    res = engine.execute(plan)
+    assert res.points.found.shape == (0,)
+    assert res.points.row_id.shape == (0,)
+    assert res.ranges.row_ids.shape == (0, 8)
+    assert engine._exec_cache == {}      # no executable built or cached

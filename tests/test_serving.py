@@ -60,8 +60,11 @@ def test_page_table_survives_churn():
                 cache, np.full(nb, sid), np.arange(nb))
             assert np.asarray(found).all()
             assert np.asarray(rows).tolist() == pages
-    # reps/BVH untouched: num_buckets fixed since build
-    assert cache.table.num_buckets == 1
+    # reps/BVH untouched: num_buckets fixed since build, epoch never
+    # swapped (the table session's policy is never()).
+    st = cache.table.stats()
+    assert st.num_buckets == 1
+    assert st.epoch == 0 and st.compactions == 0
 
 
 def test_engine_end_to_end():
