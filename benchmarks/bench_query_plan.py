@@ -1,0 +1,128 @@
+"""Compiled query plans vs hand-rolled per-fragment dispatch loops.
+
+The query-plan redesign's pitch: richer workloads (IN-lists, range
+aggregates) no longer cost one dispatch per fragment — the compiler
+fuses a flush's expression trees onto one physical plan per op class,
+and aggregates execute rank-only (no rowID materialization).  This suite
+times both sides of that claim on the live tier:
+
+    sugar/*              the unchanged ``lookup``/``range`` verbs (now
+                         thin IR sugar): the metrics the perf gate uses
+                         to bound COMPILER OVERHEAD on the legacy paths
+                         — identical names and semantics exist pre-IR,
+                         so the committed baseline gates the lowering
+                         machinery itself;
+    inlist/per_fragment  the pre-IR way to serve an IN-list: chunk it and
+                         dispatch one lookup flush per chunk;
+    inlist/fused         ``sess.query(isin(...))``: deduped to one lane
+                         per unique key, one dispatch for the whole list;
+    count/materialized   the pre-IR way to count: a full range lookup
+                         that gathers the (R, max_hits) rowID block and
+                         reads only ``.count``;
+    count/fused          ``sess.query(count(between(...)))``: rank-only;
+    count/kernel_direct  ``kernels.ops.range_count``: the hand-rolled
+                         kernel-level floor the compiled plan should sit
+                         near (one fused launch + a subtraction).
+
+New-API metrics are skipped gracefully on trees that predate the IR
+(guarded by ``hasattr``), so this file can be replayed against an older
+checkout to (re)record the legacy baselines.
+"""
+from benchmarks.common import emit, parse_args, timeit
+
+import numpy as np
+
+import repro.db as db
+from repro.core.bucketing import build_buckets
+from repro.data import keygen
+from repro.kernels import ops as kops
+
+FRAGMENTS = 8          # chunks of the hand-rolled IN-list loop
+DUP_FACTOR = 2         # IN-list duplication (isin dedupes these away)
+N_RANGES = 64
+
+
+def _flush_timer(sess, submit):
+    """Median seconds for submit()+flush() (flush blocks on results)."""
+    def run():
+        submit()
+        sess.flush()
+        return ()
+    return timeit(run)
+
+
+def main(args=None) -> None:
+    args = args or parse_args()
+    seed = getattr(args, "seed", None) or 0
+    n = max(4096, min(args.n, 1 << 20))
+    n_q = max(256, min(args.q, 1 << 20) >> 3)
+
+    keys, rows, raw = keygen.keyset(n, 1.0, bits=64, seed=seed)
+    sraw = np.sort(raw)
+    spec = db.IndexSpec(tier="live", node_cap=32, max_hits=32,
+                        policy=db.CompactionPolicy().never())
+    sess = db.open(spec, keys, rows)
+    rng = np.random.default_rng(seed + 1)
+
+    # ---- legacy-named sugar paths (the compiler-overhead gate) ----
+    q = raw[rng.integers(0, len(raw), n_q)]
+    qk = keygen.as_keys(q, 64)
+    t = _flush_timer(sess, lambda: sess.lookup(qk))
+    emit(f"sugar/point_b{n_q}", t, f"{n_q/t:.0f} lookups/s")
+
+    starts = rng.integers(0, len(sraw) - n // 4, N_RANGES)
+    lo = keygen.as_keys(sraw[starts], 64)
+    hi = keygen.as_keys(sraw[starts + n // 4 - 1], 64)
+    t = _flush_timer(sess, lambda: sess.range(lo, hi))
+    emit(f"sugar/range_b{N_RANGES}", t, f"{N_RANGES/t:.0f} ranges/s")
+
+    # ---- IN-list: per-fragment dispatch loop vs one fused plan ----
+    base = raw[rng.integers(0, len(raw), n_q)]
+    inlist = base[rng.integers(0, len(base), DUP_FACTOR * n_q)]
+    chunks = [keygen.as_keys(c, 64)
+              for c in np.array_split(inlist, FRAGMENTS)]
+
+    def per_fragment():
+        for c in chunks:
+            sess.lookup(c)
+            sess.flush()          # one dispatch PER fragment (the old way)
+    t_loop = timeit(lambda: (per_fragment(), ())[1])
+    emit(f"inlist/per_fragment_f{FRAGMENTS}", t_loop,
+         f"{len(inlist)/t_loop:.0f} keys/s")
+
+    if hasattr(db, "isin"):
+        ik = keygen.as_keys(inlist, 64)
+        t_fused = _flush_timer(sess, lambda: sess.query(db.isin(ik)))
+        emit("inlist/fused", t_fused,
+             f"{len(inlist)/t_fused:.0f} keys/s "
+             f"({t_loop/t_fused:.1f}x vs loop)")
+
+    # ---- COUNT(*) over ranges: materialize-and-discard vs rank-only ----
+    def count_materialized():
+        r = sess.range(lo, hi)
+        sess.flush()
+        return np.asarray(r.result().count)
+    t_mat = timeit(count_materialized)
+    emit(f"count/materialized_b{N_RANGES}", t_mat,
+         f"{N_RANGES/t_mat:.0f} counts/s (gathers max_hits rowIDs)")
+
+    if hasattr(db, "count"):
+        def count_fused():
+            c = sess.query(db.count(db.between(lo, hi)))
+            sess.flush()
+            return np.asarray(c.result())
+        t_cnt = timeit(count_fused)
+        emit(f"count/fused_b{N_RANGES}", t_cnt,
+             f"{N_RANGES/t_cnt:.0f} counts/s "
+             f"({t_mat/t_cnt:.1f}x vs materialized)")
+        assert (count_fused() == count_materialized()).all()
+
+    if hasattr(kops, "range_count"):
+        buckets = build_buckets(keys, rows, 16)
+        t_k = timeit(lambda: kops.range_count(buckets, lo, hi))
+        emit(f"count/kernel_direct_b{N_RANGES}", t_k,
+             f"{N_RANGES/t_k:.0f} counts/s (hand-rolled floor)")
+
+
+if __name__ == "__main__":
+    main(parse_args())

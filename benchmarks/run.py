@@ -39,6 +39,7 @@ SUITES = [
     ("batched_lookup", "benchmarks.bench_batched_lookup"),
     ("live_store", "benchmarks.bench_live_store"),
     ("sharded_store", "benchmarks.bench_sharded_store"),
+    ("query_plan", "benchmarks.bench_query_plan"),
 ]
 
 

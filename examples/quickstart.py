@@ -90,6 +90,35 @@ def main(n: int = 100_000, lookups: int = 10_000) -> None:
           f"structure (epoch {ls.epoch}, max chain {ls.max_chain}, "
           f"{ls.live_keys:,} live keys)")
 
+    # 8. Composable query plans: one sess.query(expr) entry point over a
+    #    small IR — IN-lists, rank-only aggregates, hit caps, join
+    #    probes — and a whole flush still compiles to ONE dispatch per
+    #    op class.
+    inlist = np.concatenate([q_raw[:64], q_raw[:64]])      # 50% duplicates
+    t_in = live.query(db.isin(keygen.as_keys(inlist, 32)))
+    t_cnt = live.query(db.count(db.between(keygen.as_keys(lo, 32),
+                                           keygen.as_keys(hi, 32))))
+    t_top = live.query(db.limit(4, db.between(keygen.as_keys(lo, 32),
+                                              keygen.as_keys(hi, 32))))
+    outer_rows = np.arange(32, dtype=np.int32)
+    t_join = live.query(db.probe(keygen.as_keys(q_raw[:32], 32),
+                                 outer_rows))
+    before = dict(live.dispatches)
+    rep = live.flush()
+    spent = {k: live.dispatches[k] - before[k] for k in before}
+    assert spent == {"apply": 0, "query": 1, "rank": 0}
+    assert bool(t_in.result().found.all())                 # dups answered
+    counts = np.asarray(t_cnt.result())
+    assert (counts >= np.asarray(rr.count)).all()          # superset: +inserts
+    assert t_top.result().row_ids.shape == (len(lo), 4)
+    assert bool(t_join.result().matched.all())
+    n_unique = len(np.unique(inlist))
+    print(f"query plans: IN-list({len(inlist)} keys -> {n_unique} unique "
+          f"lanes) + COUNT({rep.n_agg} ranges, rank-only) + limit(4) + "
+          f"{len(outer_rows)} join probes fused into {rep.n_point} point "
+          f"lanes, one dispatch (this flush: {spent}; "
+          f"counts={counts.tolist()})")
+
 
 if __name__ == "__main__":
     main()

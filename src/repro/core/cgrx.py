@@ -196,6 +196,50 @@ def empty_range_result(max_hits: int) -> RangeResult:
                        row_ids=jnp.zeros((0, max_hits), jnp.int32))
 
 
+# ---------------------------------------------------------------------------
+# Range aggregates (rank-only: COUNT needs no row materialization at all,
+# MIN/MAX gather one key per endpoint instead of max_hits rowIDs).
+# ---------------------------------------------------------------------------
+
+class AggResult(NamedTuple):
+    """Per-range aggregates over [lo, hi] (fields shaped (A,)).
+
+    ``count = rank_right(hi) - rank_left(lo)`` — the quantity the range
+    path always computes and normally discards after gathering rowIDs.
+    ``min_key``/``max_key`` are the smallest/largest live keys inside the
+    range (valid only where ``count > 0``); they are ``None`` unless the
+    plan requested them (``QueryPlan.agg_keys``), so pure-COUNT pipelines
+    stay a subtraction of ranks.
+    """
+
+    count: jnp.ndarray            # int32 (A,)
+    min_key: Optional[KeyArray]   # (A,) or None
+    max_key: Optional[KeyArray]   # (A,) or None
+
+
+def agg_from_ranks(index: CgrxIndex, start: jnp.ndarray, end: jnp.ndarray,
+                   with_keys: bool = False) -> AggResult:
+    """(rank_left(lo), rank_right(hi)) -> AggResult.
+
+    Shared post-processing of the batched engine's aggregate section
+    (repro.query.engine); the node-store analogue lives on
+    ``repro.store.live.NodeIndexView.agg_from_ranks``.
+    """
+    count = jnp.maximum(end - start, 0).astype(jnp.int32)
+    if not with_keys:
+        return AggResult(count=count, min_key=None, max_key=None)
+    last = jnp.maximum(index.n - 1, 0)
+    min_key = index.buckets.keys.take(jnp.minimum(start, last))
+    max_key = index.buckets.keys.take(jnp.clip(end - 1, 0, last))
+    return AggResult(count=count, min_key=min_key, max_key=max_key)
+
+
+def empty_agg_result() -> AggResult:
+    """A zero-range ``AggResult`` (count only — no key planes)."""
+    return AggResult(count=jnp.zeros((0,), jnp.int32),
+                     min_key=None, max_key=None)
+
+
 def range_lookup(index: CgrxIndex, lo: KeyArray, hi: KeyArray,
                  max_hits: int) -> RangeResult:
     """Single-call range lookup.  Prefer ``repro.db`` sessions (or the

@@ -17,12 +17,23 @@ against — benchmarks, examples, serving.  The tiering ladder
     rep = sess.flush()                # ONE device dispatch per op class
     res, rows = t.result(), rng.result()
 
-Layering: ``core`` (index math) -> ``query`` (batched rank engine) ->
-``store`` (live/sharded lifecycles) -> ``db`` (this package).  Module
-map: ``spec`` (IndexSpec), ``tiers`` (IndexTier protocol + the three
-implementations, unified ``Stats``), ``session`` (Session/Ticket/
-FlushReport), ``errors`` (typed errors).  See docs/ARCHITECTURE.md
-("Public API").
+Beyond the flat verbs, ``Session.query`` takes composable logical-plan
+expressions (``repro.query.plan``, re-exported here): ``eq`` /
+``between`` / ``isin`` (IN-lists, deduplicated) / ``limit`` (per-range
+hit caps) / ``count`` / ``min_key`` / ``max_key`` (rank-only range
+aggregates) / ``probe`` (index nested-loop join probes) / ``rank_scan``
+— a whole flush's trees compile onto ONE physical plan per op class::
+
+    t = sess.query(db.count(db.between(lo, hi)))   # no rowID gather
+    j = sess.query(db.probe(keys, outer_rows))     # join probe
+    sess.flush()                                   # still one dispatch
+
+Layering: ``core`` (index math) -> ``query`` (batched rank engine +
+logical-plan compiler) -> ``store`` (live/sharded lifecycles) -> ``db``
+(this package).  Module map: ``spec`` (IndexSpec), ``tiers`` (IndexTier
+protocol + the three implementations, unified ``Stats``), ``session``
+(Session/Ticket/FlushReport), ``errors`` (typed errors).  See
+docs/ARCHITECTURE.md ("Public API", "Query plans").
 """
 from __future__ import annotations
 
@@ -33,6 +44,9 @@ import numpy as np
 
 # Re-exported so spec construction needs only `import repro.db`.
 from repro.core.keys import KeyArray
+from repro.query.plan import (AggKeys, Expr, ProbeResult, between, count,
+                              eq, isin, limit, max_key, min_key, probe,
+                              rank_scan)
 from repro.store.compaction import CompactionPolicy
 
 from .errors import DbError, InvalidSpecError, ReadOnlyTierError
@@ -42,14 +56,17 @@ from .tiers import (IndexTier, LiveTier, ShardedTier, Stats, StaticTier,
                     build_tier, wrap_store)
 
 __all__ = [
+    "AggKeys",
     "CompactionPolicy",
     "DbError",
+    "Expr",
     "FlushReport",
     "IndexSpec",
     "IndexTier",
     "InvalidSpecError",
     "KeyArray",
     "LiveTier",
+    "ProbeResult",
     "ReadOnlyTierError",
     "Session",
     "ShardedTier",
@@ -57,8 +74,17 @@ __all__ = [
     "StaticTier",
     "Ticket",
     "as_key_array",
+    "between",
     "build_tier",
+    "count",
+    "eq",
+    "isin",
+    "limit",
+    "max_key",
+    "min_key",
     "open",
+    "probe",
+    "rank_scan",
     "wrap_store",
 ]
 

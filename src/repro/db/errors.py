@@ -17,7 +17,9 @@ class ReadOnlyTierError(DbError):
 
 
 class InvalidSpecError(DbError, ValueError):
-    """An ``IndexSpec`` field is invalid: unknown tier or backend,
-    non-positive bucket/node/hit sizes, or a non-positive shard count on
-    the sharded tier.  (Sharding knobs on an unsharded tier are inert,
-    not an error — a spec may be flipped between tiers in place.)"""
+    """An ``IndexSpec`` (or ``Session``) knob is invalid: unknown tier or
+    backend, non-positive bucket/node sizes, a non-positive shard count
+    on the sharded tier, or a ``max_hits`` outside ``[1, MAX_MAX_HITS]``
+    (``repro.query.batch``) — the message always names the offending
+    value.  (Sharding knobs on an unsharded tier are inert, not an error
+    — a spec may be flipped between tiers in place.)"""

@@ -1,18 +1,35 @@
 """``Session``: the one typed surface for all index traffic.
 
-Every request kind — point lookup, range lookup, insert, delete, raw
-rank scan — is submitted as a future-style ``Ticket`` and served by
-``flush()``, which drains the queues with ONE device dispatch per op
-class:
+Every request kind — point lookup, range lookup, IN-list, range
+aggregate, join probe, insert, delete, raw rank scan — is submitted as a
+future-style ``Ticket`` and served by ``flush()``, which drains the
+queues with ONE device dispatch per op class:
 
     writes:  one ``tier.apply`` covering every insert AND delete of the
              flush (deletions-before-insertions semantics; ins∩del
              pairs cancel — the contract of ``nodes.apply_batch``);
     policy:  one compaction/rebalance check (timed: the pause an epoch
              swap takes is the number benchmarks plot);
-    reads:   one ``tier.execute`` over a ``QueryBatch`` coalescing all
-             points and ranges into a single padded lane batch;
+    reads:   one ``tier.execute`` over the physical ``QueryPlan`` the
+             logical-plan compiler (``repro.query.plan``) fuses from
+             EVERY read expression of the flush — points, ranges,
+             IN-lists, join probes and rank-only aggregates together;
     ranks:   one ``tier.scan_ranks`` covering every rank scan.
+
+``query(expr)`` is the general entry point: it takes any expression tree
+of the ``repro.query.plan`` IR (``eq`` / ``between`` / ``isin`` /
+``limit`` / ``count`` / ``min_key`` / ``max_key`` / ``probe`` /
+``rank_scan``, re-exported on ``repro.db``) and resolves to that tree's
+result.  The historical verbs are THIN SUGAR over it —
+
+    lookup(k)        = query(eq(k))
+    range(lo, hi)    = query(between(lo, hi))
+    scan_ranks(k, s) = query(rank_scan(k, s))
+
+— constructing the same IR nodes the compiler lowers to the exact lane
+layout the pre-IR session produced, so their results stay bit-identical.
+A flush whose read set is aggregate-only executes the engine's rank-only
+path: no rowID block is ever gathered (pin: ``query.STAGE_COUNTERS``).
 
 Within a flush, writes land before reads: a lookup submitted in the same
 flush as an insert of its key hits.  Admission batching is therefore the
@@ -24,9 +41,9 @@ result auto-flushes, so single-call usage reads naturally::
     sess = repro.db.open(spec, keys, rows)
     res = sess.lookup(queries).result()          # auto-flush
     sess.insert(k, r); sess.delete(d)
-    rng = sess.range(lo, hi)
+    cnt = sess.query(db.count(db.between(lo, hi)))
     rep = sess.flush()                           # one dispatch per class
-    rows = rng.result()
+    counts = cnt.result()
 
 ``dispatches`` counts coalesced dispatch *rounds* per op class (at most
 one per class per flush) — the observable the perf gate uses to pin
@@ -43,19 +60,15 @@ from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import cgrx
 from repro.core.keys import KeyArray, concat_keys
-from repro.query import QueryBatch
-from repro.query.batch import SIDE_LEFT, SIDE_RIGHT
+from repro.query import plan as qplan
+from repro.query.batch import validate_max_hits
 
-from .errors import ReadOnlyTierError
+from .errors import InvalidSpecError, ReadOnlyTierError
 from .tiers import IndexTier, Stats
 
 _UNSET = object()
-
-_SIDES = {"left": SIDE_LEFT, "right": SIDE_RIGHT}
 
 
 class Ticket:
@@ -67,7 +80,8 @@ class Ticket:
     ``range`` -> ``RangeResult`` (fields sliced to the submission's
     shape), ``insert``/``delete`` -> submitted batch size (NOT the net
     change: cancelled pairs and deletes of absent keys still count),
-    ``rank`` -> int32 global-rank array.
+    ``rank`` -> int32 global-rank array; ``query`` tickets resolve to
+    their expression tree's result type (see ``repro.query.plan``).
 
     The resolved value lives on the ticket itself (the session holds no
     reference back once the flush drains its queue), so fire-and-forget
@@ -115,7 +129,13 @@ class Ticket:
 
 @dataclasses.dataclass(frozen=True)
 class FlushReport:
-    """What one ``flush()`` did and what it cost."""
+    """What one ``flush()`` did and what it cost.
+
+    ``n_point``/``n_range``/``n_agg`` count PHYSICAL fragments per
+    section of the fused plan (an IN-list contributes its unique keys, a
+    probe its probe lanes, an aggregate its ranges), ``n_rank`` the rank-
+    scan lanes — the shapes the one dispatch per class actually served.
+    """
 
     flush: int                 # 0-based flush counter
     epoch: int                 # tier epoch serving this flush's reads
@@ -129,24 +149,29 @@ class FlushReport:
     lookup_seconds: float      # engine execute wall time
     rank_seconds: float        # scan_ranks wall time
     compact_seconds: float     # epoch-swap pause (0.0 when none fired)
+    n_agg: int = 0             # rank-only aggregate ranges served
 
 
 class Session:
     """The single front door over one ``IndexTier`` (see module doc)."""
 
     def __init__(self, tier: IndexTier, *, max_hits: int = 64):
+        try:
+            validate_max_hits(max_hits)
+        except ValueError as e:
+            raise InvalidSpecError(str(e)) from None
         self.tier = tier
         self.max_hits = max_hits
         self._next_ticket = 0
         self._flush_count = 0
         # Queues hold the Ticket objects themselves; flush resolves onto
         # them and drops the queue reference, so the session never
-        # retains results the caller discarded.
-        self._points: List[Tuple[Ticket, KeyArray]] = []
-        self._ranges: List[Tuple[Ticket, KeyArray, KeyArray]] = []
+        # retains results the caller discarded.  Reads are one queue of
+        # (ticket, expression tree) pairs — the compiler assigns each
+        # tree's fragments to the right op class at flush time.
+        self._reads: List[Tuple[Ticket, qplan.Expr]] = []
         self._ins: List[Tuple[Ticket, KeyArray, jnp.ndarray]] = []
         self._dels: List[Tuple[Ticket, KeyArray]] = []
-        self._scans: List[Tuple[Ticket, KeyArray, int]] = []
         # Coalesced dispatch rounds per op class since open (one per
         # class per non-empty flush is the invariant the perf gate
         # tracks; a sharded tier fans one round out per touched shard).
@@ -164,26 +189,34 @@ class Session:
     # applied-count of 0) instead of queueing: an all-empty flush
     # dispatches nothing, so their tickets would otherwise never settle.
 
-    def lookup(self, keys: KeyArray) -> Ticket:
-        """Queue a point-lookup batch; resolves to ``LookupResult``."""
-        t = self._ticket("point")
-        if int(keys.shape[0]) == 0:
-            t._resolve(cgrx.empty_lookup_result())
+    def query(self, expr: qplan.Expr, *, kind: Optional[str] = None) -> Ticket:
+        """Queue one logical-plan expression tree; resolves to the
+        tree's result type (see ``repro.query.plan``).  All trees queued
+        before a flush fuse into ONE dispatch per op class."""
+        if not isinstance(expr, qplan.Expr):
+            raise TypeError(
+                f"query() takes a repro.query.plan expression "
+                f"(eq/between/isin/limit/count/min_key/max_key/probe/"
+                f"rank_scan), got {type(expr).__name__}")
+        t = self._ticket(kind or "query")
+        if qplan.expr_size(expr) == 0:
+            t._resolve(qplan.empty_result(expr, self.max_hits))
         else:
-            self._points.append((t, keys))
+            self._reads.append((t, expr))
         return t
+
+    def lookup(self, keys: KeyArray) -> Ticket:
+        """Queue a point-lookup batch; resolves to ``LookupResult``.
+        Sugar for ``query(eq(keys))``."""
+        return self.query(qplan.eq(keys), kind="point")
 
     def range(self, lo: KeyArray, hi: KeyArray) -> Ticket:
         """Queue a range-lookup batch; resolves to ``RangeResult`` with
-        ``max_hits`` row capacity per range."""
+        ``max_hits`` row capacity per range.  Sugar for
+        ``query(between(lo, hi))``."""
         if lo.shape != hi.shape:
             raise ValueError("range lo/hi shapes differ")
-        t = self._ticket("range")
-        if int(lo.shape[0]) == 0:
-            t._resolve(cgrx.empty_range_result(self.max_hits))
-        else:
-            self._ranges.append((t, lo, hi))
-        return t
+        return self.query(qplan.between(lo, hi), kind="range")
 
     def insert(self, keys: KeyArray, rows: jnp.ndarray) -> Ticket:
         """Queue an insert batch; resolves to the submitted count."""
@@ -207,15 +240,9 @@ class Session:
 
     def scan_ranks(self, keys: KeyArray, side: str = "left") -> Ticket:
         """Queue a raw rank scan (#keys < q, or <= q with
-        ``side='right'``); resolves to an int32 global-rank array."""
-        if side not in _SIDES:
-            raise ValueError(f"side must be 'left' or 'right', got {side!r}")
-        t = self._ticket("rank")
-        if int(keys.shape[0]) == 0:
-            t._resolve(jnp.zeros((0,), jnp.int32))
-        else:
-            self._scans.append((t, keys, _SIDES[side]))
-        return t
+        ``side='right'``); resolves to an int32 global-rank array.
+        Sugar for ``query(rank_scan(keys, side))``."""
+        return self.query(qplan.rank_scan(keys, side), kind="rank")
 
     def _check_writable(self, op: str) -> None:
         if not self.tier.writable:
@@ -227,8 +254,7 @@ class Session:
     @property
     def pending(self) -> int:
         """Queued (unserved) requests awaiting the next flush."""
-        return (len(self._points) + len(self._ranges) + len(self._ins)
-                + len(self._dels) + len(self._scans))
+        return len(self._reads) + len(self._ins) + len(self._dels)
 
     # -- introspection --------------------------------------------------------
 
@@ -247,21 +273,16 @@ class Session:
     def flush(self) -> FlushReport:
         """Drain every queue with one device dispatch per op class.
 
-        Order: writes -> policy -> reads -> rank scans.  An all-empty
-        flush is a cheap no-op: nothing is planned, compiled or
-        dispatched (see tests/test_db.py).
+        Order: writes -> policy -> reads (the fused plan) -> rank scans.
+        An all-empty flush is a cheap no-op: nothing is planned, compiled
+        or dispatched (see tests/test_db.py).
         """
-        points, self._points = self._points, []
-        ranges, self._ranges = self._ranges, []
+        reads, self._reads = self._reads, []
         ins, self._ins = self._ins, []
         dels, self._dels = self._dels, []
-        scans, self._scans = self._scans, []
 
         n_insert = sum(int(k.shape[0]) for _, k, _ in ins)
         n_delete = sum(int(k.shape[0]) for _, k in dels)
-        n_point = sum(int(k.shape[0]) for _, k in points)
-        n_range = sum(int(lo.shape[0]) for _, lo, _ in ranges)
-        n_rank = sum(int(k.shape[0]) for _, k, _ in scans)
 
         # ---- writes first: one apply for the whole flush ----
         t0 = time.perf_counter()
@@ -293,57 +314,51 @@ class Session:
             self.tier.sync()
         t_compact = time.perf_counter() - t0
 
-        # ---- reads: one engine call for all points + ranges ----
+        # ---- reads: compile every expression onto one plan per class ----
+        # Compiled after the writes so a compile error (e.g. mixed key
+        # widths) cannot retract writes the caller already saw applied.
+        program = (qplan.compile_exprs([e for _, e in reads],
+                                       default_max_hits=self.max_hits)
+                   if reads else None)
+
         t0 = time.perf_counter()
-        if n_point or n_range:
-            batch = QueryBatch()
-            for _, k in points:
-                batch.add_points(k)
-            for _, lo, hi in ranges:
-                batch.add_ranges(lo, hi)
-            res = self.tier.execute(batch.plan(max_hits=self.max_hits))
+        res = None
+        if program is not None and program.has_query:
+            res = self.tier.execute(program.plan)
             self.dispatches["query"] += 1
-            jax.block_until_ready(res.points.row_id if n_point
-                                  else res.ranges.row_ids)
-            off = 0
-            for t, k in points:
-                m = int(k.shape[0])
-                t._resolve(_slice_tuple(res.points, off, off + m))
-                off += m
-            off = 0
-            for t, lo, _ in ranges:
-                m = int(lo.shape[0])
-                t._resolve(_slice_tuple(res.ranges, off, off + m))
-                off += m
+            jax.block_until_ready(
+                res.aggs.count if program.n_agg
+                else (res.points.row_id if program.n_point
+                      else res.ranges.row_ids))
         t_lookup = time.perf_counter() - t0
 
         # ---- rank scans: one scan_ranks call for all of them ----
         t0 = time.perf_counter()
-        if n_rank:
-            qk = _concat([k for _, k, _ in scans])
-            sides = jnp.asarray(np.concatenate(
-                [np.full(int(k.shape[0]), s, np.int32)
-                 for _, k, s in scans]))
-            ranks = self.tier.scan_ranks(qk, sides)
+        ranks = None
+        if program is not None and program.has_rank:
+            ranks = self.tier.scan_ranks(program.rank_keys,
+                                         program.rank_sides)
             self.dispatches["rank"] += 1
             jax.block_until_ready(ranks)
-            off = 0
-            for t, k, _ in scans:
-                m = int(k.shape[0])
-                t._resolve(ranks[off:off + m])
-                off += m
         t_rank = time.perf_counter() - t0
+
+        if program is not None:
+            for (t, _), extract in zip(reads, program.extractors):
+                t._resolve(extract(res, ranks))
 
         self._flush_count += 1
         return FlushReport(flush=self._flush_count - 1,
                            epoch=self.tier.epoch,
-                           n_point=n_point, n_range=n_range,
+                           n_point=program.n_point if program else 0,
+                           n_range=program.n_range if program else 0,
                            n_insert=n_insert, n_delete=n_delete,
-                           n_rank=n_rank, compacted=compacted,
+                           n_rank=program.n_rank if program else 0,
+                           compacted=compacted,
                            update_seconds=t_update,
                            lookup_seconds=t_lookup,
                            rank_seconds=t_rank,
-                           compact_seconds=t_compact if compacted else 0.0)
+                           compact_seconds=t_compact if compacted else 0.0,
+                           n_agg=program.n_agg if program else 0)
 
 
 # ---------------------------------------------------------------------------
@@ -355,8 +370,3 @@ def _concat(parts: List[KeyArray]) -> KeyArray:
     for p in parts[1:]:
         out = concat_keys(out, p)
     return out
-
-
-def _slice_tuple(res, lo: int, hi: int):
-    """Slice every field of a NamedTuple result along axis 0."""
-    return type(res)(*(f[lo:hi] for f in res))

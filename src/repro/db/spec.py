@@ -20,6 +20,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+from repro.query.batch import validate_max_hits
 from repro.store.compaction import CompactionPolicy
 from repro.store.live import LiveConfig
 from repro.store.sharded import ShardedConfig
@@ -73,9 +74,16 @@ class IndexSpec:
             raise InvalidSpecError(
                 f"unknown backend {self.backend!r}; expected one of "
                 f"{BACKENDS}")
-        if self.bucket_size <= 0 or self.node_cap <= 0 or self.max_hits <= 0:
+        if self.bucket_size <= 0 or self.node_cap <= 0:
             raise InvalidSpecError(
-                "bucket_size, node_cap and max_hits must be positive")
+                "bucket_size and node_cap must be positive")
+        try:
+            # Shared with the lane planner: non-positive AND absurdly
+            # large capacities fail here, at the spec boundary, naming
+            # the offending value — not deep inside lane planning.
+            validate_max_hits(self.max_hits)
+        except ValueError as e:
+            raise InvalidSpecError(str(e)) from None
         if self.tier == "sharded" and self.shards < 1:
             raise InvalidSpecError("sharded tier needs shards >= 1")
 

@@ -5,7 +5,16 @@ serve one planned mixed batch (``execute``), absorb one mixed write batch
 (``apply``), answer raw rank queries (``scan_ranks``), evaluate its
 maintenance policy (``maybe_compact``), fence device work (``sync``), and
 report itself through ONE unified ``Stats``/``nbytes`` shape regardless
-of what machinery sits underneath:
+of what machinery sits underneath.
+
+``execute`` is the tier's PLAN-LEVEL hook: it takes the full physical
+``QueryPlan`` the logical-plan compiler fused — point lanes, materializing
+ranges AND rank-only aggregate ranges — and must serve every section.
+The static and live tiers hand the plan to one ``RankEngine`` call; the
+sharded tier decomposes it at the splitters (points to owners, range and
+aggregate spans to their intersecting shards) and merges per-fragment:
+row blocks concatenate in shard order, aggregates merge by sum (counts)
+and min/max (endpoint keys) — see ``store/sharded.py``.
 
     StaticTier    immutable ``CgrxIndex`` + ``RankEngine`` — rejects
                   writes with ``ReadOnlyTierError`` at apply time
@@ -68,6 +77,10 @@ class Stats:
 class IndexTier(Protocol):
     """What a ``Session`` needs from its backing tier.
 
+    ``execute`` serves one fused physical plan INCLUDING its aggregate
+    section (``plan.n_agg``/``plan.agg_keys``) — a tier that ignored the
+    section would strand aggregate tickets, so the cross-tier parity
+    suite pins all three implementations against one oracle.
     ``auto_compact`` gates the session's per-flush policy step: with it
     off, ``flush()`` never takes an epoch-swap pause and maintenance
     timing belongs to the caller.

@@ -152,6 +152,28 @@ def rank_fused(buckets: BucketedSet, queries: KeyArray,
         bucket_size=buckets.bucket_size, interpret=interp)
 
 
+def range_count(buckets: BucketedSet, lo: KeyArray,
+                hi: KeyArray) -> jnp.ndarray:
+    """COUNT(*) over [lo, hi] ranges — the rank-only execution path.
+
+    One fused mixed-side launch (left lanes for the lows, right lanes
+    for the highs) followed by a subtraction:
+    ``count = rank_right(hi) - rank_left(lo)``.  No rowID block is ever
+    gathered — this is the kernel-level primitive under the query
+    engine's aggregate fast path (GPU-RMQ-style range aggregation
+    without materializing hits), and the hand-rolled comparator
+    ``benchmarks/bench_query_plan.py`` times the compiled plans against.
+    """
+    r = int(lo.shape[0])
+    queries = KeyArray(
+        jnp.concatenate([lo.lo, hi.lo]),
+        None if lo.hi is None else jnp.concatenate([lo.hi, hi.hi]))
+    sides = jnp.concatenate([jnp.zeros((r,), jnp.int32),
+                             jnp.ones((r,), jnp.int32)])
+    ranks = rank_fused(buckets, queries, sides)
+    return jnp.maximum(ranks[r:] - ranks[:r], 0).astype(jnp.int32)
+
+
 # ---------------------------------------------------------------------------
 # Grid ray probe.
 # ---------------------------------------------------------------------------

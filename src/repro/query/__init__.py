@@ -8,23 +8,50 @@ serving-grade subsystem:
               successor-search paths ('tree' / 'binary' / 'kernel') that
               used to be hard-coded in ``core/cgrx.py``;
 ``batch``     the ``QueryBatch`` planner that coalesces mixed point
-              lookups and range endpoints into padded SIMD lanes;
-``engine``    the ``RankEngine`` that executes a plan in one device call.
+              lookups, range endpoints and rank-only aggregate ranges
+              into padded SIMD lanes;
+``plan``      the logical expression IR (eq / between / isin / limit /
+              count / min_key / max_key / probe / rank_scan) and the
+              logical->physical compiler that fuses any mix of trees
+              onto one ``QueryPlan`` + one rank-scan batch;
+``engine``    the ``RankEngine`` that executes a plan in one device call
+              (aggregate-only plans run rank-only: no rowID gather).
 
 See docs/ARCHITECTURE.md for the module map and the lane layout.
 """
 from .backends import Backend, available_backends, get_backend, get_probe
-from .batch import QueryBatch, QueryPlan
-from .engine import BatchResult, RankEngine, clear_shared_exec
+from .batch import MAX_MAX_HITS, QueryBatch, QueryPlan, validate_max_hits
+from .engine import (BatchResult, RankEngine, STAGE_COUNTERS,
+                     clear_shared_exec)
+from .plan import (AggKeys, Expr, ProbeResult, Program, between,
+                   compile_exprs, count, eq, isin, limit, max_key, min_key,
+                   probe, rank_scan)
 
 __all__ = [
+    "AggKeys",
     "Backend",
     "BatchResult",
+    "Expr",
+    "MAX_MAX_HITS",
+    "ProbeResult",
+    "Program",
     "QueryBatch",
     "QueryPlan",
     "RankEngine",
+    "STAGE_COUNTERS",
     "available_backends",
+    "between",
     "clear_shared_exec",
+    "compile_exprs",
+    "count",
+    "eq",
     "get_backend",
     "get_probe",
+    "isin",
+    "limit",
+    "max_key",
+    "min_key",
+    "probe",
+    "rank_scan",
+    "validate_max_hits",
 ]

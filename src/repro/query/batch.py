@@ -6,19 +6,28 @@ throughput lives.  Every cgRX lookup is a rank query (paper Sec. 3.1-3.2):
 
     point  k        ->  1 lane:  rank_left(k)
     range  [l, u]   ->  2 lanes: rank_left(l), rank_right(u)
+    agg    [l, u]   ->  2 lanes: rank_left(l), rank_right(u)  (rank-only)
 
 so a tick's worth of heterogeneous requests flattens into ONE (L,) key
 vector plus an (L,) side vector, padded to a multiple of the VPU lane
 width so the fused kernel (kernels/fused_rank.py) sees full tiles.
 
+An *aggregate range* is a range whose caller wants ``COUNT``/``MIN``/
+``MAX`` rather than the qualifying rowIDs: it costs the same two rank
+lanes but its post-processing never gathers the ``(R, max_hits)`` rowID
+block — ``count = rank_right(hi) - rank_left(lo)`` is a subtraction of
+ranks the batch already computed (GPU-RMQ, arXiv 2604.01811: range
+aggregates without materializing hits).
+
 Lane layout of a plan (static per shape, so the engine jit-caches on it):
 
-    [ point keys | range lows | range highs | padding ]
-      side=left    side=left    side=right    side=left, key=0
+    [ point keys | range lows | range highs | agg lows | agg highs | pad ]
+      side=left    side=left    side=right    side=left   side=right
 
 The planner is host-side and cheap (numpy concatenation); the resulting
 ``QueryPlan`` is consumed by ``query.engine.RankEngine.execute`` in a
-single device call.
+single device call.  The logical-plan layer (``query/plan.py``) compiles
+expression trees down to this module's sections.
 """
 from __future__ import annotations
 
@@ -35,6 +44,31 @@ LANE = 128
 SIDE_LEFT = 0
 SIDE_RIGHT = 1
 
+# Upper bound on the per-range rowID capacity.  ``max_hits`` sizes the
+# (R, max_hits) int32 gather every materializing range performs; a value
+# past this cap is a config typo (a 4 MB+ result row per range), not a
+# workload, and must fail at the plan boundary instead of silently
+# dominating lane planning.
+MAX_MAX_HITS = 1 << 20
+
+
+def validate_max_hits(max_hits: int) -> int:
+    """Reject non-positive or absurd per-range hit capacities.
+
+    Shared by the planner (``QueryBatch.plan``) and the ``repro.db``
+    boundary (``IndexSpec``/``Session``, which re-raise as the typed
+    ``InvalidSpecError``); always names the offending value.
+    """
+    if not isinstance(max_hits, (int, np.integer)) or isinstance(
+            max_hits, bool):
+        raise ValueError(
+            f"max_hits must be an int in [1, {MAX_MAX_HITS}], "
+            f"got {max_hits!r}")
+    if not 0 < max_hits <= MAX_MAX_HITS:
+        raise ValueError(
+            f"max_hits must be in [1, {MAX_MAX_HITS}], got {max_hits}")
+    return int(max_hits)
+
 
 @dataclasses.dataclass(frozen=True)
 class QueryPlan:
@@ -45,6 +79,8 @@ class QueryPlan:
     n_point: int          # lanes [0, n_point) are point lookups
     n_range: int          # lanes [n_point, n_point + 2*n_range) are ranges
     max_hits: int         # row-id capacity per range result
+    n_agg: int = 0        # 2*n_agg aggregate lanes follow the ranges
+    agg_keys: bool = False  # aggregates also gather min/max keys
 
     @property
     def lanes(self) -> int:
@@ -52,18 +88,19 @@ class QueryPlan:
 
     @property
     def n_queries(self) -> int:
-        """Logical request count (a range is one request, two lanes)."""
-        return self.n_point + self.n_range
+        """Logical request count (a range/aggregate is one request)."""
+        return self.n_point + self.n_range + self.n_agg
 
 
 class QueryBatch:
-    """Accumulates point/range requests, then plans them into lanes.
+    """Accumulates point/range/aggregate requests, then plans them.
 
     Usage::
 
         batch = QueryBatch()
         batch.add_points(point_keys)          # KeyArray (P,)
         batch.add_ranges(lo_keys, hi_keys)    # KeyArrays (R,), (R,)
+        batch.add_agg_ranges(lo, hi)          # rank-only ranges (A,)
         plan = batch.plan(max_hits=64)
         result = engine.execute(plan)         # one device call
 
@@ -73,6 +110,7 @@ class QueryBatch:
     def __init__(self) -> None:
         self._points: List[KeyArray] = []
         self._ranges: List[Tuple[KeyArray, KeyArray]] = []
+        self._aggs: List[Tuple[KeyArray, KeyArray]] = []
         self._is64: Optional[bool] = None
 
     # -- building ------------------------------------------------------------
@@ -96,6 +134,16 @@ class QueryBatch:
         self._ranges.append((lo, hi))
         return self
 
+    def add_agg_ranges(self, lo: KeyArray, hi: KeyArray) -> "QueryBatch":
+        """Queue rank-only aggregate ranges: two lanes each, but the plan
+        marks them so execution skips the rowID gather entirely."""
+        if lo.shape != hi.shape:
+            raise ValueError(f"agg lo/hi shapes differ: {lo.shape} vs {hi.shape}")
+        self._check_width(lo)
+        self._check_width(hi)
+        self._aggs.append((lo, hi))
+        return self
+
     @property
     def n_point(self) -> int:
         return sum(int(k.shape[0]) for k in self._points)
@@ -104,38 +152,47 @@ class QueryBatch:
     def n_range(self) -> int:
         return sum(int(lo.shape[0]) for lo, _ in self._ranges)
 
+    @property
+    def n_agg(self) -> int:
+        return sum(int(lo.shape[0]) for lo, _ in self._aggs)
+
     def __len__(self) -> int:
-        return self.n_point + self.n_range
+        return self.n_point + self.n_range + self.n_agg
 
     # -- planning ------------------------------------------------------------
 
-    def plan(self, lane: int = LANE, max_hits: int = 64) -> QueryPlan:
+    def plan(self, lane: int = LANE, max_hits: int = 64,
+             agg_keys: bool = False) -> QueryPlan:
         """Flatten to the padded lane layout (one concat, one pad).
 
-        A batch whose every submission was zero-length plans to a
-        canonical zero-lane ``QueryPlan`` without any concat/pad work;
-        the engine serves it without building an executable or touching
-        the device (the empty-flush fast path).
+        A batch whose every submission was zero-length — or that was
+        never touched at all — plans to a canonical zero-lane
+        ``QueryPlan`` (32-bit keys by default) without any concat/pad
+        work; the engine serves it without building an executable or
+        touching the device (the empty-flush fast path), so callers need
+        no emptiness pre-check.
         """
-        if self._is64 is None:
-            raise ValueError("empty QueryBatch: add points or ranges first")
-        if self.n_point == 0 and self.n_range == 0:
+        validate_max_hits(max_hits)
+        if self.n_point == 0 and self.n_range == 0 and self.n_agg == 0:
+            is64 = bool(self._is64)  # never-touched batch defaults to 32-bit
             zeros = KeyArray(jnp.zeros((0,), jnp.uint32),
-                             jnp.zeros((0,), jnp.uint32) if self._is64
-                             else None)
+                             jnp.zeros((0,), jnp.uint32) if is64 else None)
             return QueryPlan(keys=zeros, sides=jnp.zeros((0,), jnp.int32),
-                             n_point=0, n_range=0, max_hits=max_hits)
+                             n_point=0, n_range=0, max_hits=max_hits,
+                             n_agg=0, agg_keys=agg_keys)
         parts: List[KeyArray] = []
         parts.extend(self._points)
         parts.extend(lo for lo, _ in self._ranges)
         parts.extend(hi for _, hi in self._ranges)
+        parts.extend(lo for lo, _ in self._aggs)
+        parts.extend(hi for _, hi in self._aggs)
 
         keys = parts[0]
         for p in parts[1:]:
             keys = concat_keys(keys, p)
 
-        n_point, n_range = self.n_point, self.n_range
-        total = n_point + 2 * n_range
+        n_point, n_range, n_agg = self.n_point, self.n_range, self.n_agg
+        total = n_point + 2 * n_range + 2 * n_agg
         pad = (-total) % lane
         if pad:
             zeros = KeyArray(
@@ -145,5 +202,8 @@ class QueryBatch:
 
         sides = np.zeros(total + pad, np.int32)
         sides[n_point + n_range: n_point + 2 * n_range] = SIDE_RIGHT
+        a0 = n_point + 2 * n_range
+        sides[a0 + n_agg: a0 + 2 * n_agg] = SIDE_RIGHT
         return QueryPlan(keys=keys, sides=jnp.asarray(sides),
-                         n_point=n_point, n_range=n_range, max_hits=max_hits)
+                         n_point=n_point, n_range=n_range, max_hits=max_hits,
+                         n_agg=n_agg, agg_keys=agg_keys)

@@ -6,14 +6,23 @@ a planned lane batch into results:
     ranks = backend.rank_batch(index, plan.keys, plan.sides)   # 1 launch
     points -> LookupResult   (hit check + rowID gather, paper Alg. 2 l.4-5)
     ranges -> RangeResult    (start/count + rowID scan, paper Sec. 3.2)
+    aggs   -> AggResult      (count = rank difference; optional min/max
+                              key gather — NEVER the rowID scan)
 
-The whole pipeline — rank plus the point/range post-processing — is
-jit-compiled per (backend, lane count, n_point, n_range, max_hits)
-signature, so a serving tick with a stable batch shape is exactly ONE
-XLA executable dispatch; the index buffers are closure-captured
-constants, never re-uploaded.  Results are bit-identical to the
-per-query ``core/cgrx.lookup`` / ``core/cgrx.range_lookup`` paths for
-every backend (enforced by tests/test_query_engine.py).
+The whole pipeline — rank plus the per-section post-processing — is
+jit-compiled per (backend, lane count, n_point, n_range, n_agg, agg_keys,
+max_hits) signature, so a serving tick with a stable batch shape is
+exactly ONE XLA executable dispatch; the index buffers are closure-
+captured constants, never re-uploaded.  Sections a plan does not carry
+are skipped STRUCTURALLY: a plan with zero point lanes never traces the
+hit-check gather, and an aggregate-only plan never traces any rowID
+materialization at all — the rank-only execution path.  ``STAGE_COUNTERS``
+records which post-processing stages each built pipeline contains (bumped
+when the pipeline body runs, i.e. at trace time under jit), which is the
+observable tests pin the aggregate fast path on.  Results are
+bit-identical to the per-query ``core/cgrx.lookup`` /
+``core/cgrx.range_lookup`` paths for every backend (enforced by
+tests/test_query_engine.py).
 """
 from __future__ import annotations
 
@@ -31,34 +40,72 @@ from .batch import QueryBatch, QueryPlan
 
 
 class BatchResult(NamedTuple):
-    """Per-kind results of one executed plan, in request order."""
+    """Per-kind results of one executed plan, in request order.
+
+    ``aggs`` is ``None`` when the plan carried no aggregate section
+    (every pre-aggregate plan shape), so legacy consumers of the
+    two-section result never see a third field's cost.
+    """
 
     points: "cgrx.LookupResult"   # fields shaped (n_point,)
     ranges: "cgrx.RangeResult"    # fields shaped (n_range,) / (n_range, max_hits)
+    aggs: Optional["cgrx.AggResult"] = None   # fields shaped (n_agg,)
 
 
-def _make_run(backend: "Backend", n_point: int, n_range: int, max_hits: int):
+# Which post-processing stages the engine has BUILT into executed
+# pipelines, process-wide.  Incremented inside the pipeline body — under
+# jit that is trace time, so a cached executable re-dispatches without
+# bumping; with a fresh executable (new engine / new cache scope) the
+# counters record exactly which sections the compiled pipeline contains.
+# ``row_gather`` counts the (R, max_hits) rowID materializations the
+# aggregate path exists to avoid.
+STAGE_COUNTERS: Dict[str, int] = {"rank": 0, "point_gather": 0,
+                                  "row_gather": 0, "agg": 0}
+
+
+def _make_run(backend: "Backend", n_point: int, n_range: int, n_agg: int,
+              agg_keys: bool, max_hits: int):
     """The engine pipeline as a pure function of (index, lanes).
 
     Post-processing is duck-typed: an index may carry its own
     rank->result mapping (the node store's chain-position walk,
     ``repro.store.live.NodeIndexView``); flat CgrxIndex-shaped indexes
     fall back to cgrx's shared helpers — bit-identity by construction
-    either way.
+    either way.  Sections the plan does not carry are not traced at all
+    (see module docstring).
     """
 
     def run(index, q_lo, q_hi, sides):
         queries = KeyArray(q_lo, q_hi)
         ranks = backend.rank_batch(index, queries, sides)
-        lookup_from_rank = getattr(index, "lookup_from_rank", None) \
-            or partial(cgrx.lookup_from_rank, index)
-        range_from_ranks = getattr(index, "range_from_ranks", None) \
-            or partial(cgrx.range_from_ranks, index)
-        points = lookup_from_rank(ranks[:n_point], queries[:n_point])
-        ranges = range_from_ranks(
-            ranks[n_point:n_point + n_range],
-            ranks[n_point + n_range:n_point + 2 * n_range], max_hits)
-        return BatchResult(points=points, ranges=ranges)
+        STAGE_COUNTERS["rank"] += 1
+        if n_point:
+            lookup_from_rank = getattr(index, "lookup_from_rank", None) \
+                or partial(cgrx.lookup_from_rank, index)
+            points = lookup_from_rank(ranks[:n_point], queries[:n_point])
+            STAGE_COUNTERS["point_gather"] += 1
+        else:
+            points = cgrx.empty_lookup_result()
+        if n_range:
+            range_from_ranks = getattr(index, "range_from_ranks", None) \
+                or partial(cgrx.range_from_ranks, index)
+            ranges = range_from_ranks(
+                ranks[n_point:n_point + n_range],
+                ranks[n_point + n_range:n_point + 2 * n_range], max_hits)
+            STAGE_COUNTERS["row_gather"] += 1
+        else:
+            ranges = cgrx.empty_range_result(max_hits)
+        if n_agg:
+            agg_from_ranks = getattr(index, "agg_from_ranks", None) \
+                or partial(cgrx.agg_from_ranks, index)
+            a0 = n_point + 2 * n_range
+            aggs = agg_from_ranks(ranks[a0:a0 + n_agg],
+                                  ranks[a0 + n_agg:a0 + 2 * n_agg],
+                                  agg_keys)
+            STAGE_COUNTERS["agg"] += 1
+        else:
+            aggs = None
+        return BatchResult(points=points, ranges=ranges, aggs=aggs)
 
     return run
 
@@ -122,20 +169,24 @@ class RankEngine:
         made — the empty-flush fast path ``repro.db.Session.flush``
         relies on (regression-tested in tests/test_query_engine.py).
         """
-        if plan.n_point == 0 and plan.n_range == 0:
+        if plan.n_point == 0 and plan.n_range == 0 and plan.n_agg == 0:
             return BatchResult(points=cgrx.empty_lookup_result(),
-                               ranges=cgrx.empty_range_result(plan.max_hits))
-        sig = (plan.lanes, plan.n_point, plan.n_range, plan.max_hits,
-               plan.keys.is64)
+                               ranges=cgrx.empty_range_result(plan.max_hits),
+                               aggs=None)
+        sig = (plan.lanes, plan.n_point, plan.n_range, plan.n_agg,
+               plan.agg_keys, plan.max_hits, plan.keys.is64)
         fn = self._exec_cache.get(sig)
         if fn is None:
-            fn = self._build_exec(plan.n_point, plan.n_range, plan.max_hits)
+            fn = self._build_exec(plan.n_point, plan.n_range, plan.n_agg,
+                                  plan.agg_keys, plan.max_hits)
             self._exec_cache[sig] = fn
         return fn(plan.keys.lo, plan.keys.hi, plan.sides)
 
-    def _build_exec(self, n_point: int, n_range: int, max_hits: int):
+    def _build_exec(self, n_point: int, n_range: int, n_agg: int,
+                    agg_keys: bool, max_hits: int):
         index = self.index
-        run = _make_run(self.backend, n_point, n_range, max_hits)
+        run = _make_run(self.backend, n_point, n_range, n_agg, agg_keys,
+                        max_hits)
         if not jax.tree_util.treedef_is_leaf(
                 jax.tree_util.tree_structure(index)):
             # Pytree index (the live store's NodeIndexView): pass it as a
@@ -146,7 +197,7 @@ class RankEngine:
             # (treedef aux + shapes) share one compiled executable.
             if self._jit:
                 key = (self.cache_scope, self.backend_name,
-                       n_point, n_range, max_hits)
+                       n_point, n_range, n_agg, agg_keys, max_hits)
                 jitted = _SHARED_EXEC.get(key)
                 if jitted is None:
                     jitted = jax.jit(run)
@@ -173,3 +224,10 @@ class RankEngine:
         """Batched range lookup through the planner (one device call)."""
         plan = QueryBatch().add_ranges(lo, hi).plan(max_hits=max_hits)
         return self.execute(plan).ranges
+
+    def range_aggregate(self, lo: KeyArray, hi: KeyArray,
+                        with_keys: bool = False) -> "cgrx.AggResult":
+        """Batched rank-only range aggregate (count, optional min/max
+        keys) through the planner — one device call, no rowID gather."""
+        plan = QueryBatch().add_agg_ranges(lo, hi).plan(agg_keys=with_keys)
+        return self.execute(plan).aggs

@@ -1,0 +1,431 @@
+"""Logical query plans: composable expression IR + the lowering compiler.
+
+The paper's claim is that ONE rank primitive over coarse buckets serves
+points, ranges and updates alike; this module is the query-language face
+of that claim.  Richer workloads — multi-predicate filters, IN-lists,
+``COUNT(*)`` over a range, index nested-loop joins — no longer need one
+dispatch per fragment hand-assembled caller-side: they are expression
+trees of a small node algebra, and a logical->physical compiler lowers
+ANY mix of trees onto the existing padded-lane ``QueryPlan`` so a whole
+``repro.db.Session.flush()`` stays one dispatch per op class (RTCUDB,
+arXiv 2412.09337: push pipelines, not lookups, onto the accelerator).
+
+IR nodes (constructors in lowercase):
+
+    eq(keys)             point predicate, one lane per key -> LookupResult
+    between(lo, hi)      range predicate, two lanes        -> RangeResult
+    isin(keys)           IN-list: deduplicated to one lane per UNIQUE key,
+                         results scattered back to submission order
+                         (duplicates answered for free)    -> LookupResult
+    limit(k, between)    per-range hit cap: the fragment's rowID block is
+                         (R, k) regardless of the session default
+                                                           -> RangeResult
+    count(between)       COUNT(*):  rank_right(hi) - rank_left(lo); no
+                         rowID materialization at all      -> int32 (R,)
+    min_key(between)     smallest / largest live key in each range (one
+    max_key(between)     key gather per endpoint, never the rowID scan)
+                                                           -> AggKeys
+    probe(keys,
+          outer_rows)    index nested-loop join probe: each outer row's
+                         key probes the index, carrying the outer rowID
+                         through                           -> ProbeResult
+    rank_scan(keys,
+              side)      raw global ranks (the ``scan_ranks`` verb)
+                                                           -> int32 (Q,)
+
+Lowering (``compile_exprs``): fragments of every tree are collected IN
+SUBMISSION ORDER into the three physical sections of one ``QueryPlan`` —
+point lanes (eq + isin-unique + probe), materializing ranges (between +
+limit, planned at ``max`` of their per-fragment caps), and rank-only
+aggregate ranges — plus one fused lane batch for the rank-scan op class.
+Each expression gets an *extractor* closure that slices its fragments
+back out of the executed ``BatchResult`` (and rank vector) and applies
+the node's post-processing (IN-list inverse scatter, limit column cap,
+join assembly, aggregate field selection).  Legacy single-node trees
+(eq / between / rank_scan) lower to exactly the lane layout the
+pre-plan Session produced, so the sugar surface stays bit-identical.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, NamedTuple, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cgrx
+from repro.core.keys import KeyArray, concat_keys
+
+from .batch import LANE, SIDE_LEFT, SIDE_RIGHT, QueryBatch, QueryPlan, \
+    validate_max_hits
+
+AGG_OPS = ("count", "min", "max")
+_SIDES = {"left": SIDE_LEFT, "right": SIDE_RIGHT}
+
+
+# ---------------------------------------------------------------------------
+# Result shapes specific to the IR (LookupResult/RangeResult/AggResult are
+# shared with the single-verb paths and live in core/cgrx.py).
+# ---------------------------------------------------------------------------
+
+class ProbeResult(NamedTuple):
+    """One index nested-loop join probe batch, in outer-row order."""
+
+    outer_row: jnp.ndarray   # int32 (P,) the outer side's row ids, echoed
+    inner_row: jnp.ndarray   # int32 (P,) matched inner rowID, MISS if none
+    matched: jnp.ndarray     # bool  (P,)
+
+
+class AggKeys(NamedTuple):
+    """A min/max aggregate batch: one key per range (valid where
+    ``count > 0``), plus the count that qualifies it."""
+
+    count: jnp.ndarray       # int32 (A,)
+    keys: KeyArray           # (A,) the min or max live key per range
+
+
+# ---------------------------------------------------------------------------
+# IR nodes.  Frozen dataclasses: a constructed tree is immutable, so the
+# compiler may walk it twice (sizing, lowering) without defensive copies.
+# ---------------------------------------------------------------------------
+
+class Expr:
+    """Base of every logical-plan node (see module docstring)."""
+
+    __slots__ = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class Eq(Expr):
+    keys: KeyArray
+
+
+@dataclasses.dataclass(frozen=True)
+class Between(Expr):
+    lo: KeyArray
+    hi: KeyArray
+
+
+@dataclasses.dataclass(frozen=True)
+class Isin(Expr):
+    keys: KeyArray
+
+
+@dataclasses.dataclass(frozen=True)
+class Limit(Expr):
+    k: int
+    child: Between
+
+
+@dataclasses.dataclass(frozen=True)
+class Agg(Expr):
+    op: str                  # 'count' | 'min' | 'max'
+    child: Between
+
+
+@dataclasses.dataclass(frozen=True)
+class Probe(Expr):
+    keys: KeyArray
+    outer_rows: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class RankScan(Expr):
+    keys: KeyArray
+    side: str                # 'left' | 'right'
+
+
+# -- constructors (the public spelling) --------------------------------------
+
+def eq(keys: KeyArray) -> Eq:
+    """Point predicate: one lane per key; resolves to ``LookupResult``."""
+    return Eq(keys=keys)
+
+
+def between(lo: KeyArray, hi: KeyArray) -> Between:
+    """Range predicate [lo, hi]; resolves to ``RangeResult``."""
+    if lo.shape != hi.shape:
+        raise ValueError(
+            f"between lo/hi shapes differ: {lo.shape} vs {hi.shape}")
+    return Between(lo=lo, hi=hi)
+
+
+def isin(keys: KeyArray) -> Isin:
+    """IN-list predicate: duplicates dispatch as ONE lane per unique key,
+    results scatter back to submission order; resolves to
+    ``LookupResult`` aligned with the submitted (duplicated) keys."""
+    return Isin(keys=keys)
+
+
+def limit(k: int, child: Between) -> Limit:
+    """Cap a range's materialized rowIDs at ``k`` per range (the true
+    ``count`` is still reported); resolves to ``RangeResult`` whose
+    ``row_ids`` block is (R, k).
+
+    The physical plan gathers EVERY materializing range of a flush at
+    the max of the fragments' caps (one fused gather, one result shape —
+    extractors slice each fragment back to its own cap).  A ``k`` far
+    above the session default therefore widens the whole flush's rowID
+    gather: batch a huge-``k`` limit in its own flush rather than beside
+    thousands of default-cap ranges."""
+    if not isinstance(child, Between):
+        raise TypeError(
+            f"limit() wraps a between() range, got {type(child).__name__}")
+    try:
+        validate_max_hits(k)
+    except ValueError as e:
+        raise ValueError(f"limit(k): {e}") from None
+    return Limit(k=int(k), child=child)
+
+
+def count(child: Between) -> Agg:
+    """COUNT(*) over each range — rank subtraction only, no rowID
+    materialization; resolves to an int32 (R,) array."""
+    return _agg("count", child)
+
+
+def min_key(child: Between) -> Agg:
+    """Smallest live key per range; resolves to ``AggKeys`` (the key is
+    valid where ``count > 0``)."""
+    return _agg("min", child)
+
+
+def max_key(child: Between) -> Agg:
+    """Largest live key per range; resolves to ``AggKeys``."""
+    return _agg("max", child)
+
+
+def _agg(op: str, child: Between) -> Agg:
+    if not isinstance(child, Between):
+        raise TypeError(
+            f"{op} aggregate wraps a between() range, "
+            f"got {type(child).__name__}")
+    return Agg(op=op, child=child)
+
+
+def probe(keys: KeyArray, outer_rows) -> Probe:
+    """Index nested-loop join probe: ``keys[i]`` is outer row
+    ``outer_rows[i]``'s join key; resolves to ``ProbeResult``."""
+    rows = jnp.asarray(outer_rows, jnp.int32)
+    if rows.shape != keys.shape:
+        raise ValueError(
+            f"probe keys/outer_rows shapes differ: {keys.shape} vs "
+            f"{rows.shape}")
+    return Probe(keys=keys, outer_rows=rows)
+
+
+def rank_scan(keys: KeyArray, side: str = "left") -> RankScan:
+    """Raw global ranks (#keys < q, or <= q with ``side='right'``);
+    resolves to an int32 array."""
+    if side not in _SIDES:
+        raise ValueError(f"side must be 'left' or 'right', got {side!r}")
+    return RankScan(keys=keys, side=side)
+
+
+# ---------------------------------------------------------------------------
+# Tree inspection helpers.
+# ---------------------------------------------------------------------------
+
+def expr_size(expr: Expr) -> int:
+    """Logical request count of a tree (0 = resolves empty, no lanes)."""
+    if isinstance(expr, (Eq, Isin, Probe, RankScan)):
+        return int(expr.keys.shape[0])
+    if isinstance(expr, Between):
+        return int(expr.lo.shape[0])
+    if isinstance(expr, (Limit, Agg)):
+        return expr_size(expr.child)
+    raise TypeError(f"not a query expression: {type(expr).__name__}")
+
+
+def empty_result(expr: Expr, default_max_hits: int = 64):
+    """The canonical zero-length result of a tree — what a zero-length
+    submission resolves to without ever entering a plan."""
+    if isinstance(expr, (Eq, Isin)):
+        return cgrx.empty_lookup_result()
+    if isinstance(expr, Between):
+        return cgrx.empty_range_result(default_max_hits)
+    if isinstance(expr, Limit):
+        return cgrx.empty_range_result(expr.k)
+    if isinstance(expr, Agg):
+        if expr.op == "count":
+            return jnp.zeros((0,), jnp.int32)
+        return AggKeys(count=jnp.zeros((0,), jnp.int32),
+                       keys=expr.child.lo[:0])
+    if isinstance(expr, Probe):
+        return ProbeResult(outer_row=jnp.zeros((0,), jnp.int32),
+                           inner_row=jnp.zeros((0,), jnp.int32),
+                           matched=jnp.zeros((0,), bool))
+    if isinstance(expr, RankScan):
+        return jnp.zeros((0,), jnp.int32)
+    raise TypeError(f"not a query expression: {type(expr).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# The logical -> physical compiler.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Program:
+    """One flush's worth of compiled expressions.
+
+    ``plan`` fuses every point / materializing-range / aggregate fragment
+    into a single ``QueryPlan`` (one ``tier.execute`` dispatch);
+    ``rank_keys``/``rank_sides`` fuse every rank-scan fragment (one
+    ``tier.scan_ranks`` dispatch).  ``extractors[i]`` maps the executed
+    ``(BatchResult, ranks)`` back to expression ``i``'s result.
+    """
+
+    plan: QueryPlan
+    rank_keys: Optional[KeyArray]
+    rank_sides: Optional[jnp.ndarray]
+    extractors: List[Callable]
+    n_point: int
+    n_range: int
+    n_agg: int
+    n_rank: int
+
+    @property
+    def has_query(self) -> bool:
+        return self.n_point + self.n_range + self.n_agg > 0
+
+    @property
+    def has_rank(self) -> bool:
+        return self.n_rank > 0
+
+
+def _slice_tuple(res, lo: int, hi: int):
+    """Slice every field of a NamedTuple result along axis 0."""
+    return type(res)(*(f[lo:hi] for f in res))
+
+
+def _unique_host(keys: KeyArray) -> Tuple[KeyArray, np.ndarray]:
+    """Host-side dedup of an IN-list: (unique KeyArray, inverse index)."""
+    raw = keys.to_numpy()
+    uniq, inverse = np.unique(raw, return_inverse=True)
+    ukeys = (KeyArray.from_u64(uniq) if keys.is64
+             else KeyArray.from_u32(uniq))
+    return ukeys, inverse.astype(np.int32)
+
+
+def compile_exprs(exprs: Sequence[Expr], *, default_max_hits: int = 64,
+                  lane: int = LANE) -> Program:
+    """Lower a flush's expression list onto one physical plan.
+
+    Fragments are collected in submission order per section, so a list of
+    plain ``eq``/``between``/``rank_scan`` trees lowers to exactly the
+    lane layout the pre-IR Session produced (the sugar bit-identity
+    contract).  The plan's ``max_hits`` is the max of the materializing
+    fragments' caps (``limit(k)`` or the session default) — each
+    fragment's extractor slices its own cap back out.  That max is
+    flush-global: one outsized ``limit(k)`` widens the (R, max) rowID
+    gather of every materializing range in the flush (see ``limit``), so
+    keep extreme caps in their own flush.
+    """
+    validate_max_hits(default_max_hits)
+    # Fragments append straight onto the QueryBatch — its per-section
+    # accumulation in append order IS the physical section layout, so
+    # extractor offsets are just running cursors per section (in
+    # *requests*; ranges/aggs occupy 2 lanes each).
+    batch = QueryBatch()
+    p_off = r_off = a_off = k_off = 0
+    caps: List[int] = []
+    agg_keys_needed = False
+    rank_parts: List[KeyArray] = []
+    side_parts: List[np.ndarray] = []
+    extractors: List[Callable] = []
+
+    def lower_points(keys: KeyArray) -> Tuple[int, int]:
+        nonlocal p_off
+        m = int(keys.shape[0])
+        batch.add_points(keys)
+        off, p_off = p_off, p_off + m
+        return off, m
+
+    def lower_range(node: Between, cap: int) -> Tuple[int, int, int]:
+        nonlocal r_off
+        m = int(node.lo.shape[0])
+        batch.add_ranges(node.lo, node.hi)
+        caps.append(cap)
+        off, r_off = r_off, r_off + m
+        return off, m, cap
+
+    def lower(expr: Expr) -> Callable:
+        nonlocal a_off, k_off, agg_keys_needed
+        if isinstance(expr, Eq):
+            off, m = lower_points(expr.keys)
+            return lambda res, ranks: _slice_tuple(res.points, off, off + m)
+        if isinstance(expr, Isin):
+            ukeys, inverse = _unique_host(expr.keys)
+            off, m = lower_points(ukeys)
+            inv = jnp.asarray(inverse)
+
+            def extract_isin(res, ranks):
+                sliced = _slice_tuple(res.points, off, off + m)
+                return type(sliced)(*(f[inv] for f in sliced))
+            return extract_isin
+        if isinstance(expr, Probe):
+            off, m = lower_points(expr.keys)
+            outer = expr.outer_rows
+
+            def extract_probe(res, ranks):
+                sliced = _slice_tuple(res.points, off, off + m)
+                return ProbeResult(outer_row=outer,
+                                   inner_row=sliced.row_id,
+                                   matched=sliced.found)
+            return extract_probe
+        if isinstance(expr, Between):
+            off, m, cap = lower_range(expr, default_max_hits)
+
+            def extract_range(res, ranks):
+                sliced = _slice_tuple(res.ranges, off, off + m)
+                return sliced._replace(row_ids=sliced.row_ids[:, :cap])
+            return extract_range
+        if isinstance(expr, Limit):
+            off, m, cap = lower_range(expr.child, expr.k)
+
+            def extract_limit(res, ranks):
+                sliced = _slice_tuple(res.ranges, off, off + m)
+                return sliced._replace(row_ids=sliced.row_ids[:, :cap])
+            return extract_limit
+        if isinstance(expr, Agg):
+            m = int(expr.child.lo.shape[0])
+            batch.add_agg_ranges(expr.child.lo, expr.child.hi)
+            off, a_off = a_off, a_off + m
+            op = expr.op
+            if op != "count":
+                agg_keys_needed = True
+
+            def extract_agg(res, ranks):
+                cnt = res.aggs.count[off:off + m]
+                if op == "count":
+                    return cnt
+                keys = (res.aggs.min_key if op == "min"
+                        else res.aggs.max_key)
+                return AggKeys(count=cnt, keys=keys[off:off + m])
+            return extract_agg
+        if isinstance(expr, RankScan):
+            m = int(expr.keys.shape[0])
+            rank_parts.append(expr.keys)
+            side_parts.append(np.full(m, _SIDES[expr.side], np.int32))
+            off, k_off = k_off, k_off + m
+            return lambda res, ranks: ranks[off:off + m]
+        raise TypeError(f"not a query expression: {type(expr).__name__}")
+
+    for expr in exprs:
+        extractors.append(lower(expr))
+
+    eff_max_hits = max(caps) if caps else default_max_hits
+    plan = batch.plan(lane=lane, max_hits=eff_max_hits,
+                      agg_keys=agg_keys_needed)
+
+    rank_keys: Optional[KeyArray] = None
+    rank_sides: Optional[jnp.ndarray] = None
+    if rank_parts:
+        rank_keys = rank_parts[0]
+        for p in rank_parts[1:]:
+            rank_keys = concat_keys(rank_keys, p)
+        rank_sides = jnp.asarray(np.concatenate(side_parts))
+
+    return Program(plan=plan, rank_keys=rank_keys, rank_sides=rank_sides,
+                   extractors=extractors, n_point=p_off, n_range=r_off,
+                   n_agg=a_off, n_rank=k_off)

@@ -164,6 +164,23 @@ class NodeIndexView:
         return cgrx.RangeResult(start=start.astype(jnp.int32),
                                 count=count.astype(jnp.int32), row_ids=rows)
 
+    def agg_from_ranks(self, start: jnp.ndarray, end: jnp.ndarray,
+                       with_keys: bool = False) -> cgrx.AggResult:
+        """(rank_left(lo), rank_right(hi)) -> AggResult over the chained
+        store.  COUNT is a subtraction of the ranks; MIN/MAX locate one
+        chain slot per endpoint (two bounded descents) instead of the
+        ``max_hits``-wide rowID walk ``range_from_ranks`` performs."""
+        count = jnp.maximum(end - start, 0).astype(jnp.int32)
+        if not with_keys:
+            return cgrx.AggResult(count=count, min_key=None, max_key=None)
+        last = jnp.maximum(self.n_dev - 1, 0)
+        flat_keys = self.node_keys.reshape(-1)
+        _, node_l, slot_l = self._locate(jnp.minimum(start, last))
+        _, node_h, slot_h = self._locate(jnp.clip(end - 1, 0, last))
+        min_key = flat_keys.take(node_l * self.node_cap + slot_l)
+        max_key = flat_keys.take(node_h * self.node_cap + slot_h)
+        return cgrx.AggResult(count=count, min_key=min_key, max_key=max_key)
+
 
 @dataclasses.dataclass(frozen=True)
 class LiveConfig:

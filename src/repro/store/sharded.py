@@ -200,20 +200,30 @@ class ShardedLiveStore:
         return self.execute(plan).ranges
 
     def execute(self, plan: QueryPlan):
-        """Serve a planned mixed point/range batch across shards.
+        """Serve a planned mixed point/range/aggregate batch across shards.
 
-        The flat lane plan is split back into its point/range sections
-        (the lane layout is static: [points | lows | highs | pad]), each
-        shard re-plans only its owned slice through the same QueryBatch
-        planner, and one engine dispatch per touched shard serves it.
+        The flat lane plan is split back into its sections (the lane
+        layout is static: [points | lows | highs | agg-lows | agg-highs |
+        pad]), each shard re-plans only its owned slice through the same
+        QueryBatch planner, and one engine dispatch per touched shard
+        serves it.  Aggregate fragments decompose at the splitters
+        exactly like materializing ranges but merge by SUM (counts) /
+        MIN / MAX (endpoint keys) instead of row concatenation — shards
+        partition the key space, so per-shard counts add and the lowest
+        (highest) shard with a non-empty intersection owns the global
+        min (max).
         """
-        np_, nr = plan.n_point, plan.n_range
-        if np_ == 0 and nr == 0:  # empty flush: no routing, no dispatch
+        np_, nr, na = plan.n_point, plan.n_range, plan.n_agg
+        if np_ == 0 and nr == 0 and na == 0:  # empty flush: no dispatch
             return BatchResult(points=cgrx.empty_lookup_result(),
-                               ranges=cgrx.empty_range_result(plan.max_hits))
+                               ranges=cgrx.empty_range_result(plan.max_hits),
+                               aggs=None)
         pts = plan.keys[:np_]
         lo = plan.keys[np_:np_ + nr]
         hi = plan.keys[np_ + nr:np_ + 2 * nr]
+        a0 = np_ + 2 * nr
+        alo = plan.keys[a0:a0 + na]
+        ahi = plan.keys[a0 + na:a0 + 2 * na]
 
         owners = self.route(pts) if np_ else np.zeros(0, np.int32)
         if nr:
@@ -221,31 +231,45 @@ class ShardedLiveStore:
             first, last = np.asarray(first_d), np.asarray(last_d)
         else:
             first = last = np.zeros(0, np.int32)
+        if na:
+            afirst_d, alast_d = _route_ranges(self.splitters, alo, ahi)
+            afirst, alast = np.asarray(afirst_d), np.asarray(alast_d)
+        else:
+            afirst = alast = np.zeros(0, np.int32)
         prefix = self.live_prefix()
 
         # Per-shard sub-batches -> one engine dispatch per touched shard.
         point_parts: List[Tuple[np.ndarray, object]] = []
         range_parts: List[Tuple[int, np.ndarray, object]] = []
+        agg_parts: List[Tuple[int, np.ndarray, object]] = []
         for s, shard in enumerate(self.shards):
             p_idx = np.nonzero(owners == s)[0]
             r_idx = np.nonzero((first <= s) & (s <= last))[0]
-            if not len(p_idx) and not len(r_idx):
+            a_idx = np.nonzero((afirst <= s) & (s <= alast))[0]
+            if not len(p_idx) and not len(r_idx) and not len(a_idx):
                 continue
             qb = QueryBatch()
             if len(p_idx):
                 qb.add_points(pts[p_idx])
             if len(r_idx):
                 qb.add_ranges(lo[r_idx], hi[r_idx])
-            res = shard.execute(qb.plan(max_hits=plan.max_hits))
+            if len(a_idx):
+                qb.add_agg_ranges(alo[a_idx], ahi[a_idx])
+            res = shard.execute(qb.plan(max_hits=plan.max_hits,
+                                        agg_keys=plan.agg_keys))
             if len(p_idx):
                 point_parts.append((p_idx, _shift_points(res.points,
                                                          prefix[s])))
             if len(r_idx):
                 range_parts.append((s, r_idx, res.ranges))
+            if len(a_idx):
+                agg_parts.append((s, a_idx, res.aggs))
 
         points = _merge_points(np_, point_parts)
         ranges = _merge_ranges(nr, plan.max_hits, range_parts, first, prefix)
-        return BatchResult(points=points, ranges=ranges)
+        aggs = (_merge_aggs(na, plan.agg_keys, agg_parts, plan.keys.is64)
+                if na else None)
+        return BatchResult(points=points, ranges=ranges, aggs=aggs)
 
     # -- writes ---------------------------------------------------------------
 
@@ -442,3 +466,40 @@ def _merge_ranges(n_range: int, max_hits: int,
     return cgrx.RangeResult(start=jnp.asarray(start),
                             count=jnp.asarray(count),
                             row_ids=jnp.asarray(rows))
+
+
+def _merge_aggs(n_agg: int, with_keys: bool,
+                parts: List[Tuple[int, np.ndarray, cgrx.AggResult]],
+                is64: bool) -> cgrx.AggResult:
+    """Merge per-shard aggregate fragments into global aggregates.
+
+    Shards partition the key space, so counts ADD across a range's span;
+    shard order is key order, so the global min key is the first
+    non-empty span shard's local min and the global max is the last
+    non-empty one's local max.  Bit-identical to a single-shard oracle
+    because each side of the identity ranks the same live multiset.
+    """
+    count = np.zeros(n_agg, np.int64)
+    min_np = np.zeros(n_agg, np.uint64)
+    max_np = np.zeros(n_agg, np.uint64)
+    seen = np.zeros(n_agg, bool)
+    for s, idx, res in sorted(parts, key=lambda p: p[0]):
+        c = np.asarray(res.count)
+        mn = res.min_key.to_numpy() if with_keys else None
+        mx = res.max_key.to_numpy() if with_keys else None
+        for k, j in enumerate(idx):
+            if int(c[k]) <= 0:
+                continue
+            count[j] += int(c[k])
+            if with_keys:
+                if not seen[j]:
+                    min_np[j] = mn[k]
+                    seen[j] = True
+                max_np[j] = mx[k]
+    if not with_keys:
+        return cgrx.AggResult(count=jnp.asarray(count.astype(np.int32)),
+                              min_key=None, max_key=None)
+    mk = KeyArray.from_u64 if is64 else \
+        (lambda a: KeyArray.from_u32(a.astype(np.uint32)))
+    return cgrx.AggResult(count=jnp.asarray(count.astype(np.int32)),
+                          min_key=mk(min_np), max_key=mk(max_np))

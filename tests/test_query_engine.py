@@ -151,8 +151,15 @@ def test_registry_errors():
         get_backend("no-such-backend")
     with pytest.raises(KeyError):
         get_probe("no-such-probe")
+    # A never-touched batch plans to the canonical zero-lane plan
+    # (32-bit by default) instead of raising — callers need no pre-check.
+    plan = QueryBatch().plan()
+    assert (plan.lanes, plan.n_point, plan.n_range, plan.n_agg) == (0,) * 4
+    assert not plan.keys.is64
     with pytest.raises(ValueError):
-        QueryBatch().plan()                      # empty batch
+        QueryBatch().plan(max_hits=0)            # invalid hit capacity
+    with pytest.raises(ValueError):
+        QueryBatch().plan(max_hits=(1 << 20) + 1)
     with pytest.raises(ValueError):
         QueryBatch().add_points(mk([1])).add_points(
             KeyArray.from_u32(np.array([1], np.uint32)))  # width mix

@@ -1,0 +1,411 @@
+"""The composable query-plan API (repro.query.plan + Session.query).
+
+The acceptance properties of the redesign:
+
+  * ``Session.query`` composes every IR node kind — eq, between, isin,
+    count/min/max aggregates, limit, probe, rank_scan — and a whole
+    flush's trees lower into ONE dispatch per op class;
+  * the ``lookup``/``range``/``scan_ranks`` sugar stays bit-identical to
+    its pre-IR results (the cross-tier parity suite in tests/test_db.py
+    runs unchanged; here we additionally pin sugar == query(node));
+  * aggregate-only flushes provably skip rowID materialization on all
+    three tiers including multi-shard decomposition — pinned via the
+    engine's trace-time ``STAGE_COUNTERS``;
+  * satellites: a never-touched ``QueryBatch`` plans to the zero-lane
+    plan, and ``max_hits`` is validated at the spec/plan boundary with
+    the offending value in the message.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+import repro.db as db
+from repro.core.bucketing import build_buckets
+from repro.kernels import ops as kops
+from repro.query import (MAX_MAX_HITS, QueryBatch, STAGE_COUNTERS,
+                         compile_exprs)
+from repro.query import plan as qplan
+
+NEVER = db.CompactionPolicy().never()
+MISS = -1
+
+
+def mk(raw):
+    return db.KeyArray.from_u64(np.asarray(raw, dtype=np.uint64))
+
+
+def spec_for(tier, scope=None, max_hits=32):
+    return db.IndexSpec(tier=tier, node_cap=16, bucket_size=16,
+                        policy=NEVER, max_hits=max_hits, shards=4,
+                        max_imbalance=None, cache_scope=scope)
+
+
+@pytest.fixture(scope="module")
+def workload():
+    rng = np.random.default_rng(11)
+    raw = np.unique(rng.integers(0, 1 << 44, 4000, dtype=np.uint64))[:2500]
+    rows = np.arange(len(raw), dtype=np.int32)
+    sraw = np.sort(raw)
+    srows = rows[np.argsort(raw)]
+    hits = raw[rng.integers(0, len(raw), 80)]
+    misses = np.setdiff1d(
+        np.unique(rng.integers(0, 1 << 44, 60, dtype=np.uint64)), raw)[:40]
+    pts = np.concatenate([hits, misses])
+    # Wide ranges: cross 3+ shard boundaries on the 4-shard tier.
+    starts = rng.integers(0, len(sraw) - 2100, 12)
+    lo, hi = sraw[starts], sraw[starts + 2000]
+    return dict(raw=raw, rows=rows, sraw=sraw, srows=srows, pts=pts,
+                lo=lo, hi=hi, rng=rng)
+
+
+def sessions(w, scope_prefix):
+    for tier in ("static", "live", "sharded"):
+        yield tier, db.open(spec_for(tier, f"{scope_prefix}-{tier}"),
+                            mk(w["raw"]), w["rows"])
+
+
+# ---------------------------------------------------------------------------
+# Sugar == query(node): the verbs are thin IR constructors.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tier", ["static", "live", "sharded"])
+def test_sugar_is_query_of_ir_node(tier, workload):
+    w = workload
+    sess = db.open(spec_for(tier), mk(w["raw"]), w["rows"])
+    s_pts = sess.lookup(mk(w["pts"]))
+    s_rng = sess.range(mk(w["lo"]), mk(w["hi"]))
+    s_rnk = sess.scan_ranks(mk(w["pts"]), side="right")
+    q_pts = sess.query(db.eq(mk(w["pts"])))
+    q_rng = sess.query(db.between(mk(w["lo"]), mk(w["hi"])))
+    q_rnk = sess.query(db.rank_scan(mk(w["pts"]), side="right"))
+    sess.flush()
+    for a, b in ((s_pts, q_pts), (s_rng, q_rng)):
+        for f, g in zip(a.result(), b.result()):
+            assert (np.asarray(f) == np.asarray(g)).all()
+    assert (np.asarray(s_rnk.result()) == np.asarray(q_rnk.result())).all()
+
+
+# ---------------------------------------------------------------------------
+# IN-lists: dedup dispatch, duplicate-faithful results.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tier", ["static", "live", "sharded"])
+def test_isin_duplicates_vs_oracle(tier, workload):
+    w = workload
+    sess = db.open(spec_for(tier), mk(w["raw"]), w["rows"])
+    inlist = np.concatenate([w["pts"][:30], w["pts"][:30], w["pts"][:7],
+                             np.array([0, 1, 2], np.uint64)])
+    t = sess.query(db.isin(mk(inlist)))
+    rep = sess.flush()
+    # Dedup is the point of the node: lanes = UNIQUE keys only.
+    assert rep.n_point == len(np.unique(inlist))
+    res = t.result()
+    found = np.asarray(res.found)
+    rows = np.asarray(res.row_id)
+    assert found.shape == inlist.shape
+    want_found = np.isin(inlist, w["raw"])
+    assert (found == want_found).all()
+    pos = np.searchsorted(w["sraw"], inlist, "left")
+    want_rows = np.where(want_found,
+                         w["srows"][np.minimum(pos, len(w["sraw"]) - 1)],
+                         MISS)
+    assert (rows == want_rows).all()
+    # Duplicates answered identically for free.
+    assert (rows[:30] == rows[30:60]).all()
+
+
+# ---------------------------------------------------------------------------
+# Aggregates: count / min / max vs host oracle, incl. empty ranges and
+# multi-shard spans.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tier", ["static", "live", "sharded"])
+def test_aggregates_vs_oracle(tier, workload):
+    w = workload
+    sess = db.open(spec_for(tier), mk(w["raw"]), w["rows"])
+    # Mix wide (multi-shard) ranges with empty ones (lo > hi and gaps).
+    lo = np.concatenate([w["lo"], [w["sraw"][10] + 1], [w["sraw"][-1] + 5]])
+    hi = np.concatenate([w["hi"], [w["sraw"][10]], [w["sraw"][-1] + 9]])
+    t_cnt = sess.query(db.count(db.between(mk(lo), mk(hi))))
+    t_min = sess.query(db.min_key(db.between(mk(lo), mk(hi))))
+    t_max = sess.query(db.max_key(db.between(mk(lo), mk(hi))))
+    rep = sess.flush()
+    assert rep.n_agg == 3 * len(lo)
+
+    s = w["sraw"]
+    want_cnt = (np.searchsorted(s, hi, "right")
+                - np.searchsorted(s, lo, "left")).astype(np.int64)
+    want_cnt = np.maximum(want_cnt, 0)
+    cnt = np.asarray(t_cnt.result())
+    assert (cnt == want_cnt).all()
+
+    mn, mx = t_min.result(), t_max.result()
+    assert (np.asarray(mn.count) == want_cnt).all()
+    assert (np.asarray(mx.count) == want_cnt).all()
+    nonempty = want_cnt > 0
+    assert nonempty.any() and (~nonempty).any()   # both cases exercised
+    got_min = mn.keys.to_numpy()[nonempty]
+    got_max = mx.keys.to_numpy()[nonempty]
+    want_min = s[np.searchsorted(s, lo, "left")[nonempty]]
+    want_max = s[np.searchsorted(s, hi, "right")[nonempty] - 1]
+    assert (got_min == want_min).all()
+    assert (got_max == want_max).all()
+
+
+def test_aggregate_spans_cross_shards(workload):
+    """The aggregate parity above really exercises 3+-shard spans, and
+    the sharded merge (sum / min / max) matches a single-shard oracle."""
+    w = workload
+    sess = db.open(spec_for("sharded"), mk(w["raw"]), w["rows"])
+    store = sess.tier.store
+    spans = 1 + store.route(mk(w["hi"])) - store.route(mk(w["lo"]))
+    assert spans.max() >= 3
+    oracle = db.open(spec_for("live"), mk(w["raw"]), w["rows"])
+    t_s = sess.query(db.min_key(db.between(mk(w["lo"]), mk(w["hi"]))))
+    t_o = oracle.query(db.min_key(db.between(mk(w["lo"]), mk(w["hi"]))))
+    sess.flush(); oracle.flush()
+    assert (np.asarray(t_s.result().count)
+            == np.asarray(t_o.result().count)).all()
+    assert (t_s.result().keys.to_numpy()
+            == t_o.result().keys.to_numpy()).all()
+
+
+# ---------------------------------------------------------------------------
+# limit(k): per-range hit caps.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tier", ["static", "live", "sharded"])
+def test_limit_caps_rows_keeps_count(tier, workload):
+    w = workload
+    sess = db.open(spec_for(tier), mk(w["raw"]), w["rows"])
+    t_full = sess.query(db.between(mk(w["lo"]), mk(w["hi"])))
+    t_lim = sess.query(db.limit(5, db.between(mk(w["lo"]), mk(w["hi"]))))
+    sess.flush()
+    full, lim = t_full.result(), t_lim.result()
+    assert np.asarray(full.row_ids).shape == (len(w["lo"]), 32)
+    assert np.asarray(lim.row_ids).shape == (len(w["lo"]), 5)
+    assert (np.asarray(lim.count) == np.asarray(full.count)).all()
+    assert (np.asarray(lim.start) == np.asarray(full.start)).all()
+    assert (np.asarray(lim.row_ids)
+            == np.asarray(full.row_ids)[:, :5]).all()
+
+
+def test_limit_above_session_default_widens_plan(workload):
+    """A limit(k) larger than the session default gets its k columns —
+    the plan's max_hits is the max of the fragments' caps."""
+    w = workload
+    sess = db.open(spec_for("live", max_hits=8), mk(w["raw"]), w["rows"])
+    t_small = sess.query(db.between(mk(w["lo"]), mk(w["hi"])))
+    t_big = sess.query(db.limit(48, db.between(mk(w["lo"]), mk(w["hi"]))))
+    sess.flush()
+    assert np.asarray(t_small.result().row_ids).shape == (len(w["lo"]), 8)
+    assert np.asarray(t_big.result().row_ids).shape == (len(w["lo"]), 48)
+    # The big fragment's extra columns are real rows, not padding noise:
+    cnt = np.asarray(t_big.result().count)
+    rows = np.asarray(t_big.result().row_ids)
+    valid = np.arange(48)[None, :] < np.minimum(cnt, 48)[:, None]
+    assert (rows[valid] >= 0).all() and (rows[~valid] == MISS).all()
+
+
+# ---------------------------------------------------------------------------
+# Join probes.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tier", ["static", "live", "sharded"])
+def test_probe_join_vs_oracle(tier, workload):
+    w = workload
+    sess = db.open(spec_for(tier), mk(w["raw"]), w["rows"])
+    outer_rows = np.arange(len(w["pts"]), dtype=np.int32) * 3 + 7
+    t = sess.query(db.probe(mk(w["pts"]), outer_rows))
+    sess.flush()
+    res = t.result()
+    assert (np.asarray(res.outer_row) == outer_rows).all()
+    want_found = np.isin(w["pts"], w["raw"])
+    assert (np.asarray(res.matched) == want_found).all()
+    pos = np.searchsorted(w["sraw"], w["pts"], "left")
+    want_inner = np.where(
+        want_found, w["srows"][np.minimum(pos, len(w["sraw"]) - 1)], MISS)
+    assert (np.asarray(res.inner_row) == want_inner).all()
+
+
+# ---------------------------------------------------------------------------
+# Fusion: >= 5 node kinds, one dispatch per op class per flush.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tier", ["static", "live", "sharded"])
+def test_five_node_kinds_fuse_into_one_dispatch(tier, workload):
+    w = workload
+    sess = db.open(spec_for(tier), mk(w["raw"]), w["rows"])
+    inlist = np.concatenate([w["pts"][:20], w["pts"][:20]])
+    outer = np.arange(16, dtype=np.int32)
+    tickets = [
+        sess.query(db.eq(mk(w["pts"][:24]))),
+        sess.query(db.between(mk(w["lo"]), mk(w["hi"]))),
+        sess.query(db.isin(mk(inlist))),
+        sess.query(db.count(db.between(mk(w["lo"]), mk(w["hi"])))),
+        sess.query(db.max_key(db.between(mk(w["lo"]), mk(w["hi"])))),
+        sess.query(db.probe(mk(w["pts"][:16]), outer)),
+        sess.query(db.limit(3, db.between(mk(w["lo"]), mk(w["hi"])))),
+        sess.query(db.rank_scan(mk(w["pts"][:10]))),
+    ]
+    before = dict(sess.dispatches)
+    rep = sess.flush()
+    spent = {k: sess.dispatches[k] - before[k] for k in before}
+    assert spent == {"apply": 0, "query": 1, "rank": 1}
+    assert rep.n_point == 24 + len(np.unique(inlist)) + 16
+    assert rep.n_range == 2 * len(w["lo"])     # between + limit fragments
+    assert rep.n_agg == 2 * len(w["lo"])       # count + max_key fragments
+    assert rep.n_rank == 10
+    for t in tickets:
+        assert t.ready
+    # Spot-check correctness survived the fusion.
+    assert (np.asarray(tickets[3].result())
+            == np.asarray(tickets[1].result().count)).all()
+    assert bool(np.asarray(tickets[0].result().found).all())
+    assert (np.asarray(tickets[7].result())
+            == np.searchsorted(w["sraw"], w["pts"][:10], "left")).all()
+
+
+# ---------------------------------------------------------------------------
+# The aggregate-only fast path: no rowID materialization, any tier.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tier", ["static", "live", "sharded"])
+def test_aggregate_only_flush_skips_row_gather(tier, workload):
+    """An aggregate-only flush must trace NO point or rowID gather stage
+    into its pipeline, on every tier — including the sharded tier, whose
+    per-shard sub-plans decompose a 3+-shard span.  STAGE_COUNTERS bumps
+    when a pipeline body runs (trace time under jit), so fresh sessions
+    with fresh cache scopes see exactly the stages built."""
+    w = workload
+    sess = db.open(spec_for(tier, scope=f"aggskip-{tier}"),
+                   mk(w["raw"]), w["rows"])
+    before = dict(STAGE_COUNTERS)
+    t = sess.query(db.count(db.between(mk(w["lo"]), mk(w["hi"]))))
+    rep = sess.flush()
+    spent = {k: STAGE_COUNTERS[k] - before[k] for k in STAGE_COUNTERS}
+    assert spent["point_gather"] == 0 and spent["row_gather"] == 0, spent
+    assert spent["agg"] >= 1 and spent["rank"] >= 1
+    assert rep.n_point == 0 and rep.n_range == 0
+    assert rep.n_agg == len(w["lo"])
+    s = w["sraw"]
+    want = (np.searchsorted(s, w["hi"], "right")
+            - np.searchsorted(s, w["lo"], "left"))
+    assert (np.asarray(t.result()) == want).all()
+
+
+# ---------------------------------------------------------------------------
+# Empty submissions, validation, compiler errors.
+# ---------------------------------------------------------------------------
+
+def test_zero_length_trees_resolve_immediately():
+    raw = np.arange(0, 512, 2, dtype=np.uint64)
+    sess = db.open(spec_for("live"), mk(raw),
+                   np.arange(len(raw), dtype=np.int32))
+    e = mk(np.zeros(0, np.uint64))
+    t_isin = sess.query(db.isin(e))
+    t_cnt = sess.query(db.count(db.between(e, e)))
+    t_min = sess.query(db.min_key(db.between(e, e)))
+    t_lim = sess.query(db.limit(5, db.between(e, e)))
+    t_probe = sess.query(db.probe(e, np.zeros(0, np.int32)))
+    assert sess.pending == 0
+    rep = sess.flush()
+    assert sess.dispatches == {"apply": 0, "query": 0, "rank": 0}
+    assert (rep.n_point, rep.n_range, rep.n_agg, rep.n_rank) == (0,) * 4
+    assert t_isin.result().found.shape == (0,)
+    assert t_cnt.result().shape == (0,)
+    assert t_min.result().count.shape == (0,)
+    assert t_min.result().keys.shape == (0,)
+    assert t_lim.result().row_ids.shape == (0, 5)
+    assert t_probe.result().matched.shape == (0,)
+
+
+def test_ir_construction_errors():
+    k = mk([1, 2])
+    with pytest.raises(TypeError):
+        db.count(db.eq(k))                 # aggregates wrap ranges only
+    with pytest.raises(TypeError):
+        db.limit(4, db.eq(k))
+    with pytest.raises(ValueError):
+        db.limit(0, db.between(k, k))
+    with pytest.raises(ValueError, match=str((1 << 20) + 1)):
+        db.limit((1 << 20) + 1, db.between(k, k))
+    with pytest.raises(ValueError):
+        db.between(k, mk([1]))             # shape mismatch
+    with pytest.raises(ValueError):
+        db.probe(k, np.zeros(3, np.int32))
+    with pytest.raises(ValueError):
+        db.rank_scan(k, side="middle")
+    raw = np.arange(0, 64, 2, dtype=np.uint64)
+    sess = db.open(spec_for("live"), mk(raw),
+                   np.arange(len(raw), dtype=np.int32))
+    with pytest.raises(TypeError):
+        sess.query("not an expression")
+
+
+def test_max_hits_validated_at_every_boundary():
+    """Satellite: non-positive or absurd max_hits fails loudly AT the
+    boundary, always naming the offending value."""
+    for bad in (0, -1, MAX_MAX_HITS + 1):
+        with pytest.raises(db.InvalidSpecError, match=str(bad)):
+            db.IndexSpec(max_hits=bad)
+        with pytest.raises(ValueError, match=str(bad)):
+            QueryBatch().plan(max_hits=bad)
+    idx_raw = np.arange(0, 64, 2, dtype=np.uint64)
+    tier = db.build_tier(spec_for("live"), mk(idx_raw))
+    with pytest.raises(db.InvalidSpecError, match="-7"):
+        db.Session(tier, max_hits=-7)
+    # InvalidSpecError stays a ValueError for old-style callers.
+    assert issubclass(db.InvalidSpecError, ValueError)
+
+
+def test_never_touched_batch_plans_to_zero_lanes():
+    """Satellite regression: QueryBatch().plan() on a never-touched
+    batch returns the canonical zero-lane plan (32-bit default) instead
+    of raising — callers need no emptiness pre-check."""
+    plan = QueryBatch().plan()
+    assert (plan.lanes, plan.n_point, plan.n_range, plan.n_agg) == (0,) * 4
+    assert not plan.keys.is64 and plan.max_hits == 64
+    # ...and the engine serves it without dispatching anything.
+    raw = np.arange(0, 128, 2, dtype=np.uint64)
+    tier = db.build_tier(spec_for("static"), mk(raw))
+    res = tier.execute(plan)
+    assert res.points.found.shape == (0,) and res.aggs is None
+
+
+def test_compile_exprs_standalone_layout():
+    """The compiler is usable below the Session: fragments collect in
+    submission order and the plan max_hits is the max of the caps."""
+    k = mk([5, 9]); lo = mk([1, 3]); hi = mk([8, 12])
+    prog = compile_exprs([qplan.eq(k),
+                          qplan.limit(7, qplan.between(lo, hi)),
+                          qplan.count(qplan.between(lo, hi)),
+                          qplan.rank_scan(k, "right")],
+                         default_max_hits=4)
+    assert (prog.n_point, prog.n_range, prog.n_agg, prog.n_rank) == (2, 2, 2, 2)
+    assert prog.plan.max_hits == 7          # max(limit cap, default)
+    assert not prog.plan.agg_keys           # count-only: no key planes
+    assert prog.plan.lanes == 128           # 2 + 2*2 + 2*2 padded to a lane
+    sides = np.asarray(prog.plan.sides)
+    assert sides[:2].tolist() == [0, 0]             # point lanes
+    assert sides[2:6].tolist() == [0, 0, 1, 1]      # range lo/lo/hi/hi
+    assert sides[6:10].tolist() == [0, 0, 1, 1]     # agg lo/lo/hi/hi
+    assert np.asarray(prog.rank_sides).tolist() == [1, 1]
+
+
+# ---------------------------------------------------------------------------
+# The kernel-level rank-only count helper.
+# ---------------------------------------------------------------------------
+
+def test_kernel_range_count_matches_oracle():
+    rng = np.random.default_rng(3)
+    raw = np.unique(rng.integers(0, 1 << 40, 2000, dtype=np.uint64))[:1500]
+    s = np.sort(raw)
+    buckets = build_buckets(mk(raw), jnp.arange(len(raw), dtype=jnp.int32),
+                            16)
+    a = rng.integers(0, 1 << 40, 40, dtype=np.uint64)
+    b = rng.integers(0, 1 << 40, 40, dtype=np.uint64)
+    lo, hi = np.minimum(a, b), np.maximum(a, b)
+    got = np.asarray(kops.range_count(buckets, mk(lo), mk(hi)))
+    want = np.searchsorted(s, hi, "right") - np.searchsorted(s, lo, "left")
+    assert (got == want).all()

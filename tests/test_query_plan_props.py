@@ -1,0 +1,209 @@
+"""Property tests for the logical query-plan IR vs a numpy oracle.
+
+Random expression trees — eq / between / isin (with duplicate keys) /
+limit / count / min_key / max_key / probe / rank_scan, in random
+interleavings — are submitted through one ``Session.flush`` on a random
+tier and checked field-by-field against a brute-force host oracle
+(searchsorted + explicit scans over the sorted key set).  This covers
+the compiler's fragment bookkeeping (section offsets, inverse scatter,
+per-fragment caps, aggregate field selection) far beyond the hand-picked
+cases in tests/test_query_plan.py, including aggregates over empty
+ranges and IN-lists that are 100% duplicates.
+
+Runs hypothesis-driven when hypothesis is installed (randomized seeds
+and tree mixes) and as fixed-seed sweeps always, via the
+``tests/_hypothesis_compat.py`` shim.
+"""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+import repro.db as db
+from repro.query import plan as qplan
+
+NEVER = db.CompactionPolicy().never()
+MISS = -1
+
+
+def mk(raw):
+    return db.KeyArray.from_u64(np.asarray(raw, dtype=np.uint64))
+
+
+# ---------------------------------------------------------------------------
+# Brute-force oracle over the sorted (keys, rows) host arrays.
+# ---------------------------------------------------------------------------
+
+def oracle_points(s, srows, pts):
+    pos = np.searchsorted(s, pts, "left")
+    found = (pos < len(s)) & (s[np.minimum(pos, len(s) - 1)] == pts)
+    rows = np.where(found, srows[np.minimum(pos, len(s) - 1)], MISS)
+    return found, rows.astype(np.int64), pos.astype(np.int64)
+
+
+def oracle_range(s, srows, lo, hi, cap):
+    start = np.searchsorted(s, lo, "left")
+    end = np.searchsorted(s, hi, "right")
+    count = np.maximum(end - start, 0)
+    rows = np.full((len(lo), cap), MISS, np.int64)
+    for i in range(len(lo)):
+        take = min(int(count[i]), cap)
+        rows[i, :take] = srows[start[i]:start[i] + take]
+    return start, count, rows
+
+
+def check_tree_mix(seed: int, tier: str, n: int) -> None:
+    rng = np.random.default_rng(seed)
+    raw = np.unique(rng.integers(1, 1 << 44, int(n * 1.6) + 8,
+                                 dtype=np.uint64))[:max(n, 8)]
+    rows = rng.permutation(len(raw)).astype(np.int32)
+    order = np.argsort(raw)
+    s, srows = raw[order], rows[order]
+    sess = db.open(
+        db.IndexSpec(tier=tier, node_cap=8, bucket_size=8, policy=NEVER,
+                     max_hits=16, shards=3, max_imbalance=None),
+        mk(raw), rows)
+
+    def rand_points(m):
+        mix = np.concatenate([
+            raw[rng.integers(0, len(raw), m)],                 # members
+            rng.integers(0, 1 << 44, m, dtype=np.uint64),      # probes
+            np.array([0, raw.max(), raw.max() + 3], np.uint64)])
+        return mix[rng.permutation(len(mix))]
+
+    def rand_ranges(m):
+        a = rng.integers(0, 1 << 44, m, dtype=np.uint64)
+        b = rng.integers(0, 1 << 44, m, dtype=np.uint64)
+        lo, hi = np.minimum(a, b), np.maximum(a, b)
+        # Force some empty and some degenerate single-key ranges.
+        if m >= 3:
+            lo[0], hi[0] = raw.max() + 10, raw.max() + 20   # empty, beyond
+            lo[1], hi[1] = raw[0], raw[0]                    # exactly one
+            if raw[2] > raw[1] + 1:
+                lo[2], hi[2] = raw[1] + 1, raw[2] - 1        # gap: empty
+        return lo, hi
+
+    checks = []
+    for _ in range(int(rng.integers(4, 9))):
+        kind = rng.choice(["eq", "isin", "between", "limit", "count",
+                           "min", "max", "probe", "rank"])
+        if kind == "eq":
+            pts = rand_points(int(rng.integers(1, 6)))
+            t = sess.query(db.eq(mk(pts)))
+            checks.append(("eq", t, pts))
+        elif kind == "isin":
+            base = rand_points(int(rng.integers(1, 5)))
+            dup = base[rng.integers(0, len(base),
+                                    int(rng.integers(1, 3) * len(base)))]
+            t = sess.query(db.isin(mk(dup)))
+            checks.append(("eq", t, dup))     # same per-key contract
+        elif kind == "between":
+            lo, hi = rand_ranges(int(rng.integers(1, 5)))
+            t = sess.query(db.between(mk(lo), mk(hi)))
+            checks.append(("range", t, (lo, hi, 16)))
+        elif kind == "limit":
+            lo, hi = rand_ranges(int(rng.integers(1, 5)))
+            cap = int(rng.integers(1, 24))
+            t = sess.query(db.limit(cap, db.between(mk(lo), mk(hi))))
+            checks.append(("range", t, (lo, hi, cap)))
+        elif kind in ("count", "min", "max"):
+            lo, hi = rand_ranges(int(rng.integers(1, 5)))
+            node = {"count": db.count, "min": db.min_key,
+                    "max": db.max_key}[kind](db.between(mk(lo), mk(hi)))
+            t = sess.query(node)
+            checks.append((kind, t, (lo, hi)))
+        elif kind == "probe":
+            pts = rand_points(int(rng.integers(1, 4)))
+            outer = rng.integers(0, 1 << 20, len(pts)).astype(np.int32)
+            t = sess.query(db.probe(mk(pts), outer))
+            checks.append(("probe", t, (pts, outer)))
+        else:
+            pts = rand_points(int(rng.integers(1, 5)))
+            side = str(rng.choice(["left", "right"]))
+            t = sess.query(db.rank_scan(mk(pts), side))
+            checks.append(("rank", t, (pts, side)))
+
+    before = dict(sess.dispatches)
+    sess.flush()
+    spent = {k: sess.dispatches[k] - before[k] for k in before}
+    assert spent["apply"] == 0 and spent["query"] <= 1 and spent["rank"] <= 1
+
+    for kind, t, args in checks:
+        res = t.result()
+        if kind == "eq":
+            found, rows_w, pos = oracle_points(s, srows, args)
+            assert (np.asarray(res.found) == found).all()
+            assert (np.asarray(res.row_id) == rows_w).all()
+            assert (np.asarray(res.position) == pos).all()
+        elif kind == "range":
+            lo, hi, cap = args
+            start, count, rows_w = oracle_range(s, srows, lo, hi, cap)
+            assert (np.asarray(res.start) == start).all()
+            assert (np.asarray(res.count) == count).all()
+            assert np.asarray(res.row_ids).shape == (len(lo), cap)
+            assert (np.asarray(res.row_ids) == rows_w).all()
+        elif kind == "count":
+            lo, hi = args
+            _, count, _ = oracle_range(s, srows, lo, hi, 1)
+            assert (np.asarray(res) == count).all()
+        elif kind in ("min", "max"):
+            lo, hi = args
+            start, count, _ = oracle_range(s, srows, lo, hi, 1)
+            assert (np.asarray(res.count) == count).all()
+            ne = count > 0
+            got = res.keys.to_numpy()[ne]
+            if kind == "min":
+                want = s[start[ne]]
+            else:
+                want = s[(start + count)[ne] - 1]
+            assert (got == want).all()
+        elif kind == "probe":
+            pts, outer = args
+            found, rows_w, _ = oracle_points(s, srows, pts)
+            assert (np.asarray(res.outer_row) == outer).all()
+            assert (np.asarray(res.matched) == found).all()
+            assert (np.asarray(res.inner_row) == rows_w).all()
+        else:
+            pts, side = args
+            assert (np.asarray(res)
+                    == np.searchsorted(s, pts, side)).all()
+
+
+@pytest.mark.parametrize("seed,tier,n", [
+    (0, "static", 300), (1, "live", 200), (2, "sharded", 250),
+    (3, "live", 40), (4, "sharded", 64), (5, "static", 900),
+])
+def test_tree_mix_fixed(seed, tier, n):
+    check_tree_mix(seed, tier, n)
+
+
+@given(st.integers(0, 2 ** 31), st.sampled_from(["static", "live",
+                                                 "sharded"]),
+       st.integers(16, 400))
+@settings(max_examples=10, deadline=None)
+def test_property_tree_mix(seed, tier, n):
+    check_tree_mix(seed, tier, n)
+
+
+def test_isin_all_duplicates_single_lane():
+    """A 100%-duplicate IN-list dispatches exactly ONE unique lane."""
+    raw = np.arange(0, 256, 2, dtype=np.uint64)
+    sess = db.open(db.IndexSpec(tier="live", policy=NEVER), mk(raw),
+                   np.arange(len(raw), dtype=np.int32))
+    dup = np.full(50, raw[3], np.uint64)
+    t = sess.query(db.isin(mk(dup)))
+    rep = sess.flush()
+    assert rep.n_point == 1
+    assert np.asarray(t.result().found).all()
+    assert (np.asarray(t.result().row_id) == 3).all()
+
+
+def test_empty_result_shapes_match_expr():
+    """qplan.empty_result mirrors each node's resolved shape contract."""
+    e64 = mk(np.zeros(0, np.uint64))
+    assert qplan.empty_result(qplan.eq(e64)).found.shape == (0,)
+    assert qplan.empty_result(
+        qplan.limit(9, qplan.between(e64, e64))).row_ids.shape == (0, 9)
+    agg = qplan.empty_result(qplan.min_key(qplan.between(e64, e64)))
+    assert agg.count.shape == (0,) and agg.keys.is64
+    assert qplan.empty_result(
+        qplan.count(qplan.between(e64, e64))).shape == (0,)
