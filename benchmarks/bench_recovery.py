@@ -1,0 +1,117 @@
+"""Durability costs: WAL append overhead and recovery vs tail length.
+
+Two questions the durable serving tier (``IndexSpec(durability=...)``)
+must answer with numbers:
+
+1. **Write-path overhead** — the WAL appends + fsyncs every mixed batch
+   BEFORE its device dispatch, so the 90/10 lookup/update mix of
+   bench_live_store is rerun here twice, ``durability='none'`` vs
+   ``'wal'``, same workload/seeds, and both totals are emitted; the
+   overhead ratio is the number the durability docs quote.  The 'none'
+   path is the historical memory-only session — CI gates it against the
+   pre-durability baseline (bench_live_store), so this suite only needs
+   the durable/none *ratio*.
+
+2. **Recovery time vs WAL-tail length** — recovery = newest snapshot +
+   replay, so its cost scales with the tail.  Fresh stores are run for
+   increasing wave counts under 'wal' (one baseline snapshot, no
+   re-snapshots), closed, and ``repro.db.recover_tier`` is timed cold.
+   The 'wal+snapshot' mode exists exactly to bound this curve.
+"""
+from benchmarks.common import emit, parse_args
+
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+import repro.db as db
+from repro.data import keygen
+
+WAVES = 8
+
+
+def _wave(rng, live_np, space, n_ops, read_frac=0.9):
+    n_read = int(n_ops * read_frac)
+    n_write = n_ops - n_read
+    n_ins = n_write // 2
+    n_del = n_write - n_ins
+    q = live_np[rng.integers(0, len(live_np), max(n_read, 1))]
+    ins = np.setdiff1d(
+        np.unique(rng.integers(0, space, int(n_ins * 1.5) + 8,
+                               dtype=np.uint64)), live_np)[:n_ins]
+    dels = live_np[rng.choice(len(live_np), n_del, replace=False)]
+    return q, ins, dels
+
+
+def _run_mix(spec, keys, rows, raw, ops, seed, waves=WAVES) -> float:
+    """Total flush wall time over ``waves`` 90/10 mixed waves."""
+    live_np = raw.copy()
+    next_row = len(raw)
+    rng = np.random.default_rng(seed)
+    space = np.uint64((1 << 44) - 1)
+    total = 0.0
+    with db.open(spec, keys, rows) as sess:
+        for _ in range(waves):
+            q, ins, dels = _wave(rng, live_np, space, ops)
+            sess.insert(keygen.as_keys(ins, 64),
+                        np.arange(next_row, next_row + len(ins),
+                                  dtype=np.int32))
+            sess.delete(keygen.as_keys(dels, 64))
+            sess.lookup(keygen.as_keys(q, 64))
+            t0 = time.perf_counter()
+            sess.flush()
+            total += time.perf_counter() - t0
+            next_row += len(ins)
+            live_np = np.setdiff1d(np.concatenate([live_np, ins]), dels)
+    return total
+
+
+def main(args=None) -> None:
+    args = args or parse_args()
+    seed = getattr(args, "seed", None) or 0
+    n = max(2048, min(args.n, 1 << 20) >> 6)
+    ops = max(256, min(args.q, 1 << 21) >> 9)
+    policy = db.CompactionPolicy(max_chain=3, min_fill=0.2,
+                                 max_tombstone_ratio=0.5)
+    base_kw = dict(tier="live", node_cap=32, max_hits=16, policy=policy)
+    scratch = tempfile.mkdtemp(prefix="repro-bench-recovery-")
+    try:
+        # ---- 1. WAL append overhead on the 90/10 mix ----
+        # Warmup pass: pay the XLA compiles (shared executable cache)
+        # before either timed run, so 'none' vs 'wal' is fsync cost, not
+        # who compiled first.
+        keys, rows, raw = keygen.keyset(n, 1.0, bits=64, seed=seed)
+        _run_mix(db.IndexSpec(**base_kw), keys, rows, raw, ops, seed + 1)
+        keys, rows, raw = keygen.keyset(n, 1.0, bits=64, seed=seed)
+        t_none = _run_mix(db.IndexSpec(**base_kw), keys, rows, raw,
+                          ops, seed + 1)
+        keys, rows, raw = keygen.keyset(n, 1.0, bits=64, seed=seed)
+        t_wal = _run_mix(
+            db.IndexSpec(**base_kw, durability="wal",
+                         wal_dir=f"{scratch}/mix"),
+            keys, rows, raw, ops, seed + 1)
+        emit("recovery_mix90_none", t_none, f"waves={WAVES};ops={ops}")
+        emit("recovery_mix90_wal", t_wal,
+             f"waves={WAVES};ops={ops};"
+             f"overhead={(t_wal / max(t_none, 1e-9) - 1) * 100:+.1f}%")
+
+        # ---- 2. recovery time vs WAL-tail length ----
+        for waves in (2, WAVES // 2, WAVES):
+            spec = db.IndexSpec(**base_kw, durability="wal",
+                                wal_dir=f"{scratch}/tail{waves}")
+            keys, rows, raw = keygen.keyset(n, 1.0, bits=64, seed=seed)
+            _run_mix(spec, keys, rows, raw, ops, seed + 2, waves=waves)
+            t0 = time.perf_counter()
+            tier, seq = db.recover_tier(spec)
+            t_rec = time.perf_counter() - t0
+            st = tier.stats()
+            emit(f"recovery_tail{waves}", t_rec,
+                 f"records={seq};live={st.live_keys};epoch={st.epoch}")
+    finally:
+        shutil.rmtree(scratch, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

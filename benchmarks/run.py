@@ -40,6 +40,7 @@ SUITES = [
     ("live_store", "benchmarks.bench_live_store"),
     ("sharded_store", "benchmarks.bench_sharded_store"),
     ("query_plan", "benchmarks.bench_query_plan"),
+    ("recovery", "benchmarks.bench_recovery"),
 ]
 
 

@@ -65,43 +65,45 @@ def main() -> None:
     spec = db.IndexSpec(tier="sharded", shards=4, node_cap=32,
                         policy=db.CompactionPolicy(max_chain=4),
                         max_imbalance=2.0, max_hits=16)
-    sess = db.open(spec, keys, np.arange(n, dtype=np.int32))
+    # Context-manager form: close() flushes pending tickets on exit (and
+    # seals the WAL for durable specs) — the session lifecycle contract.
+    with db.open(spec, keys, np.arange(n, dtype=np.int32)) as sess:
+        upd = np.setdiff1d(np.unique(rng.integers(0, 1 << 45, 6000,
+                                                  dtype=np.uint64)),
+                           raw)[:4096]
+        dels = np.unique(raw[rng.integers(0, n, 2048)])
+        sess.insert(db.as_key_array(upd),
+                    np.arange(n, n + len(upd), dtype=np.int32))
+        sess.delete(db.as_key_array(dels))
+        rep = sess.flush()                # ONE routed apply for the flush
+        st = sess.stats()
+        print(f"live mode updates: {len(upd)} inserts + {len(dels)} "
+              f"deletes routed via splitters, 1 apply/shard; "
+              f"epochs {list(st.detail.epochs)}; "
+              f"policy={rep.compacted or '-'}")
 
-    upd = np.setdiff1d(np.unique(rng.integers(0, 1 << 45, 6000,
-                                              dtype=np.uint64)), raw)[:4096]
-    dels = np.unique(raw[rng.integers(0, n, 2048)])
-    sess.insert(db.as_key_array(upd),
-                np.arange(n, n + len(upd), dtype=np.int32))
-    sess.delete(db.as_key_array(dels))
-    rep = sess.flush()                    # ONE routed apply for the flush
-    st = sess.stats()
-    print(f"live mode updates: {len(upd)} inserts + {len(dels)} deletes "
-          f"routed via splitters, 1 apply/shard; "
-          f"epochs {list(st.detail.epochs)}; "
-          f"policy={rep.compacted or '-'}")
+        res = sess.lookup(db.as_key_array(upd)).result()
+        gone = sess.lookup(db.as_key_array(dels)).result()
+        assert bool(np.asarray(res.found).all())
+        assert not bool(np.asarray(gone.found).any())
 
-    res = sess.lookup(db.as_key_array(upd)).result()
-    gone = sess.lookup(db.as_key_array(dels)).result()
-    assert bool(np.asarray(res.found).all())
-    assert not bool(np.asarray(gone.found).any())
+        live_np = np.sort(np.setdiff1d(np.concatenate([raw, upd]), dels))
+        starts = rng.integers(0, len(live_np) - 150_000, 256)
+        lo = db.as_key_array(live_np[starts])
+        hi = db.as_key_array(live_np[starts + 149_999])
+        rng_res = sess.range(lo, hi).result()
+        assert (np.asarray(rng_res.count) == 150_000).all()
+        st = sess.stats()
+        print(f"live mode ranges: 256 ranges decomposed at the splitters "
+              f"across {st.num_shards} shards, counts exact after updates "
+              f"(imbalance {st.detail.imbalance:.2f}, "
+              f"rebalances {st.detail.rebalances})")
 
-    live_np = np.sort(np.setdiff1d(np.concatenate([raw, upd]), dels))
-    starts = rng.integers(0, len(live_np) - 150_000, 256)
-    lo = db.as_key_array(live_np[starts])
-    hi = db.as_key_array(live_np[starts + 149_999])
-    rng_res = sess.range(lo, hi).result()
-    assert (np.asarray(rng_res.count) == 150_000).all()
-    st = sess.stats()
-    print(f"live mode ranges: 256 ranges decomposed at the splitters "
-          f"across {st.num_shards} shards, counts exact after updates "
-          f"(imbalance {st.detail.imbalance:.2f}, "
-          f"rebalances {st.detail.rebalances})")
-
-    # Global rank scans merge with the same rank-offset prefix.
-    ranks = sess.scan_ranks(lo).result()
-    assert (np.asarray(ranks) == starts).all()
-    print(f"live mode rank scans: 256 global ranks bit-identical to the "
-          f"host oracle (session dispatches: {sess.dispatches})")
+        # Global rank scans merge with the same rank-offset prefix.
+        ranks = sess.scan_ranks(lo).result()
+        assert (np.asarray(ranks) == starts).all()
+        print(f"live mode rank scans: 256 global ranks bit-identical to "
+              f"the host oracle (session dispatches: {sess.dispatches})")
 
 
 if __name__ == "__main__":

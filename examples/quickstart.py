@@ -7,10 +7,19 @@ same typed surface for all of them: ``lookup`` / ``range`` / ``insert``
 / ``delete`` / ``scan_ranks`` tickets, resolved by one ``flush()`` with
 ONE device dispatch per op class.
 
+Sessions are context managers: ``close()`` flushes pending tickets and,
+for durable specs, seals the write-ahead log — so the idiomatic form is
+``with repro.db.open(spec, keys) as sess:``.  The final section shows
+the durability contract: ``IndexSpec(durability='wal', wal_dir=...)``
+logs every write before it runs, and ``db.open(spec, recover=True)``
+resumes the store bit-identically after a crash.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import os
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import tempfile
 
 import numpy as np
 
@@ -18,14 +27,7 @@ import repro.db as db
 from repro.data import keygen
 
 
-def main(n: int = 100_000, lookups: int = 10_000) -> None:
-    # 1. Paper workload: 50% dense / 50% uniform 32-bit keys.
-    keys, rows, raw = keygen.keyset(n, uniformity=0.5, bits=32, seed=0)
-    print(f"key set: {len(raw):,} keys, uniformity 50%")
-
-    # 2. Open a STATIC session (bucket size 16 — the paper's
-    #    recommendation, Sec. 5.4).  The tier is a spec knob.
-    sess = db.open(db.IndexSpec(tier="static", bucket_size=16), keys, rows)
+def run_static(sess: db.Session, raw: np.ndarray, lookups: int):
     st = sess.stats()
     nb = sess.nbytes()
     print(f"cgRX built: {st.num_buckets:,} buckets, "
@@ -33,21 +35,21 @@ def main(n: int = 100_000, lookups: int = 10_000) -> None:
           f"(reps {nb['rep_bytes']/1e6:.2f} MB, "
           f"tree {nb['tree_bytes']/1e3:.1f} KB)")
 
-    # 3. Point lookups (a Ticket auto-flushes on result access).
+    # Point lookups (a Ticket auto-flushes on result access).
     q_raw = keygen.uniform_lookups(raw, lookups, seed=1)
     res = sess.lookup(keygen.as_keys(q_raw, 32)).result()
     assert bool(res.found.all())
     assert (raw[np.asarray(res.row_id)] == q_raw).all()
     print(f"{lookups:,} point lookups: all hit, rowIDs verified")
 
-    # 4. Range lookup: one successor search + sequential scan (Sec. 3.2).
+    # Range lookup: one successor search + sequential scan (Sec. 3.2).
     sraw = np.sort(raw)
     lo, hi = keygen.range_lookups(sraw, 4, 64, seed=2)
     rr = sess.range(keygen.as_keys(lo, 32), keygen.as_keys(hi, 32)).result()
     print(f"range lookups: counts={np.asarray(rr.count).tolist()}")
 
-    # 5. Batched serving is the API's execution model: queue mixed
-    #    traffic, then ONE flush = one coalesced engine dispatch.
+    # Batched serving is the API's execution model: queue mixed
+    # traffic, then ONE flush = one coalesced engine dispatch.
     t_pts = sess.lookup(keygen.as_keys(q_raw[:256], 32))
     t_rng = sess.range(keygen.as_keys(lo, 32), keygen.as_keys(hi, 32))
     t_rnk = sess.scan_ranks(keygen.as_keys(q_raw[:64], 32))
@@ -63,19 +65,20 @@ def main(n: int = 100_000, lookups: int = 10_000) -> None:
           f"+ {rep.n_rank} rank scans in one dispatch per class "
           f"(this flush: {spent})")
 
-    # 6. The static tier rejects writes with a typed error...
+    # The static tier rejects writes with a typed error.
     try:
         sess.insert(keygen.as_keys(q_raw[:1], 32), np.zeros(1, np.int32))
     except db.ReadOnlyTierError:
         print("static tier: writes rejected (ReadOnlyTierError)")
     else:
         raise AssertionError("static tier accepted a write")
+    return q_raw, lo, hi, np.asarray(rr.count)
 
-    # 7. ...so switch the SPEC to the live tier (paper Sec. 4: chains
-    #    grow bucket-locally, the search structure is immutable).
-    live = db.open(db.IndexSpec(tier="live", node_cap=32,
-                                policy=db.CompactionPolicy().never()),
-                   keys, rows)
+
+def run_live(live: db.Session, raw: np.ndarray, q_raw, lo, hi,
+             rr_count) -> None:
+    # Live tier (paper Sec. 4): chains grow bucket-locally, the search
+    # structure is immutable.
     ins = np.setdiff1d(np.arange(raw.max() + 1, raw.max() + 1001,
                                  dtype=np.uint64), raw)
     t_ins = live.insert(keygen.as_keys(ins, 32),
@@ -90,10 +93,10 @@ def main(n: int = 100_000, lookups: int = 10_000) -> None:
           f"structure (epoch {ls.epoch}, max chain {ls.max_chain}, "
           f"{ls.live_keys:,} live keys)")
 
-    # 8. Composable query plans: one sess.query(expr) entry point over a
-    #    small IR — IN-lists, rank-only aggregates, hit caps, join
-    #    probes — and a whole flush still compiles to ONE dispatch per
-    #    op class.
+    # Composable query plans: one sess.query(expr) entry point over a
+    # small IR — IN-lists, rank-only aggregates, hit caps, join
+    # probes — and a whole flush still compiles to ONE dispatch per
+    # op class.
     inlist = np.concatenate([q_raw[:64], q_raw[:64]])      # 50% duplicates
     t_in = live.query(db.isin(keygen.as_keys(inlist, 32)))
     t_cnt = live.query(db.count(db.between(keygen.as_keys(lo, 32),
@@ -109,7 +112,7 @@ def main(n: int = 100_000, lookups: int = 10_000) -> None:
     assert spent == {"apply": 0, "query": 1, "rank": 0}
     assert bool(t_in.result().found.all())                 # dups answered
     counts = np.asarray(t_cnt.result())
-    assert (counts >= np.asarray(rr.count)).all()          # superset: +inserts
+    assert (counts >= rr_count).all()                      # superset: +inserts
     assert t_top.result().row_ids.shape == (len(lo), 4)
     assert bool(t_join.result().matched.all())
     n_unique = len(np.unique(inlist))
@@ -118,6 +121,49 @@ def main(n: int = 100_000, lookups: int = 10_000) -> None:
           f"{len(outer_rows)} join probes fused into {rep.n_point} point "
           f"lanes, one dispatch (this flush: {spent}; "
           f"counts={counts.tolist()})")
+
+
+def run_durable(raw: np.ndarray) -> None:
+    # Durability: a WAL'd session logs + fsyncs every write BEFORE the
+    # device dispatch; recovery (newest snapshot + WAL-tail replay)
+    # resumes the store bit-identically.
+    wal_dir = tempfile.mkdtemp(prefix="repro-quickstart-wal-")
+    spec = db.IndexSpec(tier="live", durability="wal", wal_dir=wal_dir,
+                        node_cap=32, policy=db.CompactionPolicy().never())
+    boot = np.sort(raw[:4096])
+    new = np.setdiff1d(np.arange(raw.max() + 2000, raw.max() + 2065,
+                                 dtype=np.uint64), raw)
+    with db.open(spec, keygen.as_keys(boot, 32)) as durable:
+        durable.insert(keygen.as_keys(new, 32),
+                       np.arange(len(new), dtype=np.int32))
+        durable.delete(keygen.as_keys(boot[:32], 32))
+        durable.flush()
+    # The session is gone ("crash"); the log is not.
+    with db.open(spec, recover=True) as recovered:
+        back = recovered.lookup(keygen.as_keys(new, 32)).result()
+        gone = recovered.lookup(keygen.as_keys(boot[:32], 32)).result()
+        assert bool(back.found.all()) and not bool(gone.found.any())
+        print(f"durable tier: {len(new)} logged inserts + 32 deletes "
+              f"survived close + recover=True (WAL in {wal_dir})")
+
+
+def main(n: int = 100_000, lookups: int = 10_000) -> None:
+    # Paper workload: 50% dense / 50% uniform 32-bit keys.
+    keys, rows, raw = keygen.keyset(n, uniformity=0.5, bits=32, seed=0)
+    print(f"key set: {len(raw):,} keys, uniformity 50%")
+
+    # The tier is a spec knob; sessions are context managers (close()
+    # flushes pending tickets and seals any WAL segment).
+    with db.open(db.IndexSpec(tier="static", bucket_size=16),
+                 keys, rows) as sess:
+        q_raw, lo, hi, rr_count = run_static(sess, raw, lookups)
+
+    with db.open(db.IndexSpec(tier="live", node_cap=32,
+                              policy=db.CompactionPolicy().never()),
+                 keys, rows) as live:
+        run_live(live, raw, q_raw, lo, hi, rr_count)
+
+    run_durable(raw)
 
 
 if __name__ == "__main__":

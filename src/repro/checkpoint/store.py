@@ -5,9 +5,14 @@ manifest — not device layouts — so a run checkpointed on one mesh restores
 onto any other (elastic re-shard): ``restore`` device_puts every leaf with
 the sharding the *new* mesh's rules assign.
 
-Atomicity: write into ``<dir>/tmp-<step>``, fsync, then ``os.rename`` to
-``step-<n>`` (rename is atomic on POSIX); a crash mid-save leaves only a
-tmp dir that the next save garbage-collects.  ``save_async`` runs the
+Atomicity: write into ``<dir>/tmp-<step>``, fsync the payload and the
+manifest, ``os.rename`` to ``step-<n>`` (rename is atomic on POSIX), then
+fsync the PARENT directory — without that last fsync the rename itself
+can be lost on a crash, leaving a fully-written checkpoint invisible (or
+worse, a ``step-<n>`` entry whose files never hit disk).  A crash mid-
+save leaves only a tmp dir that the next save garbage-collects, and
+``all_steps`` lists only directories whose manifest exists, so readers
+never see a half-committed step.  ``save_async`` runs the
 serialization on a background thread so the train loop never blocks on
 I/O (the arrays are fetched to host synchronously first — cheap relative
 to a step — then written in the background).
@@ -28,6 +33,14 @@ import numpy as np
 def _flatten(tree: Any):
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     return leaves, treedef
+
+
+def _fsync_dir(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 def _paths(tree: Any):
@@ -72,8 +85,10 @@ class CheckpointManager:
             shutil.rmtree(tmp)
         os.makedirs(tmp)
         leaves, treedef = _flatten(host_tree)
-        np.savez(os.path.join(tmp, "arrays.npz"),
-                 **{f"leaf_{i}": l for i, l in enumerate(leaves)})
+        arrays_path = os.path.join(tmp, "arrays.npz")
+        np.savez(arrays_path, **{f"leaf_{i}": l for i, l in enumerate(leaves)})
+        with open(arrays_path, "rb+") as f:
+            os.fsync(f.fileno())
         # The treedef itself is not persisted: restore() takes a ``like``
         # pytree (NamedTuple nodes are not proto-serializable), and the
         # leaf count guards against structure drift.
@@ -90,6 +105,7 @@ class CheckpointManager:
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)
+        _fsync_dir(self.dir)
         self._gc()
         return final
 
@@ -107,13 +123,22 @@ class CheckpointManager:
     def all_steps(self):
         out = []
         for d in os.listdir(self.dir):
-            if d.startswith("step-"):
+            if d.startswith("step-") and os.path.exists(
+                    os.path.join(self.dir, d, "manifest.json")):
                 out.append(int(d.split("-")[1]))
         return sorted(out)
 
     def latest_step(self) -> Optional[int]:
         steps = self.all_steps()
         return steps[-1] if steps else None
+
+    def read_manifest(self, step: int) -> dict:
+        """The full manifest of one committed step (step/num_leaves/meta/
+        time) — recovery reads this to learn a snapshot's WAL position
+        and state layout before deciding what to restore."""
+        path = os.path.join(self.dir, f"step-{step:010d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            return json.load(f)
 
     def restore(self, step: int, like: Any,
                 shardings: Optional[Any] = None) -> Tuple[Any, dict]:

@@ -49,16 +49,23 @@ from repro.query.plan import (AggKeys, Expr, ProbeResult, between, count,
                               rank_scan)
 from repro.store.compaction import CompactionPolicy
 
-from .errors import DbError, InvalidSpecError, ReadOnlyTierError
+from repro.store.replica import ReadReplica, ReplicaSet
+
+from .errors import (DbError, DroppedTicketError, InvalidSpecError,
+                     ReadOnlyTierError, RecoveryError, SessionClosedError,
+                     StaleReplicaError)
 from .session import FlushReport, Session, Ticket
 from .spec import IndexSpec
-from .tiers import (IndexTier, LiveTier, ShardedTier, Stats, StaticTier,
-                    build_tier, wrap_store)
+from .tiers import (DurabilityManager, IndexTier, LiveTier, ShardedTier,
+                    Stats, StaticTier, build_tier, has_durable_state,
+                    recover_tier, wrap_store)
 
 __all__ = [
     "AggKeys",
     "CompactionPolicy",
     "DbError",
+    "DroppedTicketError",
+    "DurabilityManager",
     "Expr",
     "FlushReport",
     "IndexSpec",
@@ -68,8 +75,13 @@ __all__ = [
     "LiveTier",
     "ProbeResult",
     "ReadOnlyTierError",
+    "ReadReplica",
+    "RecoveryError",
+    "ReplicaSet",
     "Session",
+    "SessionClosedError",
     "ShardedTier",
+    "StaleReplicaError",
     "Stats",
     "StaticTier",
     "Ticket",
@@ -78,6 +90,7 @@ __all__ = [
     "build_tier",
     "count",
     "eq",
+    "has_durable_state",
     "isin",
     "limit",
     "max_key",
@@ -85,6 +98,7 @@ __all__ = [
     "open",
     "probe",
     "rank_scan",
+    "recover_tier",
     "wrap_store",
 ]
 
@@ -105,19 +119,69 @@ def as_key_array(keys) -> KeyArray:
         f"dtype {arr.dtype}")
 
 
-def open(spec: Optional[IndexSpec] = None, keys=None,
-         row_ids=None) -> Session:   # noqa: A001 - deliberate front door
-    """Build the tier ``spec`` describes over ``keys``/``row_ids`` and
-    return the ``Session`` serving it.
+def open(spec: Optional[IndexSpec] = None, keys=None, row_ids=None,
+         *, recover: bool = False) -> Session:   # noqa: A001 - front door
+    """Build (or recover) the tier ``spec`` describes and return the
+    ``Session`` serving it.
 
     ``spec`` defaults to ``IndexSpec()`` (a live tier with the paper's
     recommended geometry).  ``keys`` may be a ``KeyArray`` or a host
     uint32/uint64 array; ``row_ids`` defaults to positions.
+
+    Durable specs (``durability='wal'``/``'wal+snapshot'`` with a
+    ``wal_dir``) add the recovery contract:
+
+      * fresh open (``recover=False``): ``wal_dir`` must not already
+        hold a store (``RecoveryError`` otherwise — a silent re-init
+        would orphan the existing log); a baseline snapshot is written
+        synchronously before the session accepts traffic, so the store
+        is recoverable from its first write on.
+      * ``recover=True``: resume the store in ``wal_dir`` — newest
+        snapshot + WAL-tail replay; ``keys`` must be omitted (the log
+        is the source of truth).  When ``wal_dir`` is still empty,
+        ``keys`` bootstraps a fresh store instead (open-or-create).
+
+    Sessions are context managers — prefer ``with repro.db.open(...)
+    as sess:`` so pending tickets flush and the WAL segment seals on
+    exit (see ``Session.close``).
     """
     spec = spec or IndexSpec()
-    if keys is None:
-        raise ValueError("repro.db.open needs a key set to index")
-    karr = as_key_array(keys)
-    rows = None if row_ids is None else jnp.asarray(row_ids, jnp.int32)
-    tier = build_tier(spec, karr, rows)
-    return Session(tier, max_hits=spec.max_hits)
+    if not spec.durable:
+        if recover:
+            raise InvalidSpecError(
+                "recover=True needs a durable spec: IndexSpec("
+                "durability='wal' or 'wal+snapshot', wal_dir=...)")
+        if keys is None:
+            raise ValueError("repro.db.open needs a key set to index")
+        karr = as_key_array(keys)
+        rows = None if row_ids is None else jnp.asarray(row_ids, jnp.int32)
+        tier = build_tier(spec, karr, rows)
+        return Session(tier, max_hits=spec.max_hits)
+
+    existing = has_durable_state(spec)
+    if existing and not recover:
+        raise RecoveryError(
+            f"wal_dir {spec.wal_dir!r} already holds a durable store; "
+            f"pass recover=True to resume it, or point wal_dir at a "
+            f"fresh directory")
+    if existing:
+        if keys is not None:
+            raise InvalidSpecError(
+                "recover=True resumes the store already in wal_dir; "
+                "a key set cannot also be supplied (the WAL is the "
+                "source of truth)")
+        tier, _ = recover_tier(spec)
+    else:
+        if keys is None:
+            raise RecoveryError(
+                f"nothing to recover in {spec.wal_dir!r} and no keys "
+                f"to initialize a fresh store from")
+        karr = as_key_array(keys)
+        rows = None if row_ids is None else jnp.asarray(row_ids, jnp.int32)
+        tier = build_tier(spec, karr, rows)
+    manager = DurabilityManager(spec)
+    manager.attach(tier)
+    # Baseline snapshot (synchronous): recovery = snapshot + WAL tail,
+    # so a snapshot must exist before the first logged write.
+    manager.snapshot(tier, wait=True)
+    return Session(tier, max_hits=spec.max_hits, durability=manager)

@@ -19,7 +19,51 @@ class ReadOnlyTierError(DbError):
 class InvalidSpecError(DbError, ValueError):
     """An ``IndexSpec`` (or ``Session``) knob is invalid: unknown tier or
     backend, non-positive bucket/node sizes, a non-positive shard count
-    on the sharded tier, or a ``max_hits`` outside ``[1, MAX_MAX_HITS]``
-    (``repro.query.batch``) — the message always names the offending
-    value.  (Sharding knobs on an unsharded tier are inert, not an error
-    — a spec may be flipped between tiers in place.)"""
+    on the sharded tier, a ``max_hits`` outside ``[1, MAX_MAX_HITS]``
+    (``repro.query.batch``), or a durable ``durability=`` mode without a
+    ``wal_dir`` — the message always names the offending value.
+    (Sharding knobs on an unsharded tier are inert, not an error — a
+    spec may be flipped between tiers in place.)"""
+
+
+class RecoveryError(DbError):
+    """Opening or recovering a durable store failed: the ``wal_dir``
+    holds no recoverable state (or already holds state a fresh
+    ``recover=False`` open would clobber), a snapshot manifest does not
+    match the spec, or the write-ahead log is corrupt somewhere other
+    than its torn tail.  Filesystem/WAL-level causes (``OSError``,
+    ``store.wal.WalCorruptError``) are chained as ``__cause__`` instead
+    of escaping raw from ``checkpoint``/``store.wal`` internals."""
+
+
+class StaleReplicaError(DbError):
+    """No replica is fresh enough to serve: every member of the
+    ``ReplicaSet`` is stale, failed, or flagged as a straggler.
+
+    ``epoch_lag`` is the best available replica's lag behind the
+    primary's last-published epoch, and ``seq_lag`` the same in WAL
+    sequence numbers (either may be ``None`` when the primary's beacon
+    is unreadable) — attached so a caller can decide between retrying,
+    relaxing its freshness bound, or alerting.
+    """
+
+    def __init__(self, message: str, *, epoch_lag=None, seq_lag=None):
+        super().__init__(message)
+        self.epoch_lag = epoch_lag
+        self.seq_lag = seq_lag
+
+
+class SessionClosedError(DbError):
+    """A request was submitted to (or a pending ticket resolved against)
+    a ``Session`` after ``close()``: the WAL segment is sealed and the
+    tier may be torn down, so the operation can never be served.  Open a
+    new session (``repro.db.open(..., recover=True)`` resumes a durable
+    one)."""
+
+
+class DroppedTicketError(DbError, RuntimeError):
+    """A ``Ticket`` was dropped by a failed ``flush()``: the flush had
+    already drained its queues when it raised (e.g. mixed key widths in
+    one flush, or a device error mid-dispatch), so the ticket's op was
+    lost and must be resubmitted.  Subclasses ``RuntimeError`` for
+    callers that predate the typed hierarchy."""

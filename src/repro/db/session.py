@@ -65,7 +65,8 @@ from repro.core.keys import KeyArray, concat_keys
 from repro.query import plan as qplan
 from repro.query.batch import validate_max_hits
 
-from .errors import InvalidSpecError, ReadOnlyTierError
+from .errors import (DroppedTicketError, InvalidSpecError,
+                     ReadOnlyTierError, SessionClosedError)
 from .tiers import IndexTier, Stats
 
 _UNSET = object()
@@ -110,6 +111,14 @@ class Ticket:
 
     def result(self):
         if self._value is _UNSET:
+            if self._session is not None and self._session.closed:
+                # The session was closed (possibly mid-flush) before
+                # this op could be served; no later flush can ever
+                # resolve it.
+                raise SessionClosedError(
+                    f"{self!r} cannot resolve: its session was closed "
+                    f"before the request was served; resubmit on a new "
+                    f"session")
             self._session.flush()
         if self._value is _UNSET:
             # Only reachable when a previous flush() raised after it had
@@ -117,7 +126,7 @@ class Ticket:
             # flush, or a device error mid-dispatch): this ticket's op
             # was lost with that flush.  Fail loudly, not with a leaked
             # sentinel posing as a result.
-            raise RuntimeError(
+            raise DroppedTicketError(
                 f"{self!r} was dropped by a failed flush(); "
                 f"resubmit the request")
         return self._value
@@ -153,15 +162,31 @@ class FlushReport:
 
 
 class Session:
-    """The single front door over one ``IndexTier`` (see module doc)."""
+    """The single front door over one ``IndexTier`` (see module doc).
 
-    def __init__(self, tier: IndexTier, *, max_hits: int = 64):
+    Lifecycle: a session is a context manager; ``close()`` (or leaving
+    the ``with`` block) flushes pending tickets, seals the WAL segment
+    and stops replica/heartbeat threads on durable sessions, and marks
+    the session closed — submissions and flushes afterwards raise
+    ``SessionClosedError``.  ``close()`` is idempotent.  Non-durable
+    sessions close too (the flush-pending contract is uniform); for them
+    it is cheap and optional, which is why the historical no-``with``
+    usage keeps working.
+    """
+
+    def __init__(self, tier: IndexTier, *, max_hits: int = 64,
+                 durability=None):
         try:
             validate_max_hits(max_hits)
         except ValueError as e:
             raise InvalidSpecError(str(e)) from None
         self.tier = tier
         self.max_hits = max_hits
+        # Optional tiers.DurabilityManager: owns WAL/snapshot/heartbeat
+        # plumbing; None = the memory-only session this always was.
+        self._durability = durability
+        self._replicas: List[object] = []
+        self._closed = False
         self._next_ticket = 0
         self._flush_count = 0
         # Queues hold the Ticket objects themselves; flush resolves onto
@@ -198,6 +223,7 @@ class Session:
                 f"query() takes a repro.query.plan expression "
                 f"(eq/between/isin/limit/count/min_key/max_key/probe/"
                 f"rank_scan), got {type(expr).__name__}")
+        self._check_open("query")
         t = self._ticket(kind or "query")
         if qplan.expr_size(expr) == 0:
             t._resolve(qplan.empty_result(expr, self.max_hits))
@@ -244,7 +270,15 @@ class Session:
         Sugar for ``query(rank_scan(keys, side))``."""
         return self.query(qplan.rank_scan(keys, side), kind="rank")
 
+    def _check_open(self, op: str) -> None:
+        if self._closed:
+            raise SessionClosedError(
+                f"{op} submitted to a closed session; open a new one "
+                f"(repro.db.open(..., recover=True) resumes a durable "
+                f"store)")
+
     def _check_writable(self, op: str) -> None:
+        self._check_open(op)
         if not self.tier.writable:
             raise ReadOnlyTierError(
                 f"{op} submitted to the read-only '{self.tier.tier}' "
@@ -255,6 +289,61 @@ class Session:
     def pending(self) -> int:
         """Queued (unserved) requests awaiting the next flush."""
         return len(self._reads) + len(self._ins) + len(self._dels)
+
+    # -- lifecycle ------------------------------------------------------------
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    @property
+    def durable(self) -> bool:
+        return self._durability is not None
+
+    def snapshot(self, *, wait: bool = True) -> int:
+        """Persist a consistent snapshot of the tier at the current WAL
+        position (durable sessions only); pending requests are flushed
+        first so the cut covers everything submitted.  Returns the
+        covered WAL sequence number.  ``wait=False`` leaves the write on
+        the checkpoint manager's background thread (joined automatically
+        by the next snapshot or by ``close()``)."""
+        self._check_open("snapshot")
+        if self._durability is None:
+            raise InvalidSpecError(
+                "snapshot() needs a durable session; open with "
+                "IndexSpec(durability='wal' or 'wal+snapshot', "
+                "wal_dir=...)")
+        if self.pending:
+            self.flush()
+        return self._durability.snapshot(self.tier, wait=wait)
+
+    def attach_replicas(self, replica_set) -> None:
+        """Register a ``store.replica.ReplicaSet`` with this session's
+        lifecycle: ``close()`` stops its refresh threads."""
+        self._replicas.append(replica_set)
+
+    def close(self) -> None:
+        """Flush pending tickets, seal the WAL segment, stop replica and
+        heartbeat threads, and mark the session closed.  Idempotent.  A
+        flush failure still closes the session (pending tickets then
+        raise the typed ``SessionClosedError``/``DroppedTicketError``)."""
+        if self._closed:
+            return
+        try:
+            if self.pending:
+                self.flush()
+        finally:
+            self._closed = True
+            for rs in self._replicas:
+                rs.stop()
+            if self._durability is not None:
+                self._durability.close(self.tier)
+
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # -- introspection --------------------------------------------------------
 
@@ -277,6 +366,7 @@ class Session:
         An all-empty flush is a cheap no-op: nothing is planned, compiled
         or dispatched (see tests/test_db.py).
         """
+        self._check_open("flush")
         reads, self._reads = self._reads, []
         ins, self._ins = self._ins, []
         dels, self._dels = self._dels, []
@@ -313,6 +403,16 @@ class Session:
         if compacted:
             self.tier.sync()
         t_compact = time.perf_counter() - t0
+
+        # ---- durability bookkeeping (no-op on memory-only sessions) ----
+        # The WAL records were already fsynced inside tier.apply (before
+        # the dispatch); here the session re-snapshots after an epoch
+        # swap ('wal+snapshot' keeps the replay tail short) and beats
+        # the primary heartbeat with the new WAL position.
+        if self._durability is not None and (n_insert or n_delete):
+            if compacted and self._durability.auto_snapshot:
+                self._durability.snapshot(self.tier)
+            self._durability.beat(self.tier)
 
         # ---- reads: compile every expression onto one plan per class ----
         # Compiled after the writes so a compile error (e.g. mixed key

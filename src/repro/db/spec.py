@@ -29,6 +29,7 @@ from .errors import InvalidSpecError
 
 TIERS = ("static", "live", "sharded")
 BACKENDS = ("tree", "binary", "kernel")
+DURABILITY = ("none", "wal", "wal+snapshot")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,7 +51,16 @@ class IndexSpec:
     ``max_hits``      row-id capacity per range result;
     ``max_imbalance`` sharded skew-rebalance trigger (None disables);
     ``jit``           jit the engine pipelines;
-    ``cache_scope``   executable-cache namespace (see query/engine.py).
+    ``cache_scope``   executable-cache namespace (see query/engine.py);
+    ``durability``    'none' (memory-only, the historical behavior),
+                      'wal' (every write batch fsynced to a write-ahead
+                      log before its device dispatch, one baseline
+                      snapshot at open), or 'wal+snapshot' (also
+                      re-snapshot at every compaction/rebalance so the
+                      replay tail stays short) — live/sharded tiers
+                      only; the static tier has nothing to log;
+    ``wal_dir``       durable-state directory (WAL segments, snapshots,
+                      heartbeats); required when durability != 'none'.
     """
 
     tier: str = "live"
@@ -65,6 +75,8 @@ class IndexSpec:
     max_imbalance: Optional[float] = 2.0
     jit: bool = True
     cache_scope: Optional[str] = None
+    durability: str = "none"
+    wal_dir: Optional[str] = None
 
     def __post_init__(self):
         if self.tier not in TIERS:
@@ -86,6 +98,24 @@ class IndexSpec:
             raise InvalidSpecError(str(e)) from None
         if self.tier == "sharded" and self.shards < 1:
             raise InvalidSpecError("sharded tier needs shards >= 1")
+        if self.durability not in DURABILITY:
+            raise InvalidSpecError(
+                f"unknown durability {self.durability!r}; expected one "
+                f"of {DURABILITY}")
+        if self.durability != "none":
+            if self.wal_dir is None:
+                raise InvalidSpecError(
+                    f"durability={self.durability!r} needs a wal_dir to "
+                    f"write the log and snapshots into")
+            if self.tier == "static":
+                raise InvalidSpecError(
+                    "the static tier takes no writes, so there is "
+                    "nothing to log; use durability='none' (a static "
+                    "index is rebuilt from its source keys)")
+
+    @property
+    def durable(self) -> bool:
+        return self.durability != "none"
 
     # -- mappings onto the underlying configs ---------------------------------
 

@@ -26,25 +26,47 @@ and min/max (endpoint keys) — see ``store/sharded.py``.
 
 ``build_tier`` constructs a tier from an ``IndexSpec``; ``wrap_store``
 adopts an already-built ``LiveIndex``/``ShardedLiveStore`` (the
-compatibility path ``store.LiveFrontend`` rides on).
+compatibility path ``store.LiveFrontend`` rides on — deprecated for
+durable-capable stores, which adopt as memory-only tiers with no
+``wal_dir`` to log into).
+
+Durability (spec ``durability=`` / ``wal_dir=``) also lives at this
+layer: ``DurabilityManager`` owns the wal_dir layout —
+
+    <wal_dir>/wal/...            write-ahead log segments (store/wal.py;
+                                 per-shard subdirs on the sharded tier)
+    <wal_dir>/snapshots/step-*   epoch snapshots via checkpoint/store.py
+    <wal_dir>/primary.hb         the writer's heartbeat beacon
+    <wal_dir>/replicas/*.hb      per-replica beacons (store/replica.py)
+
+— attaches WALs to the store objects, snapshots consistent cuts through
+the async checkpoint manager, prunes covered log segments, and beats the
+primary heartbeat; ``recover_tier`` rebuilds a tier from the newest
+snapshot plus the WAL tail (the recovery = snapshot + replay invariant
+tests/test_wal_recovery.py pins bit-identical).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Protocol, runtime_checkable
+import os
+from typing import List, Optional, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint.store import CheckpointManager
 from repro.core import cgrx
-from repro.core.keys import KeyArray
+from repro.core.deprecation import warn_once
+from repro.core.keys import KeyArray, concat_keys
 from repro.query import BatchResult, QueryPlan, RankEngine
+from repro.runtime.ft import Heartbeat
 from repro.store import metrics as store_metrics
+from repro.store import wal as wal_mod
 from repro.store.live import LiveIndex
 from repro.store.sharded import ShardedLiveStore
 
-from .errors import ReadOnlyTierError
+from .errors import ReadOnlyTierError, RecoveryError
 from .spec import IndexSpec
 
 
@@ -329,10 +351,11 @@ def build_tier(spec: IndexSpec, keys: KeyArray,
     return _TIER_CLASSES[spec.tier].build(spec, keys, row_ids)
 
 
-def wrap_store(store) -> IndexTier:
-    """Adopt an already-built store object as a tier (the compatibility
-    path: ``store.LiveFrontend`` hands its LiveIndex/ShardedLiveStore
-    here).  Duck-typed fallback mirrors the old frontend's contract."""
+def _adopt(store) -> IndexTier:
+    """Adopt an already-built store object as a tier (no deprecation
+    side-channel — the internal path shims like ``store.LiveFrontend``
+    ride; their own deprecation warning already covers the call).
+    Duck-typed fallback mirrors the old frontend's contract."""
     if isinstance(store, ShardedLiveStore):
         return ShardedTier(store)
     if isinstance(store, LiveIndex):
@@ -344,3 +367,295 @@ def wrap_store(store) -> IndexTier:
     if isinstance(store, cgrx.CgrxIndex):
         return StaticTier(store)
     raise TypeError(f"cannot adopt {type(store).__name__} as an IndexTier")
+
+
+def wrap_store(store) -> IndexTier:
+    """Adopt an already-built store object as a tier.
+
+    Deprecated for updatable (durable-capable) stores: a bare-store
+    adoption has no ``wal_dir``, so the resulting tier is memory-only
+    and invisible to recovery — the lifecycle front door is
+    ``repro.db.open(IndexSpec(durability=..., wal_dir=...))``.  Static
+    snapshots adopt without complaint (nothing to log).
+    """
+    if not isinstance(store, cgrx.CgrxIndex) and (
+            isinstance(store, (LiveIndex, ShardedLiveStore))
+            or hasattr(store, "apply")):
+        warn_once(
+            "db.wrap_store",
+            "wrap_store() adoption of an updatable store is deprecated: "
+            "the adopted tier is memory-only (no wal_dir, so nothing is "
+            "logged and recovery cannot see it); open it through "
+            "repro.db.open(IndexSpec(durability='wal'|'wal+snapshot', "
+            "wal_dir=...)) for a durable session")
+    return _adopt(store)
+
+
+# ---------------------------------------------------------------------------
+# Durability: WAL attachment, snapshots, recovery.
+# ---------------------------------------------------------------------------
+
+def _wal_root(spec: IndexSpec) -> str:
+    return os.path.join(spec.wal_dir, "wal")
+
+
+def _shard_wal_dirs(spec: IndexSpec) -> List[str]:
+    return [os.path.join(_wal_root(spec), f"shard-{i:04d}")
+            for i in range(spec.shards)]
+
+
+def _snapshot_dir(spec: IndexSpec) -> str:
+    return os.path.join(spec.wal_dir, "snapshots")
+
+
+def has_durable_state(spec: IndexSpec) -> bool:
+    """True when ``spec.wal_dir`` already holds a recoverable store
+    (i.e. at least one committed snapshot — every durable open writes a
+    baseline snapshot before accepting traffic, so this is the
+    existence test ``repro.db.open`` gates ``recover=`` on)."""
+    d = _snapshot_dir(spec)
+    if not os.path.isdir(d):
+        return False
+    return CheckpointManager(d, keep=2).latest_step() is not None
+
+
+def _keys_from_state(state: dict, prefix: str) -> KeyArray:
+    return KeyArray(state[prefix + "_lo"], state.get(prefix + "_hi"))
+
+
+def _state_and_meta(spec: IndexSpec, tier, seq: int):
+    """One flat dict pytree (the checkpoint payload) + the manifest meta
+    that describes how to rebuild it.  The payload is the LOGICAL live
+    cut (sorted keys/rows per store, splitters for the sharded tier),
+    not the physical slab — restore bulk-loads exactly like an epoch
+    swap, so recovered query results cannot depend on layout."""
+    if tier.tier == "live":
+        keys, rows = tier.live.live_cut()
+        state = {"keys_lo": keys.lo, "rows": rows}
+        if keys.is64:
+            state["keys_hi"] = keys.hi
+        meta = {"kind": "live", "seq": seq, "is64": keys.is64,
+                "epoch": tier.live.epoch,
+                "counters": tier.live.counter_state()}
+    else:
+        store = tier.store
+        sp = store.splitters
+        state = {"splitters_lo": sp.lo}
+        if sp.is64:
+            state["splitters_hi"] = sp.hi
+        cuts = store.shard_cuts()
+        for i, (keys, rows) in enumerate(cuts):
+            state[f"s{i:04d}_keys_lo"] = keys.lo
+            if keys.is64:
+                state[f"s{i:04d}_keys_hi"] = keys.hi
+            state[f"s{i:04d}_rows"] = rows
+        meta = {"kind": "sharded", "seq": seq, "is64": sp.is64,
+                "num_shards": store.num_shards,
+                "epochs": [s.epoch for s in store.shards],
+                "shard_counters": [s.counter_state()
+                                   for s in store.shards],
+                "counters": store.counter_state()}
+    meta["state_keys"] = sorted(state)
+    return state, meta
+
+
+class DurabilityManager:
+    """Owner of one durable store's on-disk lifecycle (see module doc).
+
+    ``attach`` wires WriteAheadLogs onto the tier's store objects (so
+    every ``apply`` hits disk before the device) and starts the primary
+    heartbeat; ``snapshot`` persists a consistent cut through the async
+    checkpoint manager at the current WAL position; ``finish_pending``
+    joins the background write and only THEN prunes the log segments
+    the committed snapshot covers (pruning before the rename would
+    leave a crash window with neither snapshot nor log).
+    """
+
+    def __init__(self, spec: IndexSpec, *, heartbeat_interval: float = 5.0):
+        self.spec = spec
+        self.checkpoints = CheckpointManager(_snapshot_dir(spec), keep=2)
+        self.auto_snapshot = spec.durability == "wal+snapshot"
+        self.heartbeat = Heartbeat(os.path.join(spec.wal_dir, "primary.hb"),
+                                   interval=heartbeat_interval)
+        self._wals: List[wal_mod.WriteAheadLog] = []
+        self._pending_prune: Optional[int] = None
+        self._started = False
+
+    # -- wiring ---------------------------------------------------------------
+
+    def attach(self, tier) -> None:
+        """Attach WALs to the tier's stores (fresh segments — never
+        appends after a possibly-torn tail) and start the beacon."""
+        if tier.tier == "live":
+            tier.live.wal = wal_mod.WriteAheadLog(_wal_root(self.spec))
+            self._wals = [tier.live.wal]
+        elif tier.tier == "sharded":
+            tier.store.wals = [wal_mod.WriteAheadLog(d)
+                               for d in _shard_wal_dirs(self.spec)]
+            self._wals = list(tier.store.wals)
+            tier.store.wal_seq = max(
+                [w.next_seq for w in self._wals], default=0)
+        else:
+            raise RecoveryError(
+                f"tier {tier.tier!r} takes no writes; nothing to attach "
+                f"a WAL to")
+        self.heartbeat.start()
+        self._started = True
+        self.beat(tier)
+
+    def applied_seq(self, tier) -> int:
+        """The next WAL sequence number — every record below it has been
+        applied to the tier (the snapshot/beacon position)."""
+        return (tier.live.wal.next_seq if tier.tier == "live"
+                else tier.store.wal_seq)
+
+    # -- snapshots ------------------------------------------------------------
+
+    def snapshot(self, tier, *, wait: bool = False) -> int:
+        """Persist a consistent cut at the current WAL position via the
+        async checkpoint manager; returns the covered sequence number.
+        The previous snapshot's write is joined first (the manager is
+        single-slot), and the covered log tail is pruned only after its
+        commit (``finish_pending``)."""
+        self.finish_pending()
+        seq = self.applied_seq(tier)
+        state, meta = _state_and_meta(self.spec, tier, seq)
+        try:
+            self.checkpoints.save_async(seq, state, meta)
+        except OSError as e:
+            raise RecoveryError(
+                f"snapshot at seq {seq} failed: {e}") from e
+        self._pending_prune = seq
+        if wait:
+            self.finish_pending()
+        return seq
+
+    def finish_pending(self) -> None:
+        """Join the in-flight snapshot write, then prune WAL segments it
+        made redundant (every record with seq < the snapshot's)."""
+        self.checkpoints.wait()
+        if self._pending_prune is not None:
+            for w in self._wals:
+                w.prune(self._pending_prune - 1)
+            self._pending_prune = None
+
+    # -- heartbeat ------------------------------------------------------------
+
+    def beat(self, tier) -> None:
+        """Publish the primary's WAL position + epoch (one beat per
+        flush; replicas measure lag against this beacon)."""
+        seq = self.applied_seq(tier)
+        self.heartbeat.write_now(step=seq,
+                                 payload={"seq": seq, "epoch": tier.epoch})
+
+    # -- teardown -------------------------------------------------------------
+
+    def close(self, tier) -> None:
+        """Session-close contract: join the pending snapshot, seal every
+        WAL segment (fsynced), publish a final beat, stop the beacon."""
+        self.finish_pending()
+        for w in self._wals:
+            w.seal()
+        if self._started:
+            self.beat(tier)
+            self.heartbeat.stop()
+            self._started = False
+
+
+def recover_tier(spec: IndexSpec):
+    """Rebuild the tier ``spec`` describes from its ``wal_dir``: restore
+    the newest committed snapshot, then replay the WAL tail (records at
+    or past the snapshot's sequence number) through the same
+    apply-then-policy step a session flush runs, so the recovered store
+    answers bit-identically to the uncrashed one.
+
+    Returns ``(tier, applied_seq)``.  The tier comes back WITHOUT a WAL
+    attached — the writer path (``repro.db.open(recover=True)``)
+    attaches fresh segments afterwards; replicas (store/replica.py) call
+    this repeatedly and never attach.
+    """
+    ckpt = CheckpointManager(_snapshot_dir(spec), keep=2)
+    step = ckpt.latest_step()
+    if step is None:
+        raise RecoveryError(
+            f"no snapshot to recover from in {spec.wal_dir!r} (pass "
+            f"keys= to repro.db.open to initialize a fresh store)")
+    try:
+        manifest = ckpt.read_manifest(step)
+        meta = manifest["meta"]
+        state, _ = ckpt.restore(step, {k: 0 for k in meta["state_keys"]})
+    except (OSError, ValueError, KeyError) as e:
+        raise RecoveryError(
+            f"snapshot step {step} in {spec.wal_dir!r} is unreadable: "
+            f"{e}") from e
+    if meta["kind"] != spec.tier:
+        raise RecoveryError(
+            f"snapshot in {spec.wal_dir!r} holds a {meta['kind']!r} "
+            f"store but the spec says tier={spec.tier!r}")
+    seq = int(meta["seq"])
+
+    if spec.tier == "live":
+        live = LiveIndex.from_cut(
+            _keys_from_state(state, "keys"), state["rows"],
+            spec.to_live_config(), epoch=int(meta["epoch"]),
+            counters=meta["counters"])
+        tier = LiveTier(live)
+        try:
+            records, _ = wal_mod.read_records(_wal_root(spec), seq)
+        except wal_mod.WalError as e:
+            raise RecoveryError(f"WAL in {spec.wal_dir!r} is corrupt: "
+                                f"{e}") from e
+        for rec in records:
+            live.apply(rec.ins_keys(), rec.ins_row_array(),
+                       rec.del_keys(), auto_compact=False)
+            if spec.auto_compact:
+                live.maybe_compact()
+            seq = rec.seq + 1
+        return tier, seq
+
+    num_shards = int(meta["num_shards"])
+    if num_shards != spec.shards:
+        raise RecoveryError(
+            f"snapshot in {spec.wal_dir!r} has {num_shards} shards but "
+            f"the spec says shards={spec.shards}")
+    cuts = [(_keys_from_state(state, f"s{i:04d}_keys"),
+             state[f"s{i:04d}_rows"]) for i in range(num_shards)]
+    store = ShardedLiveStore.from_cuts(
+        cuts, _keys_from_state(state, "splitters"),
+        spec.to_sharded_config(),
+        epochs=[int(e) for e in meta["epochs"]],
+        shard_counters=meta["shard_counters"],
+        counters=meta["counters"])
+    tier = ShardedTier(store)
+    try:
+        groups = wal_mod.read_groups(_shard_wal_dirs(spec), seq)
+    except wal_mod.WalError as e:
+        raise RecoveryError(f"WAL in {spec.wal_dir!r} is corrupt: "
+                            f"{e}") from e
+    for parts in groups:
+        # Re-assemble the store-level batch and route it afresh: the
+        # snapshot's splitters evolve deterministically under replay
+        # (rebalance triggers on live counts, which the log reproduces),
+        # so routing lands where the original run put things.
+        ins_k = [r.ins_keys() for _, r in parts if r.n_ins]
+        ins_r = [r.ins_row_array() for _, r in parts if r.n_ins]
+        del_k = [r.del_keys() for _, r in parts if r.n_del]
+        store.apply(
+            _concat_keys_list(ins_k),
+            jnp.concatenate(ins_r) if ins_r else None,
+            _concat_keys_list(del_k),
+            auto_compact=False)
+        if spec.auto_compact:
+            store.maybe_compact()
+        seq = parts[0][1].seq + 1
+    store.wal_seq = seq
+    return tier, seq
+
+
+def _concat_keys_list(parts: List[KeyArray]) -> Optional[KeyArray]:
+    if not parts:
+        return None
+    out = parts[0]
+    for p in parts[1:]:
+        out = concat_keys(out, p)
+    return out

@@ -37,15 +37,35 @@ import numpy as np
 
 
 class Heartbeat:
+    """Liveness + progress beacon (see module doc).
+
+    Beyond the training-loop ``step``, a beat can carry an arbitrary
+    JSON-able ``payload`` — the durable serving tier publishes its WAL
+    sequence number and epoch this way, so replicas measure their lag
+    against the primary's beacon instead of scraping its WAL directory
+    (store/replica.py).
+    """
+
     def __init__(self, path: str, interval: float = 5.0):
         self.path = path
         self.interval = interval
         self._stop = threading.Event()
         self._step = 0
+        self._payload: dict = {}
         self._thread: Optional[threading.Thread] = None
 
-    def update(self, step: int) -> None:
+    def update(self, step: int, payload: Optional[dict] = None) -> None:
         self._step = step
+        if payload is not None:
+            self._payload = dict(payload)
+
+    def write_now(self, step: Optional[int] = None,
+                  payload: Optional[dict] = None) -> None:
+        """Update and write one beat synchronously (no thread needed):
+        the durable session beats once per flush rather than on a timer,
+        so a replica's staleness view is at most one flush behind."""
+        self.update(self._step if step is None else step, payload)
+        self._write()
 
     def start(self) -> "Heartbeat":
         def run():
@@ -59,7 +79,8 @@ class Heartbeat:
     def _write(self) -> None:
         tmp = self.path + ".tmp"
         with open(tmp, "w") as f:
-            json.dump({"step": self._step, "time": time.time()}, f)
+            json.dump({"step": self._step, "time": time.time(),
+                       **self._payload}, f)
         os.replace(tmp, self.path)
 
     def stop(self) -> None:
@@ -68,13 +89,19 @@ class Heartbeat:
             self._thread.join(timeout=2 * self.interval)
 
     @staticmethod
-    def is_alive(path: str, stale_after: float) -> bool:
+    def read(path: str) -> Optional[dict]:
+        """The last written beat (step/time/payload), or None when the
+        beacon is missing or mid-replace garbage."""
         try:
             with open(path) as f:
-                hb = json.load(f)
-            return (time.time() - hb["time"]) < stale_after
+                return json.load(f)
         except (OSError, ValueError):
-            return False
+            return None
+
+    @staticmethod
+    def is_alive(path: str, stale_after: float) -> bool:
+        hb = Heartbeat.read(path)
+        return hb is not None and (time.time() - hb["time"]) < stale_after
 
 
 class StragglerMonitor:

@@ -99,6 +99,17 @@ class Engine:
             t += 1
         return {r.req_id: r.generated for r in self._done}
 
+    def close(self) -> None:
+        """Tear down the engine: close the paged cache's page-table
+        session (flushes its pending tickets).  Idempotent."""
+        self.cache.close()
+
+    def __enter__(self) -> "Engine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
     # -- internals ------------------------------------------------------------
 
     _done: List[Request] = []

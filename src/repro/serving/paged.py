@@ -69,6 +69,18 @@ class PagedKVCache:
     def num_layers(self) -> int:
         return self.k_pages.shape[0]
 
+    def close(self) -> None:
+        """Release the page-table session (flushes pending tickets; part
+        of the db lifecycle contract).  Idempotent; the engine calls it
+        on teardown."""
+        self.table.close()
+
+    def __enter__(self) -> "PagedKVCache":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
 
 def create(num_layers: int, num_pages: int, page_size: int, kv_heads: int,
            head_dim: int, dtype=jnp.bfloat16, node_cap: int = 32

@@ -20,7 +20,14 @@ turns them into one long-lived, updatable, queryable index:
 ``sharded``     ``ShardedLiveStore`` — the range-partitioned serving
                 tier: splitter-routed LiveIndex shards, cross-shard range
                 decomposition + rank-offset merge, per-shard compaction
-                and the skew-triggered splitter rebalance.
+                and the skew-triggered splitter rebalance;
+``wal``         segmented write-ahead log of ``apply_batch`` inputs —
+                append + fsync BEFORE the device dispatch; the recovery
+                primitive behind ``IndexSpec(durability=...)``;
+``replica``     ``ReadReplica``/``ReplicaSet`` — epoch-lagged read
+                replicas rebuilt from the same snapshot + WAL stream,
+                with heartbeat staleness tracking and straggler-driven
+                failover (``runtime/ft.py``).
 
 See docs/ARCHITECTURE.md ("Live store", "Sharded serving tier") for the
 epoch and routing diagrams.
@@ -29,7 +36,9 @@ from .compaction import CompactionPolicy, CompactionTask, should_compact
 from .frontend import LiveFrontend, TickReport
 from .live import LiveConfig, LiveIndex, NodeIndexView
 from .metrics import LiveStats, ShardedStats, collect, collect_sharded
+from .replica import ReadReplica, ReplicaSet
 from .sharded import ShardedConfig, ShardedLiveStore
+from .wal import WalCorruptError, WalError, WalRecord, WriteAheadLog
 
 __all__ = [
     "CompactionPolicy",
@@ -39,10 +48,16 @@ __all__ = [
     "LiveIndex",
     "LiveStats",
     "NodeIndexView",
+    "ReadReplica",
+    "ReplicaSet",
     "ShardedConfig",
     "ShardedLiveStore",
     "ShardedStats",
     "TickReport",
+    "WalCorruptError",
+    "WalError",
+    "WalRecord",
+    "WriteAheadLog",
     "collect",
     "collect_sharded",
     "should_compact",

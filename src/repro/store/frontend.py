@@ -62,10 +62,14 @@ class LiveFrontend:
                   "(repro.db.open) batch mixed traffic per flush() "
                   "natively — see the migration table in README.md")
         from repro import db  # deferred: store is imported by repro.db
+        from repro.db import tiers as db_tiers
 
         self.live = live
         self.max_hits = max_hits
-        tier = db.wrap_store(live)
+        # The internal adopt path: wrap_store() now warns for bare
+        # updatable stores, and this shim's own deprecation warning
+        # already covers the call (one warning per construction).
+        tier = db_tiers._adopt(live)
         # Historical tick contract: the policy step runs on every tick
         # with writes, regardless of the store's own auto_compact knob
         # (which only governed direct apply() calls).

@@ -231,6 +231,11 @@ class LiveIndex:
         self.deletes = 0
         self.deletes_since_compact = 0
         self.compactions = 0
+        # Durability hook: when a WriteAheadLog (store/wal.py) is
+        # attached, every apply() is appended + fsynced to it BEFORE the
+        # device dispatch runs (db/tiers.py attaches it; None = the
+        # memory-only store this module always was).
+        self.wal = None
         self._task: Optional[CompactionTask] = None
         self._view: Optional[NodeIndexView] = None
         self._engine: Optional[RankEngine] = None
@@ -252,6 +257,39 @@ class LiveIndex:
         snapshot = cgrx.build(keys, row_ids, cfg.snapshot_bucket_size,
                               presorted=True)
         return cls(store, snapshot, cfg)
+
+    # -- durable cut / restore ------------------------------------------------
+
+    def live_cut(self) -> Tuple[KeyArray, jnp.ndarray]:
+        """A consistent sorted cut of the live set (keys, rows) — the
+        snapshot payload.  The cut is the LOGICAL state: persisting it
+        instead of the physical slab keeps snapshots layout-independent
+        (a restore bulk-loads fresh flat chains), exactly how an epoch
+        swap already rebuilds, so query results cannot drift."""
+        skeys, srows, n_live = nodes.extract(self.store)
+        return skeys[:n_live], srows[:n_live]
+
+    @classmethod
+    def from_cut(cls, keys: KeyArray, rows: jnp.ndarray,
+                 config: Optional[LiveConfig] = None, *, epoch: int = 0,
+                 counters: Optional[dict] = None) -> "LiveIndex":
+        """Rebuild a store from a persisted ``live_cut`` (already
+        sorted).  ``counters`` restores the update-traffic counters so
+        stats continuity and compaction pressure survive recovery."""
+        live = cls.build(keys, rows, config, presorted=True)
+        live.epoch = epoch
+        for name in ("applies", "inserts", "deletes",
+                     "deletes_since_compact", "compactions"):
+            if counters and name in counters:
+                setattr(live, name, int(counters[name]))
+        return live
+
+    def counter_state(self) -> dict:
+        """The counters ``from_cut`` restores (snapshot meta payload)."""
+        return {"applies": self.applies, "inserts": self.inserts,
+                "deletes": self.deletes,
+                "deletes_since_compact": self.deletes_since_compact,
+                "compactions": self.compactions}
 
     # -- engine plumbing ------------------------------------------------------
 
@@ -335,6 +373,10 @@ class LiveIndex:
         batch and insert in the next.  Returns the firing compaction
         trigger's name when the policy compacted, else None.
         """
+        if self.wal is not None:
+            # Durability point: the batch is on disk before any device
+            # state changes, so a crash at ANY later point replays it.
+            self.wal.append(ins_keys, ins_rows, del_keys, epoch=self.epoch)
         self.store = nodes.apply_batch(self.store, ins_keys, ins_rows,
                                        del_keys)
         self._invalidate()

@@ -1,0 +1,271 @@
+"""Epoch-lagged read replicas over a durable store's snapshot stream.
+
+The durable serving design (db/tiers.py) makes the primary's whole state
+reconstructible from ``wal_dir`` — newest snapshot + WAL tail — and that
+recovery path is exactly a replica's refresh: a ``ReadReplica`` runs
+``repro.db.recover_tier`` against the same directory and swaps the
+rebuilt tier in atomically (Python reference assignment), so readers on
+the old tier finish undisturbed while the next read serves the newer
+epoch.  Replicas never attach a WAL, never write snapshots, and never
+mutate ``wal_dir`` beyond their own heartbeat beacon — the primary can't
+tell they exist, which is what makes "feed the same snapshot stream to
+replicas" a zero-cost fan-out on the write path.
+
+``ReplicaSet`` is the serving façade: reads go to the freshest member
+(the newest applied WAL position), a ``refresh()`` catches up the MOST
+LAGGED follower first (so the serving member stays stable while a
+follower rebuilds — the epoch-lagged contract), and failover is driven
+by ``runtime/ft.py`` primitives:
+
+  * every member writes a ``Heartbeat`` beacon (``replicas/<name>.hb``)
+    with its applied seq/epoch; the primary's ``primary.hb`` beacon is
+    the staleness reference;
+  * a ``StragglerMonitor`` over refresh durations flags members whose
+    rebuild blew past the fleet's EMA — flagged members are skipped by
+    ``serving()`` until a healthy refresh clears them;
+  * when no member is fresh enough (or all are flagged/failed), reads
+    raise ``repro.db.StaleReplicaError`` with the epoch/seq lag
+    attached, so the caller can retry, relax, or alert.
+
+Consistency: a refresh mid-write is safe by construction — snapshots
+commit atomically (rename + dir fsync), and a torn WAL record or
+incomplete per-shard group at the log tail is dropped by the reader
+(store/wal.py), which only ever makes the replica one apply MORE stale.
+
+``repro.db`` is imported lazily inside methods: this module sits in the
+store layer, which the db layer imports.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+from typing import List, Optional
+
+import jax.numpy as jnp
+
+from repro.core.keys import KeyArray
+from repro.query import QueryBatch
+from repro.runtime.ft import Heartbeat, StragglerMonitor
+
+
+class ReadReplica:
+    """One follower: a locally rebuilt tier + a heartbeat beacon."""
+
+    def __init__(self, spec, name: str = "replica-0"):
+        if not getattr(spec, "durable", False):
+            from repro.db.errors import InvalidSpecError
+            raise InvalidSpecError(
+                "a replica follows a durable store; the spec needs "
+                "durability='wal'|'wal+snapshot' and a wal_dir")
+        self.spec = spec
+        self.name = name
+        self.tier = None               # set by the first refresh()
+        self.applied_seq = -1
+        self.last_error: Optional[Exception] = None
+        hb_dir = os.path.join(spec.wal_dir, "replicas")
+        os.makedirs(hb_dir, exist_ok=True)
+        self.heartbeat = Heartbeat(os.path.join(hb_dir, f"{name}.hb"))
+
+    @property
+    def epoch(self) -> int:
+        return self.tier.epoch if self.tier is not None else -1
+
+    def refresh(self) -> float:
+        """Catch up to the primary's durable state (snapshot + WAL
+        tail), swap the tier atomically, beat the beacon.  Returns the
+        rebuild wall time (the straggler monitor's input).  On failure
+        the OLD tier keeps serving and the error is kept on
+        ``last_error`` (and re-raised)."""
+        from repro.db.tiers import recover_tier
+
+        t0 = time.perf_counter()
+        try:
+            tier, seq = recover_tier(self.spec)
+        except Exception as e:
+            self.last_error = e
+            raise
+        self.tier = tier               # atomic swap: readers see old or new
+        self.applied_seq = seq
+        self.last_error = None
+        self.heartbeat.write_now(
+            step=seq, payload={"seq": seq, "epoch": tier.epoch})
+        return time.perf_counter() - t0
+
+    # -- reads (served from this replica's applied epoch) ---------------------
+
+    def execute(self, plan):
+        if self.tier is None:
+            from repro.db.errors import StaleReplicaError
+            raise StaleReplicaError(
+                f"replica {self.name!r} has not refreshed yet")
+        return self.tier.execute(plan)
+
+    def lookup(self, queries: KeyArray):
+        plan = QueryBatch().add_points(queries).plan()
+        return self.execute(plan).points
+
+    def range_lookup(self, lo: KeyArray, hi: KeyArray, max_hits: int = 64):
+        plan = QueryBatch().add_ranges(lo, hi).plan(max_hits=max_hits)
+        return self.execute(plan).ranges
+
+    def scan_ranks(self, queries: KeyArray, sides: jnp.ndarray):
+        if self.tier is None:
+            from repro.db.errors import StaleReplicaError
+            raise StaleReplicaError(
+                f"replica {self.name!r} has not refreshed yet")
+        return self.tier.scan_ranks(queries, sides)
+
+
+class ReplicaSet:
+    """N read replicas behind one serving surface (see module doc).
+
+    Usage::
+
+        rs = ReplicaSet(spec, n=2)
+        rs.refresh_all()                     # initial catch-up
+        res = rs.lookup(keys)                # freshest member serves
+        rs.refresh()                         # most-lagged follower next
+        lag = rs.staleness()                 # {'seq_lag', 'epoch_lag', ...}
+        rs.start(interval=0.5); ...; rs.stop()   # background refresher
+
+    ``max_seq_lag`` (optional) bounds how far behind the primary's
+    beacon the serving member may be before reads fail over — and, with
+    every member past it, raise ``StaleReplicaError``.
+    """
+
+    def __init__(self, spec, n: int = 2, *,
+                 max_seq_lag: Optional[int] = None,
+                 straggler_threshold: float = 3.0):
+        self.spec = spec
+        self.replicas: List[ReadReplica] = [
+            ReadReplica(spec, f"replica-{i}") for i in range(n)]
+        self.suspect: set = set()
+        self.monitor = StragglerMonitor(
+            threshold=straggler_threshold,
+            on_straggler=lambda step, dur, ema: None)
+        self.max_seq_lag = max_seq_lag
+        self._refreshes = 0
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+
+    # -- refresh orchestration ------------------------------------------------
+
+    def _record(self, replica: ReadReplica, duration: float) -> None:
+        if self.monitor.record(self._refreshes, duration):
+            self.suspect.add(replica.name)     # skipped until healthy
+        else:
+            self.suspect.discard(replica.name)
+        self._refreshes += 1
+
+    def refresh(self) -> Optional[str]:
+        """Refresh the MOST LAGGED member (the epoch-lagged contract:
+        the freshest member keeps serving while a follower rebuilds).
+        Returns the refreshed member's name, or None when every refresh
+        attempt failed."""
+        order = sorted(self.replicas, key=lambda r: r.applied_seq)
+        for replica in order:
+            try:
+                self._record(replica, replica.refresh())
+                return replica.name
+            except Exception:
+                self.suspect.add(replica.name)
+        return None
+
+    def refresh_all(self) -> None:
+        for replica in self.replicas:
+            self._record(replica, replica.refresh())
+
+    # -- failover / staleness -------------------------------------------------
+
+    def primary_state(self) -> Optional[dict]:
+        """The primary's last-published beacon ({'seq', 'epoch', ...}),
+        or None when it is missing/unreadable."""
+        return Heartbeat.read(
+            os.path.join(self.spec.wal_dir, "primary.hb"))
+
+    def serving(self) -> ReadReplica:
+        """The freshest healthy member; raises ``StaleReplicaError``
+        (with epoch/seq lag attached) when none qualifies."""
+        from repro.db.errors import StaleReplicaError
+
+        primary = self.primary_state()
+        live = [r for r in self.replicas
+                if r.tier is not None and r.name not in self.suspect]
+        if self.max_seq_lag is not None and primary is not None:
+            fresh = [r for r in live if (primary["seq"] - r.applied_seq)
+                     <= self.max_seq_lag]
+        else:
+            fresh = live
+        if fresh:
+            return max(fresh, key=lambda r: (r.applied_seq, r.epoch))
+        best = max(self.replicas, key=lambda r: r.applied_seq)
+        seq_lag = (primary["seq"] - best.applied_seq) if primary else None
+        epoch_lag = (primary["epoch"] - best.epoch) if primary else None
+        raise StaleReplicaError(
+            f"no replica is servable: best member {best.name!r} is "
+            f"{seq_lag if seq_lag is not None else 'unknown'} WAL "
+            f"records behind the primary "
+            f"({len(self.suspect)} flagged as stragglers/failed)",
+            epoch_lag=epoch_lag, seq_lag=seq_lag)
+
+    def staleness(self) -> dict:
+        """Lag of the would-be serving member vs the primary beacon."""
+        primary = self.primary_state()
+        best = max(self.replicas, key=lambda r: r.applied_seq)
+        return {
+            "replica": best.name,
+            "applied_seq": best.applied_seq,
+            "epoch": best.epoch,
+            "primary_seq": primary["seq"] if primary else None,
+            "seq_lag": (primary["seq"] - best.applied_seq)
+            if primary else None,
+            "epoch_lag": (primary["epoch"] - best.epoch)
+            if primary else None,
+        }
+
+    # -- reads (delegate to the serving member) -------------------------------
+
+    def execute(self, plan):
+        return self.serving().execute(plan)
+
+    def lookup(self, queries: KeyArray):
+        return self.serving().lookup(queries)
+
+    def range_lookup(self, lo: KeyArray, hi: KeyArray, max_hits: int = 64):
+        return self.serving().range_lookup(lo, hi, max_hits)
+
+    def scan_ranks(self, queries: KeyArray, sides: jnp.ndarray):
+        return self.serving().scan_ranks(queries, sides)
+
+    # -- background refresher -------------------------------------------------
+
+    def start(self, interval: float = 5.0) -> "ReplicaSet":
+        """Refresh the most-lagged follower every ``interval`` seconds
+        on a daemon thread (stop() — or the owning session's close() —
+        joins it)."""
+        if self._thread is not None:
+            return self
+        self._stop.clear()
+
+        def run():
+            while not self._stop.wait(interval):
+                try:
+                    self.refresh()
+                except Exception:                      # noqa: BLE001
+                    pass                               # kept on last_error
+        self._thread = threading.Thread(target=run, daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=10.0)
+            self._thread = None
+
+    def __enter__(self) -> "ReplicaSet":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()

@@ -116,6 +116,13 @@ class ShardedLiveStore:
         self.applies = 0
         self.inserts = 0
         self.deletes = 0
+        # Durability hook (db/tiers.py attaches): one WriteAheadLog per
+        # shard, written pre-routed — ``wal_seq`` numbers STORE-level
+        # applies, and the per-shard records of one apply share that seq
+        # with (part, nparts) markers so recovery can tell a complete
+        # group from one torn by a crash mid-fsync-set (store/wal.py).
+        self.wals = None
+        self.wal_seq = 0
         self._counts: Optional[np.ndarray] = None
 
     # -- construction ---------------------------------------------------------
@@ -137,6 +144,45 @@ class ShardedLiveStore:
         splitters = compute_splitters(keys, cfg.num_shards)
         shards = _load_shards(keys, row_ids, cfg)
         return cls(shards, splitters, cfg)
+
+    # -- durable cut / restore ------------------------------------------------
+
+    def shard_cuts(self) -> List[Tuple[KeyArray, jnp.ndarray]]:
+        """One consistent sorted (keys, rows) cut per shard, in shard
+        order — the snapshot payload.  Persisted together with the
+        splitters so a restore reconstructs the SAME partitioning the
+        per-shard WAL records were routed under."""
+        return [s.live_cut() for s in self.shards]
+
+    @classmethod
+    def from_cuts(cls, cuts: List[Tuple[KeyArray, jnp.ndarray]],
+                  splitters: KeyArray,
+                  config: Optional[ShardedConfig] = None, *,
+                  epochs: Optional[List[int]] = None,
+                  shard_counters: Optional[List[dict]] = None,
+                  counters: Optional[dict] = None) -> "ShardedLiveStore":
+        """Rebuild a sharded store from persisted ``shard_cuts`` plus
+        the manifest's splitters — recovery re-derives ownership from
+        the snapshot rather than re-partitioning, so pre-routed WAL
+        tails replay onto the shards that logged them."""
+        cfg = config or ShardedConfig()
+        live_cfg = dataclasses.replace(
+            cfg.live, cache_scope=cfg.live.cache_scope or cfg.cache_scope)
+        shards = [
+            LiveIndex.from_cut(
+                k, r, live_cfg,
+                epoch=epochs[i] if epochs else 0,
+                counters=shard_counters[i] if shard_counters else None)
+            for i, (k, r) in enumerate(cuts)]
+        store = cls(shards, splitters, cfg)
+        for name in ("rebalances", "applies", "inserts", "deletes"):
+            if counters and name in counters:
+                setattr(store, name, int(counters[name]))
+        return store
+
+    def counter_state(self) -> dict:
+        return {"rebalances": self.rebalances, "applies": self.applies,
+                "inserts": self.inserts, "deletes": self.deletes}
 
     @property
     def num_shards(self) -> int:
@@ -289,12 +335,29 @@ class ShardedLiveStore:
             owner_d = self.route(del_keys) if n_del else np.zeros(0, np.int32)
             if n_ins and ins_rows is not None:
                 ins_rows = jnp.asarray(ins_rows, jnp.int32)
-            for s, shard in enumerate(self.shards):
+            parts = []
+            for s in range(self.num_shards):
                 i_idx = np.nonzero(owner_i == s)[0]
                 d_idx = np.nonzero(owner_d == s)[0]
-                if not len(i_idx) and not len(d_idx):
-                    continue
-                shard.apply(
+                if len(i_idx) or len(d_idx):
+                    parts.append((s, i_idx, d_idx))
+            if self.wals is not None:
+                # Durability point: every touched shard's slice is on
+                # disk (one fsync per touched log) before ANY shard's
+                # device dispatch runs; the shared seq + (part, nparts)
+                # markers make the group the atomic replay unit.
+                for part, (s, i_idx, d_idx) in enumerate(parts):
+                    self.wals[s].append(
+                        ins_keys[i_idx] if len(i_idx) else None,
+                        ins_rows[i_idx] if len(i_idx) else None,
+                        del_keys[d_idx] if len(d_idx) else None,
+                        epoch=self.shards[s].epoch, seq=self.wal_seq,
+                        part=part, nparts=len(parts), sync=False)
+                for s, _, _ in parts:
+                    self.wals[s].sync()
+                self.wal_seq += 1
+            for s, i_idx, d_idx in parts:
+                self.shards[s].apply(
                     ins_keys[i_idx] if len(i_idx) else None,
                     ins_rows[i_idx] if len(i_idx) else None,
                     del_keys[d_idx] if len(d_idx) else None,

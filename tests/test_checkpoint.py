@@ -72,6 +72,34 @@ def test_async_save(tmp_path):
     assert mgr.latest_step() == 5
 
 
+def test_manifest_gates_all_steps(tmp_path):
+    """A step directory is committed only once its manifest exists: a
+    crash window between the tmp->step rename becoming visible and the
+    manifest write (or a manually damaged step) must stay invisible to
+    ``all_steps``/``latest_step`` instead of being offered for restore."""
+    d = str(tmp_path / "ck")
+    mgr = CheckpointManager(d, keep=4)
+    tree = {"a": jnp.arange(4)}
+    mgr.save(1, tree)
+    mgr.save(2, tree)
+    assert mgr.all_steps() == [1, 2]
+    os.remove(os.path.join(d, "step-0000000002", "manifest.json"))
+    assert mgr.all_steps() == [1]
+    assert mgr.latest_step() == 1
+    # A bare directory (rename landed, nothing inside) is also invisible.
+    os.makedirs(os.path.join(d, "step-0000000007"))
+    assert mgr.all_steps() == [1]
+
+
+def test_read_manifest_round_trip(tmp_path):
+    d = str(tmp_path / "ck")
+    mgr = CheckpointManager(d)
+    mgr.save(3, {"a": jnp.arange(2)}, {"kind": "live", "seq": 9})
+    manifest = mgr.read_manifest(3)
+    assert manifest["step"] == 3
+    assert manifest["meta"] == {"kind": "live", "seq": 9}
+
+
 def test_elastic_reshard(tmp_path):
     """Checkpoint written unsharded restores onto a different layout
     (simulated by restoring with explicit device_put shardings)."""

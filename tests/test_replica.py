@@ -1,0 +1,146 @@
+"""Epoch-lagged read replicas: refresh, staleness, failover.
+
+A replica is recovery-as-a-service: ``ReadReplica.refresh`` runs the
+same snapshot + WAL-tail rebuild as crash recovery against the primary's
+``wal_dir`` and swaps the tier atomically.  So the acceptance property
+mirrors test_wal_recovery: a refreshed replica answers bit-identically
+to the primary at the WAL position it caught up to, while the primary
+keeps writing ahead of it (the epoch-lagged contract); staleness is
+measured against the primary's heartbeat beacon, and reads fail over
+to the freshest healthy member or raise ``StaleReplicaError`` with the
+lag attached.
+"""
+import numpy as np
+import pytest
+
+import repro.db as db
+from repro.store import ReadReplica, ReplicaSet
+
+POLICY = db.CompactionPolicy(max_chain=4)
+
+
+def mk(raw):
+    return db.as_key_array(np.asarray(raw, dtype=np.uint64))
+
+
+def durable_session(tmp_path, tier="live", **kw):
+    spec = db.IndexSpec(tier=tier, durability="wal",
+                        wal_dir=str(tmp_path / "primary"),
+                        node_cap=16, policy=POLICY, max_hits=32, **kw)
+    raw = np.arange(1, 513, dtype=np.uint64) * 9
+    return db.open(spec, mk(raw)), spec, raw
+
+
+def assert_matches_primary(replica_like, sess, probes):
+    got = replica_like.lookup(probes)
+    want = sess.lookup(probes).result()
+    for f in ("found", "row_id", "position"):
+        assert (np.asarray(getattr(got, f))
+                == np.asarray(getattr(want, f))).all(), f
+
+
+def test_replica_requires_durable_spec():
+    with pytest.raises(db.InvalidSpecError):
+        ReadReplica(db.IndexSpec(tier="live"))
+
+
+def test_unrefreshed_replica_raises_stale(tmp_path):
+    # Reads before any refresh have nothing to serve.
+    spec = db.IndexSpec(tier="live", durability="wal",
+                        wal_dir=str(tmp_path / "d"))
+    r = ReadReplica(spec)
+    with pytest.raises(db.StaleReplicaError):
+        r.lookup(mk([1]))
+
+
+def test_replica_serves_primary_state_and_tracks_lag(tmp_path):
+    sess, spec, raw = durable_session(tmp_path)
+    try:
+        probes = mk(np.concatenate([raw[:32], raw[:8] + 1]))
+        replica = ReadReplica(spec, "replica-0")
+        replica.refresh()
+        assert_matches_primary(replica, sess, probes)
+
+        # Primary writes ahead: replica stays consistent at its OLD
+        # position (epoch-lagged), the beacon shows the lag, a refresh
+        # catches up.
+        new = np.arange(10_000, 10_064, dtype=np.uint64)
+        sess.insert(mk(new), np.arange(64, dtype=np.int32))
+        sess.delete(mk(raw[:16]))
+        sess.flush()
+        assert not bool(
+            np.asarray(replica.lookup(mk(new[:4])).found).any())
+        rs = ReplicaSet(spec, n=2, straggler_threshold=1e9)
+        rs.refresh_all()
+        lag = rs.staleness()
+        assert lag["seq_lag"] == 0 and lag["epoch_lag"] == 0
+        assert_matches_primary(rs, sess, mk(np.concatenate([new, raw[:32]])))
+    finally:
+        sess.close()
+
+
+def test_failover_and_stale_error_carry_lag(tmp_path):
+    sess, spec, raw = durable_session(tmp_path)
+    try:
+        # A huge straggler threshold keeps refresh-duration noise (JIT
+        # compiles) from flagging members; failover is forced by hand.
+        rs = ReplicaSet(spec, n=2, max_seq_lag=0,
+                        straggler_threshold=1e9)
+        rs.refresh_all()
+        assert rs.serving().name in ("replica-0", "replica-1")
+
+        # Flag the freshest member a straggler: reads fail over.
+        stuck = rs.serving().name
+        rs.suspect.add(stuck)
+        other = rs.serving().name
+        assert other != stuck
+
+        # Primary advances; with max_seq_lag=0 nobody qualifies.
+        sess.insert(mk([99_991]), np.array([7], np.int32))
+        sess.flush()
+        rs.suspect.clear()
+        with pytest.raises(db.StaleReplicaError) as ei:
+            rs.serving()
+        assert ei.value.seq_lag >= 1
+        assert ei.value.epoch_lag is not None
+
+        # One refresh (most-lagged first) restores service.
+        assert rs.refresh() is not None
+        assert rs.refresh() is not None
+        assert bool(np.asarray(
+            rs.lookup(mk([99_991])).found).all())
+    finally:
+        sess.close()
+
+
+def test_session_close_stops_attached_replica_threads(tmp_path):
+    sess, spec, raw = durable_session(tmp_path)
+    rs = ReplicaSet(spec, n=1)
+    rs.refresh_all()
+    rs.start(interval=30.0)
+    sess.attach_replicas(rs)
+    assert rs._thread is not None
+    sess.close()
+    assert rs._thread is None
+
+
+def test_sharded_replica_round_trip(tmp_path):
+    sess, spec, raw = durable_session(tmp_path, tier="sharded", shards=4)
+    try:
+        new = np.arange(70_000, 70_128, dtype=np.uint64)
+        sess.insert(mk(new), np.arange(128, dtype=np.int32))
+        sess.delete(mk(raw[:32]))
+        sess.flush()
+        replica = ReadReplica(spec, "r0")
+        replica.refresh()
+        probes = mk(np.concatenate([new, raw[:64]]))
+        assert_matches_primary(replica, sess, probes)
+        # Ranges and rank scans serve from the replica's epoch too.
+        lo, hi = mk(raw[100:110]), mk(raw[200:210])
+        g = replica.range_lookup(lo, hi, max_hits=32)
+        w = sess.range(lo, hi).result()
+        for f in ("start", "count", "row_ids"):
+            assert (np.asarray(getattr(g, f))
+                    == np.asarray(getattr(w, f))).all(), f
+    finally:
+        sess.close()

@@ -1,0 +1,176 @@
+"""Session lifecycle: close()/context-manager contract, typed errors,
+and the durable-open front door (repro.db.open recover=/durability=).
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+import repro.db as db
+from repro.core import deprecation
+from repro.store import CompactionPolicy, LiveConfig, LiveIndex
+from repro.serving import paged
+
+NEVER = CompactionPolicy().never()
+
+
+def mk(raw):
+    return db.as_key_array(np.asarray(raw, dtype=np.uint64))
+
+
+def small_session(**spec_kw):
+    raw = np.arange(1, 513, dtype=np.uint64) * 5
+    spec = db.IndexSpec(tier="live", node_cap=16, policy=NEVER, **spec_kw)
+    return db.open(spec, mk(raw)), raw
+
+
+# ---------------------------------------------------------------------------
+# close() / context manager.
+# ---------------------------------------------------------------------------
+
+def test_context_manager_closes_and_rejects_after(tmp_path):
+    with db.open(db.IndexSpec(tier="live", policy=NEVER),
+                 mk(np.arange(1, 65))) as sess:
+        assert not sess.closed
+        assert bool(sess.lookup(mk([5])).result().found.all())
+    assert sess.closed
+    for op in (lambda: sess.lookup(mk([5])),
+               lambda: sess.insert(mk([7]), np.array([1], np.int32)),
+               lambda: sess.delete(mk([5])),
+               lambda: sess.flush(),
+               lambda: sess.snapshot()):
+        with pytest.raises(db.SessionClosedError):
+            op()
+    sess.close()                           # idempotent
+
+
+def test_close_flushes_pending_tickets():
+    sess, raw = small_session()
+    t = sess.lookup(mk(raw[:8]))
+    assert not t.ready and sess.pending
+    sess.close()
+    assert t.ready and bool(t.result().found.all())
+    assert sess.pending == 0
+
+
+def test_ticket_on_session_closed_mid_flush_raises_typed():
+    """close() propagates a flush failure but still closes the session;
+    the ticket stranded by that flush resolves to the typed error."""
+    sess, raw = small_session()
+    t = sess.lookup(mk(raw[:4]))
+    # Mixed 32/64-bit keys in one flush: the close()-driven flush raises.
+    sess.lookup(db.KeyArray.from_u32(np.array([1], np.uint32)))
+    with pytest.raises(ValueError):
+        sess.close()
+    assert sess.closed
+    with pytest.raises(db.SessionClosedError):
+        t.result()
+
+
+def test_dropped_ticket_error_is_typed():
+    sess, raw = small_session()
+    t = sess.lookup(mk(raw[:4]))
+    sess.lookup(db.KeyArray.from_u32(np.array([1], np.uint32)))
+    with pytest.raises(ValueError):
+        sess.flush()
+    with pytest.raises(db.DroppedTicketError):
+        t.result()
+    # Back-compat: callers matching the historical RuntimeError still do.
+    assert issubclass(db.DroppedTicketError, RuntimeError)
+    sess.close()
+
+
+def test_paged_cache_close_closes_table_session():
+    cache = paged.create(num_layers=1, num_pages=8, page_size=4,
+                         kv_heads=1, head_dim=4)
+    assert not cache.table.closed
+    cache.close()
+    assert cache.table.closed
+    cache.close()                          # idempotent
+
+
+# ---------------------------------------------------------------------------
+# wrap_store deprecation (bare-store adoption of durable-capable tiers).
+# ---------------------------------------------------------------------------
+
+def test_wrap_store_updatable_adoption_warns_once():
+    raw = np.arange(0, 256, 2, dtype=np.uint64)
+    live = LiveIndex.build(mk(raw),
+                           np.arange(len(raw), dtype=np.int32),
+                           LiveConfig(node_cap=16, policy=NEVER))
+    deprecation.reset("db.wrap_store")
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        db.wrap_store(live)
+        db.wrap_store(live)               # second adoption: silent
+    deps = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(deps) == 1 and "wal_dir" in str(deps[0].message)
+
+    # Static snapshots have nothing to log: no warning.
+    from repro.core import cgrx
+    idx = cgrx.build(mk(raw), np.arange(len(raw), dtype=np.int32), 16)
+    deprecation.reset("db.wrap_store")
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        db.wrap_store(idx)
+    assert not [w for w in rec
+                if issubclass(w.category, DeprecationWarning)]
+
+
+# ---------------------------------------------------------------------------
+# Durable open contract.
+# ---------------------------------------------------------------------------
+
+def test_spec_validation(tmp_path):
+    with pytest.raises(db.InvalidSpecError):
+        db.IndexSpec(durability="wal")                  # no wal_dir
+    with pytest.raises(db.InvalidSpecError):
+        db.IndexSpec(durability="paper")                # unknown mode
+    with pytest.raises(db.InvalidSpecError):
+        db.IndexSpec(tier="static", durability="wal",
+                     wal_dir=str(tmp_path))             # nothing to log
+
+
+def test_recover_needs_durable_spec():
+    with pytest.raises(db.InvalidSpecError):
+        db.open(db.IndexSpec(tier="live"), recover=True)
+
+
+def test_open_refuses_silent_reinit_and_keyed_recover(tmp_path):
+    spec = db.IndexSpec(tier="live", durability="wal",
+                        wal_dir=str(tmp_path / "d"), policy=NEVER)
+    raw = np.arange(1, 129, dtype=np.uint64)
+    with db.open(spec, mk(raw)):
+        pass
+    with pytest.raises(db.RecoveryError):
+        db.open(spec, mk(raw))             # would orphan the existing log
+    with pytest.raises(db.InvalidSpecError):
+        db.open(spec, mk(raw), recover=True)   # log is the source of truth
+    with db.open(spec, recover=True) as sess:
+        assert bool(sess.lookup(mk(raw[:4])).result().found.all())
+
+
+def test_recover_empty_dir_needs_keys(tmp_path):
+    spec = db.IndexSpec(tier="live", durability="wal",
+                        wal_dir=str(tmp_path / "empty"), policy=NEVER)
+    with pytest.raises(db.RecoveryError):
+        db.open(spec, recover=True)
+    # Open-or-create: recover=True with keys bootstraps when empty.
+    with db.open(spec, mk(np.arange(1, 65)), ) as sess:
+        assert sess.durable
+
+
+def test_snapshot_requires_durability_and_returns_seq(tmp_path):
+    sess, _ = small_session()
+    with pytest.raises(db.InvalidSpecError):
+        sess.snapshot()
+    sess.close()
+
+    spec = db.IndexSpec(tier="live", durability="wal",
+                        wal_dir=str(tmp_path / "d"), policy=NEVER)
+    with db.open(spec, mk(np.arange(1, 129))) as sess:
+        sess.insert(mk([5000]), np.array([900], np.int32))
+        seq = sess.snapshot()              # flushes pending writes first
+        assert seq == 1
+    with db.open(spec, recover=True) as sess:
+        assert bool(sess.lookup(mk([5000])).result().found.all())

@@ -1,0 +1,281 @@
+"""Crash recovery vs the uncrashed oracle, at every WAL record boundary.
+
+The durability contract (store/wal.py, db/tiers.py): every write batch
+is appended + fsynced BEFORE its device dispatch, so after a kill at ANY
+record boundary, recovery (newest snapshot + WAL-tail replay) rebuilds a
+store whose lookups, ranges, and rank scans are bit-identical to an
+uncrashed store over the same surviving prefix of applies.  These tests
+run ONE durable primary through a random mixed insert/delete/compaction
+sequence, then simulate the kill at every boundary by materializing a
+copy of the durable directory whose WAL holds exactly the first k
+records — recovery over the copy must match a fresh non-durable session
+over the oracle's live set (query results depend only on the live key
+multiset; physical chain layout is free to differ).
+
+Also here: torn-tail bytes at the log end (crash mid-append) are
+dropped, not fatal — and stay non-fatal after further recovery cycles;
+an incomplete per-shard group at the sharded log tail rolls back the
+whole group; a killed snapshot (crash mid-compaction under
+'wal+snapshot', newest step dir gone) falls back to the previous
+snapshot + a longer replay tail; corruption anywhere but the tail
+raises instead of silently skipping batches.
+"""
+import dataclasses
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+import repro.db as db
+from repro.store import wal as wal_mod
+
+POLICY = db.CompactionPolicy(max_chain=3)
+
+
+def keys_of(oracle):
+    return db.as_key_array(np.asarray(sorted(oracle), dtype=np.uint64))
+
+
+def _mixed_run(sess, oracle, rng, waves, pool, n_ins=12, n_del=6):
+    """Drive ``sess`` through random mixed waves, mirroring each applied
+    wave into ``oracle`` (key -> row dict).  Returns the oracle snapshot
+    AFTER each wave (index k = state after k applies)."""
+    states = [dict(oracle)]
+    next_row = 10_000
+    for _ in range(waves):
+        live = np.fromiter(oracle, np.uint64, len(oracle))
+        fresh = np.setdiff1d(rng.choice(pool, n_ins, replace=False), live)
+        dels = rng.choice(live, min(n_del, len(live)), replace=False)
+        rows = np.arange(next_row, next_row + len(fresh), dtype=np.int32)
+        sess.insert(db.as_key_array(fresh), rows)
+        sess.delete(db.as_key_array(dels))
+        sess.flush()
+        next_row += len(fresh)
+        for k, r in zip(fresh, rows):
+            oracle[int(k)] = int(r)
+        for k in dels:
+            del oracle[int(k)]
+        states.append(dict(oracle))
+    return states
+
+
+def _write_wal(dirpath, records):
+    """Materialize a log directory holding exactly ``records``."""
+    os.makedirs(dirpath, exist_ok=True)
+    if not records:
+        return
+    path = os.path.join(dirpath, f"seg-{records[0].seq:012d}.wal")
+    with open(path, "wb") as f:
+        for rec in records:
+            f.write(wal_mod.encode_record(
+                rec.seq, rec.epoch, rec.part, rec.nparts,
+                rec.ins_keys(), rec.ins_rows, rec.del_keys()))
+
+
+def _reference_session(spec, oracle):
+    """Uncrashed oracle: a fresh NON-durable session over the live set.
+    Query results depend only on the live key multiset, so this is the
+    bit-identity reference for any recovered store."""
+    ref_spec = dataclasses.replace(spec, durability="none", wal_dir=None)
+    ks = np.asarray(sorted(oracle), dtype=np.uint64)
+    rows = np.asarray([oracle[int(k)] for k in ks], np.int32)
+    return db.open(ref_spec, db.as_key_array(ks), rows)
+
+
+def _check_recovery(spec, oracle, probes_np, ctx):
+    m = len(probes_np) // 2
+    a, b = probes_np[:m], probes_np[m: 2 * m]
+    lo = db.as_key_array(np.minimum(a, b))
+    hi = db.as_key_array(np.maximum(a, b))
+    probes = db.as_key_array(probes_np)
+    with db.open(spec, recover=True) as got, \
+            _reference_session(spec, oracle) as ref:
+        g_pts = got.lookup(probes).result()
+        w_pts = ref.lookup(probes).result()
+        for f in ("found", "row_id", "position"):
+            g = np.asarray(getattr(g_pts, f))
+            w = np.asarray(getattr(w_pts, f))
+            assert (g == w).all(), f"{ctx}: point field {f} diverges"
+        g_rng = got.range(lo, hi).result()
+        w_rng = ref.range(lo, hi).result()
+        for f in ("start", "count", "row_ids"):
+            g = np.asarray(getattr(g_rng, f))
+            w = np.asarray(getattr(w_rng, f))
+            assert (g == w).all(), f"{ctx}: range field {f} diverges"
+        g_rk = np.asarray(got.scan_ranks(probes).result())
+        w_rk = np.asarray(ref.scan_ranks(probes).result())
+        assert (g_rk == w_rk).all(), f"{ctx}: rank scan diverges"
+
+
+# ---------------------------------------------------------------------------
+# Live tier.
+# ---------------------------------------------------------------------------
+
+def test_live_kill_at_every_record_boundary(tmp_path):
+    rng = np.random.default_rng(7)
+    pool = np.unique(rng.integers(1, 1 << 40, 4096, dtype=np.uint64))
+    base, rest = pool[:256], pool[256:]
+    spec = db.IndexSpec(tier="live", durability="wal",
+                        wal_dir=str(tmp_path / "primary"),
+                        node_cap=8, policy=POLICY, max_hits=32)
+    oracle = {int(k): i for i, k in enumerate(np.sort(base))}
+    with db.open(spec, keys_of(oracle)) as sess:
+        states = _mixed_run(sess, oracle, rng, waves=6, pool=rest)
+        assert sess.stats().compactions > 0, \
+            "the run must cross a compaction epoch swap"
+    records, truncated = wal_mod.read_records(
+        os.path.join(spec.wal_dir, "wal"))
+    assert not truncated and len(records) == 6
+    probes_np = np.sort(pool[:600])        # present, deleted, never-present
+
+    for k in range(len(records) + 1):
+        kill = str(tmp_path / f"kill-{k}")
+        shutil.copytree(os.path.join(spec.wal_dir, "snapshots"),
+                        os.path.join(kill, "snapshots"))
+        _write_wal(os.path.join(kill, "wal"), records[:k])
+        kspec = dataclasses.replace(spec, wal_dir=kill)
+        _check_recovery(kspec, states[k], probes_np,
+                        f"kill after {k} records")
+
+
+def test_live_torn_tail_bytes_dropped(tmp_path):
+    rng = np.random.default_rng(11)
+    pool = np.unique(rng.integers(1, 1 << 32, 1024, dtype=np.uint64))
+    spec = db.IndexSpec(tier="live", durability="wal",
+                        wal_dir=str(tmp_path / "p"), node_cap=8,
+                        policy=POLICY, max_hits=32)
+    oracle = {int(k): i for i, k in enumerate(np.sort(pool[:128]))}
+    with db.open(spec, keys_of(oracle)) as sess:
+        states = _mixed_run(sess, oracle, rng, waves=3, pool=pool[128:])
+    wdir = os.path.join(spec.wal_dir, "wal")
+    segs = sorted(f for f in os.listdir(wdir) if f.endswith(".wal"))
+    last = os.path.join(wdir, segs[-1])
+    # Crash mid-append: the final record's bytes are half-flushed.
+    with open(last, "rb+") as f:
+        f.truncate(os.path.getsize(last) - 9)
+    probes = np.sort(pool[:300])
+    _check_recovery(spec, states[2], probes, "torn tail")
+    # A later cycle must still read the log (the recovery writer
+    # truncated the torn tail before opening its own segment).
+    _check_recovery(spec, states[2], probes, "torn tail, second cycle")
+
+
+def test_live_mid_compaction_snapshot_kill(tmp_path):
+    """'wal+snapshot' re-snapshots at each compaction; a kill between
+    the epoch swap and the snapshot commit leaves the OLD snapshot +
+    the full WAL tail — replay must carry recovery across the swap."""
+    rng = np.random.default_rng(13)
+    pool = np.unique(rng.integers(1, 1 << 36, 2048, dtype=np.uint64))
+    spec = db.IndexSpec(tier="live", durability="wal+snapshot",
+                        wal_dir=str(tmp_path / "p"), node_cap=8,
+                        policy=POLICY, max_hits=32)
+    oracle = {int(k): i for i, k in enumerate(np.sort(pool[:192]))}
+    with db.open(spec, keys_of(oracle)) as sess:
+        _mixed_run(sess, oracle, rng, waves=6, pool=pool[192:])
+        assert sess.stats().compactions > 0
+    snaps = os.path.join(spec.wal_dir, "snapshots")
+    steps = sorted(d for d in os.listdir(snaps) if d.startswith("step-"))
+    assert len(steps) >= 2, "compaction must have added snapshots"
+    shutil.rmtree(os.path.join(snaps, steps[-1]))   # the mid-swap kill
+    _check_recovery(spec, oracle, np.sort(pool[:500]),
+                    "snapshot killed mid-compaction")
+
+
+# ---------------------------------------------------------------------------
+# Sharded tier.
+# ---------------------------------------------------------------------------
+
+def test_sharded_kill_at_every_group_boundary(tmp_path):
+    rng = np.random.default_rng(17)
+    pool = np.unique(rng.integers(1, 1 << 44, 4096, dtype=np.uint64))
+    spec = db.IndexSpec(tier="sharded", shards=4, durability="wal",
+                        wal_dir=str(tmp_path / "primary"),
+                        node_cap=8, policy=POLICY, max_hits=32)
+    oracle = {int(k): i for i, k in enumerate(np.sort(pool[:384]))}
+    with db.open(spec, keys_of(oracle)) as sess:
+        states = _mixed_run(sess, oracle, rng, waves=5, pool=pool[384:],
+                            n_ins=24, n_del=10)
+    shard_dirs = [os.path.join(spec.wal_dir, "wal", f"shard-{i:04d}")
+                  for i in range(4)]
+    groups = wal_mod.read_groups(shard_dirs)
+    assert len(groups) == 5
+    probes_np = np.sort(pool[:700])
+
+    def materialize(tag, upto, partial_parts=0):
+        kill = str(tmp_path / tag)
+        shutil.copytree(os.path.join(spec.wal_dir, "snapshots"),
+                        os.path.join(kill, "snapshots"))
+        per_shard = {i: [] for i in range(4)}
+        for g in groups[:upto]:
+            for shard_id, rec in g:
+                per_shard[shard_id].append(rec)
+        if partial_parts and upto < len(groups):
+            for shard_id, rec in groups[upto][:partial_parts]:
+                per_shard[shard_id].append(rec)
+        for i in range(4):
+            _write_wal(os.path.join(kill, "wal", f"shard-{i:04d}"),
+                       per_shard[i])
+        return dataclasses.replace(spec, wal_dir=kill)
+
+    for k in range(len(groups) + 1):
+        _check_recovery(materialize(f"kill-{k}", k), states[k], probes_np,
+                        f"kill after {k} groups")
+    # A group missing part of its per-shard fan-out is the crash point:
+    # the whole group rolls back (its fsync set never completed).
+    for k in (2, 4):
+        if len(groups[k]) > 1:
+            _check_recovery(
+                materialize(f"kill-{k}-partial", k, partial_parts=1),
+                states[k], probes_np, f"partial group at seq {k}")
+
+
+def test_sharded_incomplete_group_mid_log_raises(tmp_path):
+    """Incompleteness is only excusable at the log tail; a hole in the
+    middle is corruption and must raise, not silently skip a batch."""
+    rng = np.random.default_rng(19)
+    pool = np.unique(rng.integers(1, 1 << 44, 2048, dtype=np.uint64))
+    spec = db.IndexSpec(tier="sharded", shards=4, durability="wal",
+                        wal_dir=str(tmp_path / "p"), node_cap=8,
+                        policy=POLICY, max_hits=32)
+    oracle = {int(k): i for i, k in enumerate(np.sort(pool[:384]))}
+    with db.open(spec, keys_of(oracle)) as sess:
+        _mixed_run(sess, oracle, rng, waves=4, pool=pool[384:],
+                   n_ins=24, n_del=10)
+    dirs = [os.path.join(spec.wal_dir, "wal", f"shard-{i:04d}")
+            for i in range(4)]
+    groups = wal_mod.read_groups(dirs)
+    victim = next(g for g in groups[:-1] if len(g) > 1)
+    drop_seq, drop_shard = victim[0][1].seq, victim[0][0]
+    per_shard = {i: [] for i in range(4)}
+    for g in groups:
+        for shard_id, rec in g:
+            if not (rec.seq == drop_seq and shard_id == drop_shard):
+                per_shard[shard_id].append(rec)
+    for i, d in enumerate(dirs):
+        shutil.rmtree(d)
+        _write_wal(d, per_shard[i])
+    with pytest.raises(db.RecoveryError):
+        db.open(spec, recover=True)
+
+
+def test_wal_corrupt_before_final_segment_raises(tmp_path):
+    """Undecodable bytes are only excusable in the LAST segment (a torn
+    tail); the same damage in an earlier segment is corruption."""
+    d = str(tmp_path / "log")
+    log = wal_mod.WriteAheadLog(d)
+    for i in range(3):
+        log.append(db.as_key_array(np.array([i + 1], np.uint64)),
+                   np.array([i], np.int32), None, epoch=0)
+    log.close()
+    log2 = wal_mod.WriteAheadLog(d)      # opens a second, newer segment
+    log2.append(db.as_key_array(np.array([9], np.uint64)),
+                np.array([9], np.int32), None, epoch=0)
+    log2.close()
+    first_seg = os.path.join(d, sorted(
+        f for f in os.listdir(d) if f.endswith(".wal"))[0])
+    with open(first_seg, "rb+") as f:
+        f.seek(wal_mod._HEADER.size + 1)   # payload byte: CRC now fails
+        f.write(b"\xee")
+    with pytest.raises(wal_mod.WalError):
+        wal_mod.read_records(d)
