@@ -37,3 +37,4 @@ quickstart:
 examples:
 	PYTHONPATH=src $(PY) examples/quickstart.py
 	PYTHONPATH=src $(PY) examples/distributed_index.py
+	PYTHONPATH=src $(PY) examples/vector_search.py

@@ -1,0 +1,94 @@
+"""Vector tier: probe throughput vs brute force vs nprobe + live updates.
+
+The ANN trade the coarse-bucket tier sells is the paper's trade: probe a
+few centroid buckets (rank-engine range lookups) and post-filter exactly
+(``distance_topk``), instead of scoring the whole corpus.  Emitted:
+
+  probe_p*        us per probe batch at nprobe = 1 / quarter / all
+                  (derived column: measured recall@10 vs brute force)
+  brute_force     us per batch for the dense all-pairs top-k baseline
+  insert_wave     us per live insert wave through the session write path
+                  (derived: vectors/s)
+
+CPU-container caveat: distances run through the jnp path (the Pallas
+kernel is the TPU configuration); relative shape — probe cost growing
+with nprobe toward the brute-force ceiling — is the signal, absolute
+times are container-scale.
+"""
+from benchmarks.common import emit, parse_args, timeit
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.db as db
+from repro.data import keygen
+
+DIM = 32
+NCENT = 64
+K = 10
+
+
+def _recall(got: np.ndarray, want: np.ndarray) -> float:
+    return float(np.mean([len(set(g) & set(w)) / len(w)
+                          for g, w in zip(got, want)]))
+
+
+def main(args=None) -> None:
+    args = args or parse_args()
+    seed = getattr(args, "seed", None) or 0
+    n = max(2048, min(args.n, 1 << 17))
+    q = max(64, min(args.q >> 6, 1024))
+
+    corpus = keygen.embedding_set(n, DIM, nclusters=24, seed=seed)
+    queries = keygen.embedding_queries(corpus, q, seed=seed + 1)
+    qdev = jnp.asarray(queries)
+
+    # Brute-force baseline: dense all-pairs distances + top-k on device.
+    corpus_dev = jnp.asarray(corpus)
+
+    @jax.jit
+    def brute(qs):
+        d2 = jnp.sum((corpus_dev[None, :, :] - qs[:, None, :]) ** 2, -1)
+        neg, idx = jax.lax.top_k(-d2, K)
+        return idx
+
+    oracle = np.asarray(brute(qdev))
+    t_brute = timeit(brute, qdev)
+    emit("brute_force", t_brute, f"n={n} q={q}")
+
+    cap = max(256, (4 * n) // NCENT)
+    spec = db.IndexSpec(tier="live", kind="vector", dim=DIM,
+                        ncentroids=NCENT, max_hits=cap)
+    sess = db.open(spec, corpus)
+
+    for p, tag in ((1, "p1"), (max(2, NCENT // 4), f"p{max(2, NCENT//4)}"),
+                   (NCENT, "exhaustive")):
+        def probe():
+            return sess.probe_vectors(queries, K, nprobe=p).result()
+
+        res = probe()
+        rec = _recall(np.asarray(res.row_id), oracle)
+        t = timeit(probe)
+        emit(f"probe_{tag}", t,
+             f"recall@{K}={rec:.3f} {t_brute/t:.2f}x-vs-brute")
+
+    # Live update throughput: insert waves through the session path.
+    waves = 4
+    wave_n = max(256, n >> 4)
+    fresh = keygen.embedding_set(waves * wave_n, DIM, nclusters=24,
+                                 seed=seed + 2)
+    import time as _time
+    times = []
+    for w in range(waves):
+        t0 = _time.perf_counter()
+        sess.insert_vectors(fresh[w * wave_n:(w + 1) * wave_n])
+        sess.flush()
+        times.append(_time.perf_counter() - t0)
+    t_wave = float(np.median(times))
+    emit("insert_wave", t_wave,
+         f"{wave_n/t_wave:.0f}vec/s wave={wave_n}")
+
+
+if __name__ == "__main__":
+    main()

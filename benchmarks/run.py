@@ -41,6 +41,7 @@ SUITES = [
     ("sharded_store", "benchmarks.bench_sharded_store"),
     ("query_plan", "benchmarks.bench_query_plan"),
     ("recovery", "benchmarks.bench_recovery"),
+    ("vector", "benchmarks.bench_vector"),
 ]
 
 

@@ -99,6 +99,42 @@ def as_keys(raw: np.ndarray, bits: int) -> KeyArray:
             else KeyArray.from_u32(raw.astype(np.uint32)))
 
 
+def embedding_set(n: int, dim: int, *, nclusters: int = 8,
+                  spread: float = 0.15, seed: int = 0,
+                  grid: Optional[int] = None) -> np.ndarray:
+    """Seeded clustered-Gaussian embedding corpus for the vector tier.
+
+    ``n`` vectors of ``dim`` float32 components drawn as a Gaussian
+    mixture: ``nclusters`` centers uniform in [-1, 1]^dim, per-vector
+    noise N(0, spread) — the cluster count/spread knobs control how
+    separable the coarse quantizer's job is.  ``grid`` (power of two)
+    snaps components to multiples of ``1/grid``: squared distances then
+    become exact dyadic floats, so float32 distance comparisons are
+    bit-identical across numpy and JAX — the setting the exhaustive-
+    probe bit-identity suite runs on.
+    """
+    rng = np.random.default_rng(seed)
+    centers = rng.uniform(-1.0, 1.0, size=(nclusters, dim))
+    owner = rng.integers(0, nclusters, size=n)
+    vecs = centers[owner] + rng.normal(0.0, spread, size=(n, dim))
+    if grid is not None:
+        vecs = np.round(vecs * grid) / grid
+    return vecs.astype(np.float32)
+
+
+def embedding_queries(corpus: np.ndarray, q: int, *, spread: float = 0.05,
+                      seed: int = 1,
+                      grid: Optional[int] = None) -> np.ndarray:
+    """Query vectors near uniformly-sampled corpus points (the ANN
+    benchmark's workload); ``grid`` as in ``embedding_set``."""
+    rng = np.random.default_rng(seed)
+    base = corpus[rng.integers(0, len(corpus), q)]
+    vecs = base + rng.normal(0.0, spread, size=base.shape)
+    if grid is not None:
+        vecs = np.round(vecs * grid) / grid
+    return vecs.astype(np.float32)
+
+
 def range_lookups(raw_sorted: np.ndarray, q: int, hits_per_range: int,
                   seed: int = 1) -> Tuple[np.ndarray, np.ndarray]:
     """Dense-range bounds with an expected number of hits (Fig. 12 setup:

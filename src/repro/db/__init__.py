@@ -28,6 +28,13 @@ aggregates) / ``probe`` (index nested-loop join probes) / ``rank_scan``
     j = sess.query(db.probe(keys, outer_rows))     # join probe
     sess.flush()                                   # still one dispatch
 
+The same front door opens the coarse-bucket ANN tier (``repro.vector``):
+``IndexSpec(kind='vector', dim=, ncentroids=, nprobe=)`` with an
+(n, dim) embedding corpus returns a ``VectorSession`` whose
+``probe_vectors(queries, k)`` lowers onto the same plan IR — probes
+coalesce with every other ticket of a flush, and the only extra launch
+is the exact ``distance_topk`` post-filter.
+
 Layering: ``core`` (index math) -> ``query`` (batched rank engine +
 logical-plan compiler) -> ``store`` (live/sharded lifecycles) -> ``db``
 (this package).  Module map: ``spec`` (IndexSpec), ``tiers`` (IndexTier
@@ -45,8 +52,8 @@ import numpy as np
 # Re-exported so spec construction needs only `import repro.db`.
 from repro.core.keys import KeyArray
 from repro.query.plan import (AggKeys, Expr, ProbeResult, between, count,
-                              eq, isin, limit, max_key, min_key, probe,
-                              rank_scan)
+                              eq, isin, limit, max_key, min_key, postmap,
+                              probe, rank_scan)
 from repro.store.compaction import CompactionPolicy
 
 from repro.store.replica import ReadReplica, ReplicaSet
@@ -96,6 +103,7 @@ __all__ = [
     "max_key",
     "min_key",
     "open",
+    "postmap",
     "probe",
     "rank_scan",
     "recover_tier",
@@ -146,6 +154,23 @@ def open(spec: Optional[IndexSpec] = None, keys=None, row_ids=None,
     exit (see ``Session.close``).
     """
     spec = spec or IndexSpec()
+    if spec.kind == "vector":
+        # The ANN tier: `keys` is the (n, dim) float32 embedding corpus;
+        # spec validation already rejected durable vector specs, so this
+        # branch is memory-only by construction.
+        if recover:
+            raise InvalidSpecError(
+                "recover=True needs a durable spec, and vector specs "
+                "are memory-only for now (the WAL logs keys, not "
+                "embeddings)")
+        if keys is None:
+            raise ValueError(
+                "repro.db.open with kind='vector' needs an (n, dim) "
+                "embedding corpus to index")
+        from repro.vector import VectorSession, build_vector_tier
+        tier = build_vector_tier(spec, keys, row_ids)
+        return VectorSession(tier, max_hits=spec.max_hits,
+                             nprobe=spec.effective_nprobe)
     if not spec.durable:
         if recover:
             raise InvalidSpecError(

@@ -30,6 +30,7 @@ from .errors import InvalidSpecError
 TIERS = ("static", "live", "sharded")
 BACKENDS = ("tree", "binary", "kernel")
 DURABILITY = ("none", "wal", "wal+snapshot")
+KINDS = ("scalar", "vector")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,6 +53,17 @@ class IndexSpec:
     ``max_imbalance`` sharded skew-rebalance trigger (None disables);
     ``jit``           jit the engine pipelines;
     ``cache_scope``   executable-cache namespace (see query/engine.py);
+    ``kind``          'scalar' (key lookups, the historical surface) or
+                      'vector' (the coarse-bucket ANN tier,
+                      ``repro.vector``): embeddings are quantized to
+                      coarse centroids and indexed as composite keys on
+                      the SAME tier the spec names, so ``tier=`` still
+                      picks static/live/sharded underneath;
+    ``dim``           vector kind only: embedding dimensionality;
+    ``ncentroids``    vector kind only: coarse centroid count (the
+                      bucket count of the ANN layer);
+    ``nprobe``        vector kind only: buckets probed per query
+                      (default: ``ncentroids`` — exhaustive, exact);
     ``durability``    'none' (memory-only, the historical behavior),
                       'wal' (every write batch fsynced to a write-ahead
                       log before its device dispatch, one baseline
@@ -77,6 +89,10 @@ class IndexSpec:
     cache_scope: Optional[str] = None
     durability: str = "none"
     wal_dir: Optional[str] = None
+    kind: str = "scalar"
+    dim: Optional[int] = None
+    ncentroids: Optional[int] = None
+    nprobe: Optional[int] = None
 
     def __post_init__(self):
         if self.tier not in TIERS:
@@ -112,10 +128,68 @@ class IndexSpec:
                     "the static tier takes no writes, so there is "
                     "nothing to log; use durability='none' (a static "
                     "index is rebuilt from its source keys)")
+        self._validate_kind()
+
+    def _validate_kind(self) -> None:
+        if self.kind not in KINDS:
+            raise InvalidSpecError(
+                f"unknown kind {self.kind!r}; expected one of {KINDS}")
+        if self.kind == "scalar":
+            for field in ("dim", "ncentroids", "nprobe"):
+                value = getattr(self, field)
+                if value is not None:
+                    raise InvalidSpecError(
+                        f"{field}={value!r} is a vector-spec option but "
+                        f"kind='scalar'; set kind='vector' to open an "
+                        f"ANN tier")
+            return
+        if self.dim is None:
+            raise InvalidSpecError(
+                "kind='vector' needs dim= (the embedding "
+                "dimensionality); got dim=None")
+        if not isinstance(self.dim, int) or self.dim < 1:
+            raise InvalidSpecError(
+                f"dim must be a positive int, got dim={self.dim!r}")
+        if self.ncentroids is None:
+            raise InvalidSpecError(
+                "kind='vector' needs ncentroids= (the coarse bucket "
+                "count); got ncentroids=None")
+        if not isinstance(self.ncentroids, int) or self.ncentroids < 1:
+            raise InvalidSpecError(
+                f"ncentroids must be a positive int, got "
+                f"ncentroids={self.ncentroids!r}")
+        if self.nprobe is not None:
+            if not isinstance(self.nprobe, int) or self.nprobe < 1:
+                raise InvalidSpecError(
+                    f"nprobe must be a positive int, got "
+                    f"nprobe={self.nprobe!r}")
+            if self.nprobe > self.ncentroids:
+                raise InvalidSpecError(
+                    f"nprobe={self.nprobe} exceeds "
+                    f"ncentroids={self.ncentroids}; a probe cannot "
+                    f"visit more buckets than exist")
+        if self.durability != "none":
+            raise InvalidSpecError(
+                f"durability={self.durability!r} is scalar-only for "
+                f"now: the WAL logs key batches, not embeddings, so a "
+                f"recovered vector tier would lose its arena; use "
+                f"durability='none' with kind='vector'")
 
     @property
     def durable(self) -> bool:
         return self.durability != "none"
+
+    @property
+    def effective_nprobe(self) -> int:
+        """The probe width ``open()`` hands the session (vector kind):
+        the spec's ``nprobe``, defaulting to exhaustive."""
+        return self.nprobe if self.nprobe is not None else self.ncentroids
+
+    def scalar_spec(self) -> "IndexSpec":
+        """The inner scalar spec a vector tier builds its composite-key
+        index with (same tier/geometry, vector fields stripped)."""
+        return dataclasses.replace(self, kind="scalar", dim=None,
+                                   ncentroids=None, nprobe=None)
 
     # -- mappings onto the underlying configs ---------------------------------
 

@@ -66,7 +66,7 @@ from repro.store import wal as wal_mod
 from repro.store.live import LiveIndex
 from repro.store.sharded import ShardedLiveStore
 
-from .errors import ReadOnlyTierError, RecoveryError
+from .errors import InvalidSpecError, ReadOnlyTierError, RecoveryError
 from .spec import IndexSpec
 
 
@@ -345,7 +345,16 @@ _TIER_CLASSES = {"static": StaticTier, "live": LiveTier,
 
 def build_tier(spec: IndexSpec, keys: KeyArray,
                row_ids: Optional[jnp.ndarray] = None) -> IndexTier:
-    """Build the tier an ``IndexSpec`` names over a key/rowID set."""
+    """Build the tier an ``IndexSpec`` names over a key/rowID set.
+
+    Scalar specs only: a ``kind='vector'`` spec takes an embedding
+    corpus, not a key set — route it through ``repro.db.open`` (which
+    builds via ``repro.vector.build_vector_tier``)."""
+    if spec.kind == "vector":
+        raise InvalidSpecError(
+            "build_tier is the scalar construction path; open a "
+            "kind='vector' spec through repro.db.open(spec, vectors) "
+            "(repro.vector.build_vector_tier underneath)")
     if row_ids is None:
         row_ids = jnp.arange(keys.shape[0], dtype=jnp.int32)
     return _TIER_CLASSES[spec.tier].build(spec, keys, row_ids)

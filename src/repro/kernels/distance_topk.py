@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: fused exact-distance top-k post-filter.
+
+The paper's design splits every lookup into a coarse index probe plus an
+in-bucket post-filter; the vector tier (``repro.vector``) maps IVF-style
+ANN search onto the same split — the rank engine retrieves the rowID
+blocks of the ``nprobe`` nearest centroid buckets, and THIS kernel is the
+post-filter: squared-L2 distances from each query to its gathered
+candidate embeddings plus an exact top-k selection, fused into ONE launch
+(the vector analogue of ``fused_rank.py``'s one-pass rank pipeline).
+
+Grid: 1-D over queries; each grid step owns one query row — its embedding
+(1, D_pad), its candidate block (1, C_pad, D_pad), the candidate rowIDs
+and validity lanes (1, C_pad) — so the distance matrix never leaves VMEM.
+Selection runs k rounds of masked argmin with a deterministic tie-break:
+among equal distances the SMALLEST rowID wins (the lexicographic
+(distance, rowID) order ``kernels/ref.distance_topk_ref`` mirrors and the
+recall suite pins bit-identical to the numpy oracle).
+
+Padding: D pads with zeros (a zero lane adds exactly 0.0 to every
+squared distance — float32 addition with 0.0 is exact, so padded and
+unpadded distances are the SAME f32 values); C pads with invalid lanes
+(distance forced to +inf, rowID to INT32_MAX) that can never be picked
+ahead of a real candidate.  Queries with fewer than k valid candidates
+pad their tail with (distance=+inf, row=-1).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+
+# Plain int (not a jnp scalar): Pallas kernels may not capture traced
+# constants, and an int literal folds into the comparison lanes.
+_I32_MAX = jnp.iinfo(jnp.int32).max
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _dtopk_kernel(q_ref, c_ref, r_ref, v_ref, od_ref, or_ref, *, k: int,
+                  k_pad: int):
+    q = q_ref[...]                                    # (1, D_pad)
+    c = c_ref[...][0]                                 # (C_pad, D_pad)
+    rows = r_ref[...][0]                              # (C_pad,)
+    valid = v_ref[...][0] != 0
+
+    diff = c - q                                      # broadcast over C_pad
+    d2 = jnp.sum(diff * diff, axis=-1)                # (C_pad,)
+    d2 = jnp.where(valid, d2, jnp.inf)
+    rows_eff = jnp.where(valid, rows, _I32_MAX)
+
+    def step(j, carry):
+        rem, out_d, out_r = carry
+        m = jnp.min(rem)
+        tied = rem == m
+        r = jnp.min(jnp.where(tied, rows_eff, _I32_MAX))
+        pick = tied & (rows_eff == r)
+        out_d = out_d.at[j].set(m)
+        out_r = out_r.at[j].set(jnp.where(jnp.isfinite(m), r,
+                                          jnp.int32(-1)))
+        return jnp.where(pick, jnp.inf, rem), out_d, out_r
+
+    init = (d2, jnp.full((k_pad,), jnp.inf, jnp.float32),
+            jnp.full((k_pad,), -1, jnp.int32))
+    _, out_d, out_r = jax.lax.fori_loop(0, k, step, init)
+    od_ref[...] = out_d[None, :]
+    or_ref[...] = out_r[None, :]
+
+
+def distance_topk_kernel(queries: jnp.ndarray, cands: jnp.ndarray,
+                         rows: jnp.ndarray, valid: jnp.ndarray, k: int,
+                         *, interpret: bool = True
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact top-k by squared L2, one launch for the whole query batch.
+
+    queries (Q, D) f32; cands (Q, C, D) f32; rows (Q, C) int32;
+    valid (Q, C) bool.  Returns (distance (Q, k) f32, row_id (Q, k)
+    int32) — identical selection order to ``ref.distance_topk_ref``.
+    """
+    n_q, dim = queries.shape
+    n_cand = cands.shape[1]
+    dp = _cdiv(max(dim, 1), LANES) * LANES
+    cp = _cdiv(max(n_cand, 1), LANES) * LANES
+    kp = _cdiv(max(k, 1), LANES) * LANES
+
+    qs = jnp.pad(queries.astype(jnp.float32), ((0, 0), (0, dp - dim)))
+    cs = jnp.pad(cands.astype(jnp.float32),
+                 ((0, 0), (0, cp - n_cand), (0, dp - dim)))
+    rs = jnp.pad(rows.astype(jnp.int32), ((0, 0), (0, cp - n_cand)))
+    vs = jnp.pad(valid.astype(jnp.int32), ((0, 0), (0, cp - n_cand)))
+
+    kern = functools.partial(_dtopk_kernel, k=k, k_pad=kp)
+    out_d, out_r = pl.pallas_call(
+        kern,
+        grid=(n_q,),
+        in_specs=[
+            pl.BlockSpec((1, dp), lambda i: (i, 0)),
+            pl.BlockSpec((1, cp, dp), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, cp), lambda i: (i, 0)),
+            pl.BlockSpec((1, cp), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, kp), lambda i: (i, 0)),
+            pl.BlockSpec((1, kp), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_q, kp), jnp.float32),
+            jax.ShapeDtypeStruct((n_q, kp), jnp.int32),
+        ],
+        interpret=interpret,
+    )(qs, cs, rs, vs)
+    return out_d[:, :k], out_r[:, :k]

@@ -27,6 +27,12 @@ point/range lanes (per-lane left/right sides) — see kernels/fused_rank.py.
 It degrades gracefully: when the flat key buffer would blow the VMEM
 budget on a real TPU, it falls back to the composed two-pass path, which
 streams tiles instead of holding them resident.
+
+``distance_topk`` (the vector tier's post-filter, kernels/
+distance_topk.py) is the same discipline for the ANN workload: exact
+squared-L2 top-k over the candidate embeddings the rank engine
+retrieved, one launch per probe batch, jnp fallback under the same VMEM
+budget.
 """
 from __future__ import annotations
 
@@ -39,7 +45,8 @@ import jax.numpy as jnp
 from repro.core.bucketing import BucketedSet
 from repro.core.keys import KeyArray
 
-from . import bucket_search, fused_rank, grid_probe, successor
+from . import bucket_search, distance_topk as dtopk_mod, fused_rank, \
+    grid_probe, ref, successor
 
 LANES = 128
 
@@ -172,6 +179,48 @@ def range_count(buckets: BucketedSet, lo: KeyArray,
                              jnp.ones((r,), jnp.int32)])
     ranks = rank_fused(buckets, queries, sides)
     return jnp.maximum(ranks[r:] - ranks[:r], 0).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Vector post-filter (the vector tier's one-launch refinement step).
+# ---------------------------------------------------------------------------
+
+def distance_topk(queries: jnp.ndarray, cands: jnp.ndarray,
+                  rows: jnp.ndarray, valid: jnp.ndarray, k: int,
+                  method: str = "auto"):
+    """Exact top-k neighbors by squared L2 over per-query candidates.
+
+    queries (Q, D) f32; cands (Q, C, D) f32 (the gathered bucket
+    embeddings); rows (Q, C) int32 rowIDs; valid (Q, C) bool.  Returns
+    (distance (Q, k) f32 +inf-padded, row_id (Q, k) int32 -1-padded),
+    ordered by the deterministic (distance, rowID) tie-break.
+
+    ``method``: 'kernel' launches the fused Pallas kernel
+    (kernels/distance_topk.py), 'ref' the pure-jnp oracle, 'auto' picks
+    the kernel on TPU and the jnp path elsewhere — same split as the
+    rank kernels (interpret-mode Pallas validates correctness but is the
+    slow path).  A kernel request whose per-query candidate block would
+    not fit the VMEM budget falls back to the streamed jnp path, the
+    ``rank_fused`` degradation contract.
+    """
+    if method not in ("auto", "kernel", "ref"):
+        raise ValueError(
+            f"distance_topk method must be 'auto', 'kernel' or 'ref', "
+            f"got {method!r}")
+    n_q, dim = queries.shape
+    if n_q == 0:
+        return (jnp.zeros((0, k), jnp.float32),
+                jnp.zeros((0, k), jnp.int32))
+    interp = _interpret()
+    use_kernel = method == "kernel" or (method == "auto" and not interp)
+    if use_kernel:
+        cp = -(-cands.shape[1] // LANES) * LANES
+        dp = -(-dim // LANES) * LANES
+        resident = (cp * dp + dp + 2 * cp) * 4
+        if interp or resident <= FUSED_VMEM_BUDGET_BYTES:
+            return dtopk_mod.distance_topk_kernel(
+                queries, cands, rows, valid, k, interpret=interp)
+    return ref.distance_topk_ref(queries, cands, rows, valid, k)
 
 
 # ---------------------------------------------------------------------------

@@ -1,12 +1,18 @@
 """Pure-jnp oracles for every Pallas kernel (tested with assert_allclose)."""
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.grid import searchsorted_lex
 from repro.core.keys import KeyArray, searchsorted
+
+# Plain int, not jnp.int32(...): this module may first be imported inside
+# a jit trace, and a module-level device constant created there would be a
+# leaked tracer for every later caller.
+_I32_MAX = jnp.iinfo(jnp.int32).max
 
 
 def successor_count_ref(reps_lo, reps_hi, q_lo, q_hi, side: str = "left"):
@@ -31,3 +37,36 @@ def bucket_rank_ref(rows_lo, rows_hi, q_lo, q_hi, side: str = "left"):
 
 def lex3_count_ref(tz, ty, tx, qz, qy, qx):
     return searchsorted_lex((tz, ty, tx), (qz, qy, qx), side="left")
+
+
+def distance_topk_ref(queries: jnp.ndarray, cands: jnp.ndarray,
+                      rows: jnp.ndarray, valid: jnp.ndarray,
+                      k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact top-k by squared L2 over per-query candidate sets.
+
+    queries (Q, D) f32; cands (Q, C, D) f32; rows (Q, C) int32 rowIDs;
+    valid (Q, C) bool.  Returns (distance (Q, k) f32 +inf-padded,
+    row_id (Q, k) int32 -1-padded), selected by the deterministic
+    (distance, rowID)-lexicographic order the Pallas kernel implements —
+    k rounds of masked argmin with min-rowID tie-break.
+    """
+    q = queries.shape[0]
+    d2 = jnp.sum(jnp.square(cands - queries[:, None, :]), axis=-1)
+    d2 = jnp.where(valid, d2, jnp.inf)
+    rows_eff = jnp.where(valid, rows.astype(jnp.int32), _I32_MAX)
+
+    def step(j, carry):
+        rem, out_d, out_r = carry
+        m = jnp.min(rem, axis=-1)                         # (Q,)
+        tied = rem == m[:, None]
+        r = jnp.min(jnp.where(tied, rows_eff, _I32_MAX), axis=-1)
+        pick = tied & (rows_eff == r[:, None])
+        out_d = out_d.at[:, j].set(m)
+        out_r = out_r.at[:, j].set(
+            jnp.where(jnp.isfinite(m), r, jnp.int32(-1)))
+        return jnp.where(pick, jnp.inf, rem), out_d, out_r
+
+    init = (d2, jnp.full((q, k), jnp.inf, jnp.float32),
+            jnp.full((q, k), -1, jnp.int32))
+    _, out_d, out_r = jax.lax.fori_loop(0, k, step, init)
+    return out_d, out_r

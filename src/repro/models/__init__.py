@@ -1,1 +1,1 @@
-from . import attention, layers, lm, mla, moe, ssm  # noqa: F401
+from . import attention, embeddings, layers, lm, mla, moe, ssm  # noqa: F401

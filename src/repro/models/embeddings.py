@@ -1,0 +1,37 @@
+"""Deterministic LM-style embedding corpora for the vector tier.
+
+The vector benchmarks and examples want "realistic" embeddings — the
+anisotropic, normalized distributions a language model's token table
+produces — rather than the synthetic Gaussian mixtures of
+``data/keygen.embedding_set``.  This module derives them from the repo's
+own model stack (``models/layers.py``): a seeded embedding table,
+context mixing as a mean over a short token window, and an rmsnorm to
+put vectors on the scale LMs actually emit.  Everything is a pure
+function of ``(n, dim, seed)``, so benchmark runs are reproducible.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers
+
+
+def token_embeddings(n: int, dim: int, *, vocab: int = 4096,
+                     window: int = 4, seed: int = 0) -> np.ndarray:
+    """``n`` float32 ``dim``-vectors from a seeded token-embedding table.
+
+    Each vector is the rmsnorm'd mean of a random ``window``-token
+    context drawn from a ``vocab``-entry table — the cheapest proxy for
+    "pooled sentence embedding" the model stack can produce without a
+    trained checkpoint.
+    """
+    key = jax.random.PRNGKey(seed)
+    k_table, k_tokens = jax.random.split(key)
+    table = layers.init_embedding(k_table, vocab, dim)
+    tokens = jax.random.randint(k_tokens, (n, window), 0, vocab)
+    pooled = jnp.mean(layers.embed(table, tokens, dtype=jnp.float32),
+                      axis=1)
+    norm = layers.init_rmsnorm(dim)
+    return np.asarray(layers.rmsnorm(norm, pooled), dtype=np.float32)

@@ -11,7 +11,8 @@ serving-grade subsystem:
               lookups, range endpoints and rank-only aggregate ranges
               into padded SIMD lanes;
 ``plan``      the logical expression IR (eq / between / isin / limit /
-              count / min_key / max_key / probe / rank_scan) and the
+              count / min_key / max_key / probe / rank_scan / postmap)
+              and the
               logical->physical compiler that fuses any mix of trees
               onto one ``QueryPlan`` + one rank-scan batch;
 ``engine``    the ``RankEngine`` that executes a plan in one device call
@@ -25,7 +26,7 @@ from .engine import (BatchResult, RankEngine, STAGE_COUNTERS,
                      clear_shared_exec)
 from .plan import (AggKeys, Expr, ProbeResult, Program, between,
                    compile_exprs, count, eq, isin, limit, max_key, min_key,
-                   probe, rank_scan)
+                   postmap, probe, rank_scan)
 
 __all__ = [
     "AggKeys",
@@ -51,6 +52,7 @@ __all__ = [
     "limit",
     "max_key",
     "min_key",
+    "postmap",
     "probe",
     "rank_scan",
     "validate_max_hits",

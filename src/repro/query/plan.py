@@ -32,6 +32,10 @@ IR nodes (constructors in lowercase):
     rank_scan(keys,
               side)      raw global ranks (the ``scan_ranks`` verb)
                                                            -> int32 (Q,)
+    postmap(fn, child)   extraction-time post-processor: resolves to
+                         ``fn(child result)`` with no extra lanes or
+                         dispatches (the refinement hook derived tiers
+                         — e.g. the vector tier — lower through)
 
 Lowering (``compile_exprs``): fragments of every tree are collected IN
 SUBMISSION ORDER into the three physical sections of one ``QueryPlan`` —
@@ -130,6 +134,12 @@ class Probe(Expr):
 
 
 @dataclasses.dataclass(frozen=True)
+class Postmap(Expr):
+    fn: Callable
+    child: Expr
+
+
+@dataclasses.dataclass(frozen=True)
 class RankScan(Expr):
     keys: KeyArray
     side: str                # 'left' | 'right'
@@ -214,6 +224,30 @@ def probe(keys: KeyArray, outer_rows) -> Probe:
     return Probe(keys=keys, outer_rows=rows)
 
 
+def postmap(fn: Callable, child: Expr) -> Postmap:
+    """Post-process a child tree's result with ``fn`` at extraction time.
+
+    ``fn`` runs AFTER the flush's fused dispatch, on the child's already-
+    extracted result — it adds no lanes and no extra op-class dispatch of
+    its own, so a flush full of postmapped trees still compiles to one
+    physical plan per class.  This is the hook derived tiers lower their
+    refinement steps through (the vector tier's ``distance_topk``
+    post-filter rides a ``postmap`` over the bucket ranges it retrieves).
+
+    ``fn`` must also accept the child's canonical ZERO-LENGTH result: a
+    zero-size submission resolves to ``fn(empty_result(child))`` without
+    entering a plan (the session's empty-flush contract).
+    """
+    if not isinstance(child, Expr):
+        raise TypeError(
+            f"postmap() wraps a query expression, got "
+            f"{type(child).__name__}")
+    if not callable(fn):
+        raise TypeError(f"postmap() fn must be callable, got "
+                        f"{type(fn).__name__}")
+    return Postmap(fn=fn, child=child)
+
+
 def rank_scan(keys: KeyArray, side: str = "left") -> RankScan:
     """Raw global ranks (#keys < q, or <= q with ``side='right'``);
     resolves to an int32 array."""
@@ -232,7 +266,7 @@ def expr_size(expr: Expr) -> int:
         return int(expr.keys.shape[0])
     if isinstance(expr, Between):
         return int(expr.lo.shape[0])
-    if isinstance(expr, (Limit, Agg)):
+    if isinstance(expr, (Limit, Agg, Postmap)):
         return expr_size(expr.child)
     raise TypeError(f"not a query expression: {type(expr).__name__}")
 
@@ -257,6 +291,8 @@ def empty_result(expr: Expr, default_max_hits: int = 64):
                            matched=jnp.zeros((0,), bool))
     if isinstance(expr, RankScan):
         return jnp.zeros((0,), jnp.int32)
+    if isinstance(expr, Postmap):
+        return expr.fn(empty_result(expr.child, default_max_hits))
     raise TypeError(f"not a query expression: {type(expr).__name__}")
 
 
@@ -409,6 +445,10 @@ def compile_exprs(exprs: Sequence[Expr], *, default_max_hits: int = 64,
             side_parts.append(np.full(m, _SIDES[expr.side], np.int32))
             off, k_off = k_off, k_off + m
             return lambda res, ranks: ranks[off:off + m]
+        if isinstance(expr, Postmap):
+            inner = lower(expr.child)
+            fn = expr.fn
+            return lambda res, ranks: fn(inner(res, ranks))
         raise TypeError(f"not a query expression: {type(expr).__name__}")
 
     for expr in exprs:

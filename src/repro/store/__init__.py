@@ -21,6 +21,10 @@ turns them into one long-lived, updatable, queryable index:
                 tier: splitter-routed LiveIndex shards, cross-shard range
                 decomposition + rank-offset merge, per-shard compaction
                 and the skew-triggered splitter rebalance;
+``arena``       ``EmbeddingArena`` — the device-resident rowID-addressed
+                vector payload buffer behind the vector tier
+                (``repro.vector``); the index holds (centroidID, rowID)
+                keys, the arena holds the embeddings they point at;
 ``wal``         segmented write-ahead log of ``apply_batch`` inputs —
                 append + fsync BEFORE the device dispatch; the recovery
                 primitive behind ``IndexSpec(durability=...)``;
@@ -32,6 +36,7 @@ turns them into one long-lived, updatable, queryable index:
 See docs/ARCHITECTURE.md ("Live store", "Sharded serving tier") for the
 epoch and routing diagrams.
 """
+from .arena import EmbeddingArena
 from .compaction import CompactionPolicy, CompactionTask, should_compact
 from .frontend import LiveFrontend, TickReport
 from .live import LiveConfig, LiveIndex, NodeIndexView
@@ -43,6 +48,7 @@ from .wal import WalCorruptError, WalError, WalRecord, WriteAheadLog
 __all__ = [
     "CompactionPolicy",
     "CompactionTask",
+    "EmbeddingArena",
     "LiveConfig",
     "LiveFrontend",
     "LiveIndex",

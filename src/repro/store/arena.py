@@ -1,0 +1,92 @@
+"""``EmbeddingArena``: the device-resident vector payload store.
+
+The vector tier (``repro.vector``) keeps the INDEX small — each embedding
+contributes one composite (centroidID, rowID) key to the scalar rank
+engine — and parks the embeddings themselves here: one flat (capacity,
+dim) float32 device buffer addressed by rowID.  Retrieval gathers
+candidate embeddings straight out of this buffer for the
+``distance_topk`` post-filter, so probe batches never touch the host.
+
+Updates follow the store package's epoch discipline in miniature:
+``add`` is a functional ``.at[rows].set`` producing a fresh buffer (the
+old one stays valid for in-flight readers until they drop it), and the
+buffer grows geometrically so a stream of live inserts costs amortized
+O(1) copies.  Slots are never reclaimed on delete — the index simply
+stops referencing the rowID, matching how the scalar tiers tombstone —
+so ``nbytes`` reports high-water capacity.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class EmbeddingArena:
+    """Flat rowID-addressed (capacity, dim) float32 device buffer."""
+
+    def __init__(self, dim: int, capacity: int = 0):
+        if dim <= 0:
+            raise ValueError(f"arena dim must be positive, got {dim}")
+        self.dim = int(dim)
+        self.data = jnp.zeros((int(capacity), self.dim), jnp.float32)
+        self._next_row = 0
+
+    @classmethod
+    def build(cls, vectors: jnp.ndarray,
+              rows: jnp.ndarray) -> "EmbeddingArena":
+        """Arena seeded with ``vectors[i]`` at slot ``rows[i]``."""
+        vectors = jnp.asarray(vectors, jnp.float32)
+        arena = cls(vectors.shape[1])
+        arena.add(rows, vectors)
+        return arena
+
+    @property
+    def capacity(self) -> int:
+        return int(self.data.shape[0])
+
+    @property
+    def next_row(self) -> int:
+        """Smallest rowID never handed out (the ``alloc`` high-water)."""
+        return self._next_row
+
+    def alloc(self, n: int) -> np.ndarray:
+        """Reserve ``n`` fresh consecutive rowIDs (host-side counter —
+        the slots are written by the ``add`` that follows)."""
+        rows = np.arange(self._next_row, self._next_row + n, dtype=np.int32)
+        self._next_row += n
+        return rows
+
+    def _ensure(self, upto: int) -> None:
+        if upto <= self.capacity:
+            return
+        cap = max(16, self.capacity)
+        while cap < upto:
+            cap *= 2
+        grown = jnp.zeros((cap, self.dim), jnp.float32)
+        self.data = grown.at[:self.capacity].set(self.data)
+
+    def add(self, rows, vectors) -> None:
+        """Write ``vectors[i]`` into slot ``rows[i]`` (grows to fit)."""
+        rows = np.asarray(rows, np.int32)
+        vectors = jnp.asarray(vectors, jnp.float32)
+        if vectors.shape != (rows.shape[0], self.dim):
+            raise ValueError(
+                f"arena add expects ({rows.shape[0]}, {self.dim}) "
+                f"vectors, got {vectors.shape}")
+        if rows.shape[0] == 0:
+            return
+        if rows.min() < 0:
+            raise ValueError("arena rowIDs must be non-negative")
+        self._ensure(int(rows.max()) + 1)
+        self.data = self.data.at[jnp.asarray(rows)].set(vectors)
+        self._next_row = max(self._next_row, int(rows.max()) + 1)
+
+    def gather(self, rows: jnp.ndarray) -> jnp.ndarray:
+        """Embeddings at ``rows`` (any shape); out-of-range ids (e.g. the
+        -1 padding of a range result) clamp to slot 0 — callers mask
+        them out by validity, never by content."""
+        idx = jnp.clip(jnp.asarray(rows, jnp.int32), 0, self.capacity - 1)
+        return jnp.take(self.data, idx, axis=0)
+
+    def nbytes(self) -> int:
+        return int(self.data.size * self.data.dtype.itemsize)

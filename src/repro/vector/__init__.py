@@ -1,0 +1,39 @@
+"""``repro.vector`` — the coarse-bucket vector (ANN) tier.
+
+The paper's thesis — index coarse buckets, post-filter after retrieval —
+is the IVF recipe for vector search.  This package maps it onto the
+existing machinery instead of building a second engine:
+
+``quantizer``  plain-JAX k-means ``CoarseQuantizer`` (centroids as a
+               registered pytree): assignment + nearest-``nprobe``
+               probe order;
+``tier``       ``VectorTier`` — embeddings become 64-bit composite keys
+               ``(centroidID << 32) | rowID`` on any scalar tier
+               (static / live / sharded), payloads live in the
+               ``store.EmbeddingArena``; a centroid bucket is a key
+               range, so retrieval, updates, sharding and compaction
+               are all inherited;
+``session``    ``VectorSession`` — ``probe_vectors`` lowered onto the
+               logical-plan IR (``postmap`` over bucket ranges; one
+               fused dispatch per flush plus one ``distance_topk``
+               post-filter launch per ticket), ``insert_vectors`` /
+               ``delete_vectors`` riding the scalar write path.
+
+Front door: ``repro.db.open(IndexSpec(kind='vector', dim=, ncentroids=,
+nprobe=), vectors)``.  See docs/ARCHITECTURE.md ("Vector tier").
+"""
+from .quantizer import CoarseQuantizer, train_kmeans
+from .session import NeighborResult, VectorSession
+from .tier import (VectorTier, bucket_bounds, build_vector_tier,
+                   composite_keys)
+
+__all__ = [
+    "CoarseQuantizer",
+    "NeighborResult",
+    "VectorSession",
+    "VectorTier",
+    "bucket_bounds",
+    "build_vector_tier",
+    "composite_keys",
+    "train_kmeans",
+]

@@ -1,0 +1,97 @@
+"""Coarse quantizer: k-means centroids as the vector tier's bucket keys.
+
+IVF-style ANN search is the paper's recipe with embeddings for keys:
+quantize every vector to its nearest coarse centroid, index the centroid
+ID, post-filter the retrieved buckets with exact distances.  This module
+owns step one — a plain-JAX Lloyd's k-means (no host loops over data,
+one ``lax.scan`` over iterations) whose trained centroids travel as a
+registered pytree, so a ``CoarseQuantizer`` passes through jit boundaries
+and the engine's pytree-argument executable cache like every other index
+structure in the repo.
+
+Determinism contract: seeded init (host ``default_rng`` choice of data
+points), ``argmin`` assignment with first-index tie-break, and empty
+clusters keep their previous centroid — the same data and seed always
+yield bit-identical centroids, which the cross-tier parity suite relies
+on (two tiers built from the same corpus must bucket identically).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class CoarseQuantizer:
+    """Trained coarse centroids (ncentroids, dim) float32."""
+
+    centroids: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.centroids,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(centroids=children[0])
+
+    @property
+    def ncentroids(self) -> int:
+        return int(self.centroids.shape[0])
+
+    @property
+    def dim(self) -> int:
+        return int(self.centroids.shape[1])
+
+    def distances(self, vectors: jnp.ndarray) -> jnp.ndarray:
+        """Squared L2 from each vector to each centroid: (N, C) f32."""
+        vectors = jnp.asarray(vectors, jnp.float32)
+        diff = vectors[:, None, :] - self.centroids[None, :, :]
+        return jnp.sum(diff * diff, axis=-1)
+
+    def assign(self, vectors: jnp.ndarray) -> jnp.ndarray:
+        """Nearest-centroid ID per vector (int32; ties -> lowest ID)."""
+        return jnp.argmin(self.distances(vectors), axis=-1).astype(jnp.int32)
+
+    def topn(self, vectors: jnp.ndarray, n: int) -> jnp.ndarray:
+        """The ``n`` nearest centroid IDs per vector, nearest first
+        (ties -> lowest ID; this is the probe-order contract)."""
+        d = self.distances(vectors)
+        order = jnp.argsort(d, axis=-1, stable=True)
+        return order[:, :n].astype(jnp.int32)
+
+    def nbytes(self) -> int:
+        return int(self.centroids.size * self.centroids.dtype.itemsize)
+
+
+def train_kmeans(vectors: jnp.ndarray, ncentroids: int, *, iters: int = 16,
+                 seed: int = 0) -> CoarseQuantizer:
+    """Lloyd's k-means over ``vectors`` (N, D); returns the trained
+    quantizer.  Init samples ``ncentroids`` distinct data points with a
+    seeded host RNG; each iteration is one assignment + one
+    ``segment_sum`` mean update, scanned on device; clusters that lose
+    every member keep their previous centroid."""
+    vectors = jnp.asarray(vectors, jnp.float32)
+    n = int(vectors.shape[0])
+    if n < ncentroids:
+        raise ValueError(
+            f"k-means needs at least ncentroids={ncentroids} vectors to "
+            f"seed distinct centroids, got {n}")
+    rng = np.random.default_rng(seed)
+    init = vectors[jnp.asarray(rng.choice(n, ncentroids, replace=False))]
+
+    def step(centroids, _):
+        q = CoarseQuantizer(centroids)
+        assign = q.assign(vectors)
+        sums = jax.ops.segment_sum(vectors, assign,
+                                   num_segments=ncentroids)
+        counts = jax.ops.segment_sum(jnp.ones((n,), jnp.float32), assign,
+                                     num_segments=ncentroids)
+        fresh = sums / jnp.maximum(counts, 1.0)[:, None]
+        return jnp.where((counts > 0)[:, None], fresh, centroids), None
+
+    centroids, _ = jax.lax.scan(step, init, None, length=iters)
+    return CoarseQuantizer(centroids=centroids)

@@ -1,0 +1,187 @@
+"""``VectorSession``: the vector tier's front door over ``db.Session``.
+
+``probe_vectors(queries, k)`` is the paper's probe-then-post-filter
+split, lowered onto the PR-5 logical-plan IR so it coalesces with every
+other ticket of the flush:
+
+  1. submission time — the coarse quantizer ranks the query batch
+     against the centroids and takes the ``nprobe`` nearest per query
+     (a tiny dense op on device, not a per-op-class dispatch);
+  2. the probe lowers to ``postmap(refine, limit(cap, between(lo, hi)))``
+     — ``Q * nprobe`` bucket ranges over the composite key space that
+     fuse into the flush's ONE materializing-range section (the
+     dispatch-counter pin in tests/test_vector.py);
+  3. extraction time — ``refine`` reshapes the retrieved rowID blocks to
+     per-query candidate sets, gathers their embeddings from the arena,
+     and runs ONE ``ops.distance_topk`` launch for the whole ticket:
+     exact squared-L2 top-k with the deterministic (distance, rowID)
+     tie-break.
+
+Exactness: with ``nprobe == ncentroids`` and ``probe_cap`` at least the
+largest bucket occupancy, every live vector is a candidate and the
+result is bit-identical to brute force (the recall suite's oracle pin).
+Partial probes trade candidates for speed exactly like IVF.
+
+Writes ride the scalar write path: ``insert_vectors`` stages embeddings
+on the tier's arena and queues the composite-key insert;
+``delete_vectors`` re-derives each rowID's composite key from the arena
+(assignment is deterministic, so the reconstructed key equals the
+inserted one) and queues the delete.  Row IDs are the identity contract:
+re-using a live rowID for a different embedding without deleting it
+first would strand the old composite key.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.db.session import Session, Ticket
+from repro.kernels import ops
+from repro.query import plan as qplan
+from repro.query.batch import validate_max_hits
+
+from .tier import VectorTier, bucket_bounds, composite_keys
+
+
+class NeighborResult(NamedTuple):
+    """One probe batch's exact top-k neighbors, nearest first."""
+
+    row_id: jnp.ndarray      # int32 (Q, k) neighbor rowIDs, -1 padded
+    distance: jnp.ndarray    # f32  (Q, k) squared L2, +inf padded
+    count: jnp.ndarray       # int32 (Q,) valid neighbors (= min(k, cands))
+
+
+class VectorSession(Session):
+    """``Session`` plus the vector verbs (see module docstring)."""
+
+    def __init__(self, tier: VectorTier, *, max_hits: int = 64,
+                 nprobe: int = 1):
+        super().__init__(tier, max_hits=max_hits)
+        self.nprobe = nprobe
+
+    # -- reads ----------------------------------------------------------------
+
+    def probe_vectors(self, queries, k: int, *,
+                      nprobe: Optional[int] = None,
+                      probe_cap: Optional[int] = None) -> Ticket:
+        """Queue an ANN probe batch; resolves to ``NeighborResult``.
+
+        ``queries`` (Q, dim) float32; ``k`` neighbors per query;
+        ``nprobe`` buckets probed per query (default: the spec's);
+        ``probe_cap`` candidate rowIDs gathered per bucket (default: the
+        session's ``max_hits`` — raise it toward the largest bucket
+        occupancy for exact results).  Probes queued before a flush fuse
+        with every other read into one dispatch per op class; the only
+        extra launch is the ticket's ``distance_topk`` post-filter.
+        """
+        self._check_open("probe_vectors")
+        tier: VectorTier = self.tier
+        q = jnp.asarray(queries, jnp.float32)
+        if q.ndim != 2 or int(q.shape[1]) != tier.quantizer.dim:
+            raise ValueError(
+                f"probe_vectors queries must be (Q, {tier.quantizer.dim}),"
+                f" got shape {tuple(q.shape)}")
+        if k < 1:
+            raise ValueError(f"probe_vectors needs k >= 1, got {k}")
+        p = self.nprobe if nprobe is None else int(nprobe)
+        if not 1 <= p <= tier.quantizer.ncentroids:
+            raise ValueError(
+                f"nprobe must be in [1, ncentroids="
+                f"{tier.quantizer.ncentroids}], got {p}")
+        cap = self.max_hits if probe_cap is None else int(probe_cap)
+        try:
+            validate_max_hits(cap)
+        except ValueError as e:
+            raise ValueError(f"probe_cap: {e}") from None
+
+        n_q = int(q.shape[0])
+        arena = tier.arena
+        k = int(k)
+
+        def refine(rng: "qplan.cgrx.RangeResult") -> NeighborResult:
+            rows = rng.row_ids.reshape(n_q, p * cap)
+            valid = rows >= 0
+            cands = arena.gather(rows)
+            dist, out_rows = ops.distance_topk(q, cands, rows, valid, k)
+            n_valid = jnp.sum(valid.astype(jnp.int32), axis=-1)
+            return NeighborResult(row_id=out_rows, distance=dist,
+                                  count=jnp.minimum(n_valid, k))
+
+        if n_q == 0:
+            t = self._ticket("vprobe")
+            t._resolve(NeighborResult(
+                row_id=jnp.zeros((0, k), jnp.int32),
+                distance=jnp.zeros((0, k), jnp.float32),
+                count=jnp.zeros((0,), jnp.int32)))
+            return t
+        probe_cids = tier.quantizer.topn(q, p).reshape(-1)
+        lo, hi = bucket_bounds(probe_cids)
+        expr = qplan.postmap(refine, qplan.limit(cap, qplan.between(lo, hi)))
+        return self.query(expr, kind="vprobe")
+
+    # -- writes ---------------------------------------------------------------
+
+    def insert_vectors(self, vectors, row_ids=None) -> Ticket:
+        """Queue an embedding insert batch; resolves to the submitted
+        count.  ``row_ids`` default to freshly allocated arena slots;
+        explicit ids must not collide with live ones (delete first to
+        re-key).  Returns after staging — the flush writes arena and
+        index together, before the same flush's reads."""
+        self._check_writable("insert_vectors")
+        tier: VectorTier = self.tier
+        vecs = jnp.asarray(vectors, jnp.float32)
+        if vecs.ndim != 2 or int(vecs.shape[1]) != tier.quantizer.dim:
+            raise ValueError(
+                f"insert_vectors expects (n, {tier.quantizer.dim}) "
+                f"embeddings, got shape {tuple(vecs.shape)}")
+        n = int(vecs.shape[0])
+        rows = (tier.arena.alloc(n) if row_ids is None
+                else np.asarray(row_ids, np.int32))
+        if rows.shape != (n,):
+            raise ValueError(
+                f"row_ids must be ({n},) to match the batch, got "
+                f"{rows.shape}")
+        if n == 0:
+            t = self._ticket("insert")
+            t._resolve(0)
+            return t
+        tier.stage_vectors(rows, vecs)
+        keys = composite_keys(tier.quantizer.assign(vecs), rows)
+        return self.insert(keys, jnp.asarray(rows))
+
+    def delete_vectors(self, row_ids) -> Ticket:
+        """Queue a delete of the embeddings at ``row_ids``; resolves to
+        the submitted count.  The composite keys are re-derived from the
+        arena (assignment is deterministic), so callers only name rows."""
+        self._check_writable("delete_vectors")
+        tier: VectorTier = self.tier
+        rows = np.asarray(row_ids, np.int32)
+        if rows.ndim != 1:
+            raise ValueError(
+                f"delete_vectors expects a 1-D rowID array, got shape "
+                f"{rows.shape}")
+        if rows.size and (rows.min() < 0 or
+                          int(rows.max()) >= tier.arena.next_row):
+            raise ValueError(
+                f"delete_vectors rowIDs must be previously inserted ids "
+                f"< {tier.arena.next_row}, got range "
+                f"[{rows.min()}, {rows.max()}]")
+        if rows.size == 0:
+            t = self._ticket("delete")
+            t._resolve(0)
+            return t
+        vecs = tier.arena.gather(jnp.asarray(rows))
+        keys = composite_keys(tier.quantizer.assign(vecs), rows)
+        return self.delete(keys)
+
+    # -- introspection --------------------------------------------------------
+
+    @property
+    def ncentroids(self) -> int:
+        return self.tier.quantizer.ncentroids
+
+    @property
+    def dim(self) -> int:
+        return self.tier.quantizer.dim

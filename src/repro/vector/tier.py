@@ -1,0 +1,162 @@
+"""``VectorTier``: the coarse-bucket ANN tier over the scalar rank engine.
+
+The mapping is one line of key arithmetic: embedding ``v`` with rowID
+``r`` and nearest centroid ``c`` is indexed under the 64-bit composite
+key ``(c << 32) | r`` — centroid ID in the high word, rowID in the low
+word.  Centroid ``c``'s bucket is then exactly the key range
+``[(c << 32), (c << 32) | 0xFFFFFFFF]``, so every capability of the
+scalar tiers transfers without new machinery:
+
+  * retrieval  = range lookups on the rank engine (one fused dispatch
+                 for a whole probe batch, ticket coalescing included);
+  * insert     = a composite-key insert + an arena write;
+  * delete     = a composite-key delete (rowID low word keeps every
+                 key unique, so the scalar tiers' unique-key contracts
+                 — sharded routing, delete-all-copies — hold);
+  * sharding   = splitter routing over composite keys; a centroid
+                 bucket that straddles a splitter decomposes exactly
+                 like any other range, and the merged row block
+                 concatenates in shard order — the cross-shard top-k
+                 merge is the ordinary sharded range merge;
+  * compaction = the inner tier's epoch machinery, untouched.
+
+The tier owns the two vector-only structures: the ``CoarseQuantizer``
+(assignment + probe order) and the ``EmbeddingArena`` (rowID-addressed
+payload buffer).  Staged vectors land in the arena inside ``apply`` —
+BEFORE the inner scalar apply — so within one session flush the arena
+is already consistent when the same flush's reads gather from it
+(mirroring the session's writes-before-reads contract).
+
+Durability is deliberately not wired yet: the WAL logs key batches, not
+embeddings, so a recovered vector tier would resurrect keys whose arena
+slots are gone.  ``IndexSpec`` rejects durable vector specs at the
+boundary (see ``db/spec.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.keys import KeyArray
+from repro.db.spec import IndexSpec
+from repro.db.tiers import Stats, build_tier
+from repro.store.arena import EmbeddingArena
+
+from .quantizer import CoarseQuantizer, train_kmeans
+
+_LO_ALL = np.uint32(0xFFFFFFFF)
+
+
+def composite_keys(centroid_ids, row_ids) -> KeyArray:
+    """(centroidID << 32) | rowID as a 64-bit ``KeyArray``."""
+    cids = jnp.asarray(centroid_ids).astype(jnp.uint32)
+    rows = jnp.asarray(row_ids).astype(jnp.uint32)
+    return KeyArray(rows, cids)
+
+
+def bucket_bounds(centroid_ids) -> tuple:
+    """Per-centroid bucket key range: ``[(c<<32), (c<<32)|0xFFFFFFFF]``."""
+    cids = jnp.asarray(centroid_ids).astype(jnp.uint32)
+    lo = KeyArray(jnp.zeros_like(cids), cids)
+    hi = KeyArray(jnp.full_like(cids, _LO_ALL), cids)
+    return lo, hi
+
+
+class VectorTier:
+    """IndexTier wrapper: scalar inner tier + quantizer + arena."""
+
+    tier = "vector"
+
+    def __init__(self, inner, quantizer: CoarseQuantizer,
+                 arena: EmbeddingArena):
+        self.inner = inner
+        self.quantizer = quantizer
+        self.arena = arena
+        self._staged: list = []
+
+    # -- vector-side write staging -------------------------------------------
+
+    def stage_vectors(self, rows, vectors) -> None:
+        """Buffer (rowID, embedding) pairs for the next ``apply`` — the
+        session queues the matching composite-key insert, and the flush
+        drains both in the same write step."""
+        self._staged.append((np.asarray(rows, np.int32),
+                             jnp.asarray(vectors, jnp.float32)))
+
+    # -- IndexTier protocol ---------------------------------------------------
+
+    @property
+    def writable(self) -> bool:
+        return self.inner.writable
+
+    @property
+    def auto_compact(self) -> bool:
+        return self.inner.auto_compact
+
+    def apply(self, ins_keys, ins_rows, del_keys) -> None:
+        # Arena first: the reads of this same flush gather candidate
+        # embeddings by rowID, so the payload must be resident before
+        # the index makes the keys visible.
+        staged, self._staged = self._staged, []
+        for rows, vecs in staged:
+            self.arena.add(rows, vecs)
+        self.inner.apply(ins_keys, ins_rows, del_keys)
+
+    def execute(self, plan):
+        return self.inner.execute(plan)
+
+    def scan_ranks(self, queries: KeyArray, sides: jnp.ndarray):
+        return self.inner.scan_ranks(queries, sides)
+
+    def maybe_compact(self) -> Optional[str]:
+        return self.inner.maybe_compact()
+
+    def sync(self) -> None:
+        self.inner.sync()
+
+    @property
+    def epoch(self) -> int:
+        return self.inner.epoch
+
+    def stats(self) -> Stats:
+        s = self.inner.stats()
+        extra = self.arena.nbytes() + self.quantizer.nbytes()
+        return dataclasses.replace(s, tier=self.tier,
+                                   total_bytes=s.total_bytes + extra)
+
+    def nbytes(self) -> dict:
+        out = dict(self.inner.nbytes())
+        out["arena_bytes"] = self.arena.nbytes()
+        out["centroid_bytes"] = self.quantizer.nbytes()
+        out["total_bytes"] = (out.get("total_bytes", 0)
+                              + out["arena_bytes"] + out["centroid_bytes"])
+        return out
+
+
+def build_vector_tier(spec: IndexSpec, vectors, row_ids=None, *,
+                      train_iters: int = 16, seed: int = 0) -> VectorTier:
+    """Train the quantizer on the corpus, bucket it under composite
+    keys on the scalar tier ``spec.tier`` names, and seed the arena."""
+    vectors = jnp.asarray(vectors, jnp.float32)
+    if vectors.ndim != 2 or int(vectors.shape[1]) != spec.dim:
+        raise ValueError(
+            f"vector corpus must be (n, dim={spec.dim}), got shape "
+            f"{tuple(vectors.shape)}")
+    n = int(vectors.shape[0])
+    if row_ids is None:
+        rows = np.arange(n, dtype=np.int32)
+    else:
+        rows = np.asarray(row_ids, np.int32)
+        if rows.shape != (n,):
+            raise ValueError(
+                f"row_ids must be ({n},) to match the corpus, got "
+                f"{rows.shape}")
+    quantizer = train_kmeans(vectors, spec.ncentroids, iters=train_iters,
+                             seed=seed)
+    keys = composite_keys(quantizer.assign(vectors), rows)
+    inner = build_tier(spec.scalar_spec(), keys, jnp.asarray(rows))
+    arena = EmbeddingArena.build(vectors, rows)
+    return VectorTier(inner, quantizer, arena)

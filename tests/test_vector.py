@@ -1,0 +1,482 @@
+"""Vector tier: recall@k vs a brute-force numpy oracle, cross-tier
+parity, spec-boundary validation, and the flush dispatch-counter pin.
+
+Exactness setup: the corpora snap components to a dyadic grid
+(``keygen.embedding_set(grid=...)``), so every squared distance is an
+exact float32 — numpy and JAX order candidates identically and the
+exhaustive-probe suite can demand BIT-identical results, not allclose.
+"""
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+import repro.db as db
+from repro.data import keygen
+from repro.db.errors import InvalidSpecError, ReadOnlyTierError
+from repro.kernels import ops, ref
+from repro.kernels.distance_topk import distance_topk_kernel
+from repro.models.embeddings import token_embeddings
+from repro.store.arena import EmbeddingArena
+from repro.vector import (CoarseQuantizer, bucket_bounds, composite_keys,
+                          train_kmeans)
+
+DIM = 16
+NCENT = 8
+GRID = 16
+
+
+def corpus(n=512, seed=3):
+    return keygen.embedding_set(n, DIM, nclusters=6, spread=0.15,
+                                seed=seed, grid=GRID)
+
+
+def queries_for(vecs, q=32, seed=4):
+    return keygen.embedding_queries(vecs, q, seed=seed, grid=GRID)
+
+
+def brute_force(vecs, queries, k, live=None):
+    """Numpy oracle: exact top-k with the (distance, rowID) tie-break.
+
+    ``live`` masks the oracle to the given rowIDs (the live set after
+    deletes); returned rowIDs are -1-padded past the live count."""
+    d2 = ((vecs[None, :, :] - queries[:, None, :]) ** 2).sum(-1)
+    d2 = d2.astype(np.float32)
+    rows = np.arange(len(vecs))
+    if live is not None:
+        mask = np.zeros(len(vecs), bool)
+        mask[np.asarray(live)] = True
+        d2 = np.where(mask[None, :], d2, np.inf)
+    order = np.lexsort((np.broadcast_to(rows, d2.shape), d2),
+                       axis=-1)[:, :k]
+    dist = np.take_along_axis(d2, order, axis=-1)
+    out_rows = np.where(np.isfinite(dist), order, -1).astype(np.int32)
+    return out_rows, np.where(np.isfinite(dist), dist,
+                              np.inf).astype(np.float32)
+
+
+def vector_spec(tier="live", **kw):
+    kw.setdefault("kind", "vector")
+    kw.setdefault("dim", DIM)
+    kw.setdefault("ncentroids", NCENT)
+    kw.setdefault("max_hits", 128)
+    return db.IndexSpec(tier=tier, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Spec boundary (satellite: typed errors naming field and value).
+# ---------------------------------------------------------------------------
+
+class TestSpecValidation:
+    def test_vector_spec_roundtrip(self):
+        s = vector_spec(nprobe=4)
+        assert s.kind == "vector" and s.effective_nprobe == 4
+        assert s.scalar_spec().kind == "scalar"
+        assert s.scalar_spec().dim is None
+
+    def test_nprobe_defaults_exhaustive(self):
+        assert vector_spec().effective_nprobe == NCENT
+
+    def test_unknown_kind(self):
+        with pytest.raises(InvalidSpecError, match="pointcloud"):
+            db.IndexSpec(kind="pointcloud")
+
+    def test_vector_without_dim(self):
+        with pytest.raises(InvalidSpecError, match="dim"):
+            db.IndexSpec(kind="vector", ncentroids=4)
+
+    def test_vector_without_ncentroids(self):
+        with pytest.raises(InvalidSpecError, match="ncentroids"):
+            db.IndexSpec(kind="vector", dim=8)
+
+    @pytest.mark.parametrize("field,value", [("dim", 0), ("dim", -3),
+                                             ("ncentroids", 0),
+                                             ("nprobe", 0)])
+    def test_non_positive_values_named(self, field, value):
+        kw = {"kind": "vector", "dim": 8, "ncentroids": 4}
+        kw[field] = value
+        with pytest.raises(InvalidSpecError) as e:
+            db.IndexSpec(**kw)
+        assert field in str(e.value) and str(value) in str(e.value)
+
+    def test_nprobe_exceeds_ncentroids(self):
+        with pytest.raises(InvalidSpecError, match="nprobe=9"):
+            db.IndexSpec(kind="vector", dim=8, ncentroids=4, nprobe=9)
+
+    @pytest.mark.parametrize("field,value", [("dim", 8),
+                                             ("ncentroids", 4),
+                                             ("nprobe", 2)])
+    def test_vector_options_on_scalar_spec(self, field, value):
+        with pytest.raises(InvalidSpecError) as e:
+            db.IndexSpec(**{field: value})
+        assert field in str(e.value) and "vector" in str(e.value)
+
+    def test_durable_vector_rejected(self, tmp_path):
+        with pytest.raises(InvalidSpecError, match="durability"):
+            db.IndexSpec(kind="vector", dim=8, ncentroids=4,
+                         durability="wal", wal_dir=str(tmp_path))
+
+    def test_build_tier_rejects_vector_spec(self):
+        keys = db.as_key_array(np.arange(8, dtype=np.uint32))
+        with pytest.raises(InvalidSpecError, match="repro.db.open"):
+            db.build_tier(vector_spec(), keys)
+
+    def test_open_needs_corpus(self):
+        with pytest.raises(ValueError, match="embedding corpus"):
+            db.open(vector_spec())
+
+    def test_open_rejects_recover(self):
+        with pytest.raises(InvalidSpecError, match="recover"):
+            db.open(vector_spec(), corpus(64), recover=True)
+
+
+# ---------------------------------------------------------------------------
+# Quantizer, composite keys, arena.
+# ---------------------------------------------------------------------------
+
+class TestComponents:
+    def test_kmeans_deterministic_and_assign_ties_low(self):
+        vecs = corpus(256)
+        q1 = train_kmeans(vecs, NCENT, seed=0)
+        q2 = train_kmeans(vecs, NCENT, seed=0)
+        assert np.array_equal(np.asarray(q1.centroids),
+                              np.asarray(q2.centroids))
+        a = np.asarray(q1.assign(vecs))
+        assert a.min() >= 0 and a.max() < NCENT
+        # topn is nearest-first and its first column equals assign.
+        top = np.asarray(q1.topn(vecs, 3))
+        assert np.array_equal(top[:, 0], a)
+
+    def test_kmeans_needs_enough_vectors(self):
+        with pytest.raises(ValueError, match="ncentroids"):
+            train_kmeans(corpus(4), NCENT)
+
+    def test_quantizer_is_pytree(self):
+        import jax
+        q = train_kmeans(corpus(64), 4)
+        leaves = jax.tree_util.tree_leaves(q)
+        assert len(leaves) == 1 and leaves[0].shape == (4, DIM)
+
+    def test_composite_keys_roundtrip(self):
+        cids = np.array([3, 0, 7], np.int32)
+        rows = np.array([10, 99, 0], np.int32)
+        keys = composite_keys(cids, rows)
+        raw = keys.to_numpy()
+        assert np.array_equal(raw >> 32, cids.astype(np.uint64))
+        assert np.array_equal(raw & 0xFFFFFFFF, rows.astype(np.uint64))
+        lo, hi = bucket_bounds(cids)
+        assert np.array_equal(lo.to_numpy(), cids.astype(np.uint64) << 32)
+        assert np.array_equal(hi.to_numpy(),
+                              (cids.astype(np.uint64) << 32) | 0xFFFFFFFF)
+
+    def test_arena_grow_gather_alloc(self):
+        a = EmbeddingArena(4)
+        rows = a.alloc(3)
+        vecs = np.arange(12, dtype=np.float32).reshape(3, 4)
+        a.add(rows, vecs)
+        assert a.capacity >= 3 and a.next_row == 3
+        got = np.asarray(a.gather(jnp.asarray(rows)))
+        assert np.array_equal(got, vecs)
+        # geometric growth keeps old content
+        big = a.alloc(100)
+        a.add(big, np.ones((100, 4), np.float32))
+        assert np.array_equal(np.asarray(a.gather(jnp.asarray(rows))), vecs)
+        # out-of-range gathers clamp, never fault
+        assert np.asarray(a.gather(jnp.asarray([-1]))).shape == (1, 4)
+
+    def test_arena_shape_errors(self):
+        a = EmbeddingArena(4)
+        with pytest.raises(ValueError, match="vectors"):
+            a.add(np.array([0]), np.ones((1, 5), np.float32))
+        with pytest.raises(ValueError, match="non-negative"):
+            a.add(np.array([-1]), np.ones((1, 4), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# distance_topk: kernel vs ref oracle.
+# ---------------------------------------------------------------------------
+
+class TestDistanceTopk:
+    def _case(self, seed=7, Q=6, C=40, D=16):
+        rng = np.random.default_rng(seed)
+        q = rng.normal(size=(Q, D)).astype(np.float32)
+        c = rng.normal(size=(Q, C, D)).astype(np.float32)
+        r = rng.permutation(np.arange(Q * C, dtype=np.int32)).reshape(Q, C)
+        v = rng.random((Q, C)) > 0.2
+        return q, c, r, v
+
+    @pytest.mark.parametrize("k", [1, 7, 64])
+    def test_kernel_matches_ref(self, k):
+        q, c, r, v = self._case()
+        dk, rk = distance_topk_kernel(*map(jnp.asarray, (q, c, r, v)), k,
+                                      interpret=True)
+        dr, rr = ref.distance_topk_ref(*map(jnp.asarray, (q, c, r, v)), k)
+        assert np.array_equal(np.asarray(rk), np.asarray(rr))
+        np.testing.assert_allclose(np.asarray(dk), np.asarray(dr))
+
+    def test_fewer_candidates_than_k_pads(self):
+        q, c, r, v = self._case()
+        v2 = np.zeros_like(v)
+        v2[:, :3] = True
+        dk, rk = distance_topk_kernel(*map(jnp.asarray, (q, c, r, v2)), 8,
+                                      interpret=True)
+        rk = np.asarray(rk)
+        assert (rk[:, 3:] == -1).all() and (rk[:, :3] >= 0).all()
+        assert np.isinf(np.asarray(dk)[:, 3:]).all()
+
+    def test_tie_break_prefers_low_row(self):
+        # Two identical candidates with different rowIDs: the smaller
+        # rowID must win in both implementations.
+        q = np.zeros((1, 4), np.float32)
+        c = np.zeros((1, 2, 4), np.float32)
+        r = np.array([[9, 2]], np.int32)
+        v = np.ones((1, 2), bool)
+        _, rk = distance_topk_kernel(*map(jnp.asarray, (q, c, r, v)), 2,
+                                     interpret=True)
+        _, rr = ref.distance_topk_ref(*map(jnp.asarray, (q, c, r, v)), 2)
+        assert np.asarray(rk).tolist() == [[2, 9]]
+        assert np.asarray(rr).tolist() == [[2, 9]]
+
+    def test_ops_wrapper_paths(self):
+        q, c, r, v = self._case(Q=3, C=16, D=8)
+        args = tuple(map(jnp.asarray, (q, c, r, v)))
+        d_auto, r_auto = ops.distance_topk(*args, 5)
+        d_ref, r_ref = ops.distance_topk(*args, 5, method="ref")
+        d_k, r_k = ops.distance_topk(*args, 5, method="kernel")
+        assert np.array_equal(np.asarray(r_auto), np.asarray(r_ref))
+        assert np.array_equal(np.asarray(r_k), np.asarray(r_ref))
+        np.testing.assert_allclose(np.asarray(d_k), np.asarray(d_ref))
+        with pytest.raises(ValueError, match="method"):
+            ops.distance_topk(*args, 5, method="gpu")
+
+    def test_ops_wrapper_empty_batch(self):
+        d, r = ops.distance_topk(jnp.zeros((0, 4)), jnp.zeros((0, 3, 4)),
+                                 jnp.zeros((0, 3), jnp.int32),
+                                 jnp.zeros((0, 3), bool), 5)
+        assert d.shape == (0, 5) and r.shape == (0, 5)
+
+
+# ---------------------------------------------------------------------------
+# Recall@k property suite vs the brute-force oracle.
+# ---------------------------------------------------------------------------
+
+class TestRecall:
+    @pytest.mark.parametrize("tier", ["static", "live", "sharded"])
+    def test_exhaustive_probe_bit_identical(self, tier):
+        vecs = corpus()
+        qs = queries_for(vecs)
+        sess = db.open(vector_spec(tier=tier, nprobe=NCENT), vecs)
+        res = sess.probe_vectors(qs, k=10, probe_cap=len(vecs)).result()
+        o_rows, o_dist = brute_force(vecs, qs, 10)
+        assert np.array_equal(np.asarray(res.row_id), o_rows)
+        assert np.array_equal(np.asarray(res.distance), o_dist)
+        assert (np.asarray(res.count) == 10).all()
+
+    def test_partial_probe_recall_floor(self):
+        vecs = corpus(1024, seed=11)
+        qs = queries_for(vecs, 64, seed=12)
+        sess = db.open(vector_spec(nprobe=2, ncentroids=NCENT), vecs)
+        res = sess.probe_vectors(qs, k=10, probe_cap=1024).result()
+        o_rows, _ = brute_force(vecs, qs, 10)
+        got = np.asarray(res.row_id)
+        recall = np.mean([len(set(g) & set(o)) / 10.0
+                          for g, o in zip(got, o_rows)])
+        # Pinned floor: clustered corpus + queries near corpus points,
+        # 2/8 buckets probed. Deterministic workload, so a regression
+        # here is a real quantizer/probe change, not noise.
+        assert recall >= 0.8, f"recall@10 {recall:.3f} under floor"
+        # and more probes monotonically reach exactness
+        full = sess.probe_vectors(qs, k=10, nprobe=NCENT,
+                                  probe_cap=1024).result()
+        assert np.array_equal(np.asarray(full.row_id), o_rows)
+
+    def test_probe_cap_bounds_candidates(self):
+        vecs = corpus()
+        qs = queries_for(vecs, 8)
+        sess = db.open(vector_spec(nprobe=NCENT), vecs)
+        res = sess.probe_vectors(qs, k=4, probe_cap=1).result()
+        # one candidate per bucket -> at most NCENT candidates
+        assert (np.asarray(res.count) <= NCENT).all()
+
+
+# ---------------------------------------------------------------------------
+# Live updates + cross-tier parity on the same op sequence.
+# ---------------------------------------------------------------------------
+
+class TestLiveAndParity:
+    def _drive(self, sess, vecs):
+        """One mixed insert/delete/probe sequence; returns probe results."""
+        qs = queries_for(vecs, 16, seed=21)
+        extra = keygen.embedding_set(48, DIM, nclusters=6, seed=22,
+                                     grid=GRID)
+        out = []
+        sess.insert_vectors(extra[:32])
+        out.append(sess.probe_vectors(qs, k=8, probe_cap=2048))
+        sess.flush()
+        sess.delete_vectors(np.arange(0, 40, 2, dtype=np.int32))
+        sess.insert_vectors(extra[32:],
+                            row_ids=np.arange(len(vecs) + 32,
+                                              len(vecs) + 48))
+        out.append(sess.probe_vectors(qs, k=8, probe_cap=2048))
+        sess.flush()
+        return [t.result() for t in out]
+
+    def test_live_matches_oracle_through_updates(self):
+        vecs = corpus()
+        sess = db.open(vector_spec(tier="live", nprobe=NCENT), vecs)
+        r1, r2 = self._drive(sess, vecs)
+        extra = keygen.embedding_set(48, DIM, nclusters=6, seed=22,
+                                     grid=GRID)
+        all_vecs = np.concatenate([vecs, extra])
+        qs = queries_for(vecs, 16, seed=21)
+        live1 = np.arange(len(vecs) + 32)
+        o_rows, o_dist = brute_force(all_vecs, qs, 8, live=live1)
+        assert np.array_equal(np.asarray(r1.row_id), o_rows)
+        live2 = np.setdiff1d(np.arange(len(vecs) + 48),
+                             np.arange(0, 40, 2))
+        o_rows2, o_dist2 = brute_force(all_vecs, qs, 8, live=live2)
+        assert np.array_equal(np.asarray(r2.row_id), o_rows2)
+        assert np.array_equal(np.asarray(r2.distance), o_dist2)
+
+    def test_live_sharded_parity(self):
+        vecs = corpus()
+        live = db.open(vector_spec(tier="live", nprobe=NCENT), vecs)
+        shard = db.open(vector_spec(tier="sharded", nprobe=NCENT, shards=3),
+                        vecs)
+        for a, b in zip(self._drive(live, vecs), self._drive(shard, vecs)):
+            assert np.array_equal(np.asarray(a.row_id),
+                                  np.asarray(b.row_id))
+            assert np.array_equal(np.asarray(a.distance),
+                                  np.asarray(b.distance))
+
+    def test_static_tier_rejects_vector_writes(self):
+        sess = db.open(vector_spec(tier="static"), corpus(64))
+        with pytest.raises(ReadOnlyTierError):
+            sess.insert_vectors(corpus(4, seed=5))
+        with pytest.raises(ReadOnlyTierError):
+            sess.delete_vectors(np.array([0], np.int32))
+
+
+# ---------------------------------------------------------------------------
+# Session surface: dispatch pin, coalescing, validation, stats.
+# ---------------------------------------------------------------------------
+
+class TestSessionSurface:
+    def test_dispatch_counter_pin(self):
+        """N probes + scalar reads + writes in one flush = one apply +
+        one query dispatch (the acceptance pin: probes fuse into the
+        one-dispatch-per-op-class flush; the only extra launch is the
+        per-ticket distance_topk post-filter, which is not a dispatch
+        round)."""
+        vecs = corpus()
+        sess = db.open(vector_spec(nprobe=2), vecs)
+        assert sess.dispatches == {"apply": 0, "query": 0, "rank": 0}
+        qs = queries_for(vecs, 8)
+        tickets = [sess.probe_vectors(qs, k=4) for _ in range(3)]
+        sess.insert_vectors(corpus(8, seed=30))
+        sess.insert_vectors(corpus(8, seed=31),
+                            row_ids=np.arange(520, 528))
+        rep = sess.flush()
+        assert sess.dispatches == {"apply": 1, "query": 1, "rank": 0}
+        # every probe resolved from that one dispatch
+        for t in tickets:
+            assert t.result().row_id.shape == (8, 4)
+        # 3 probe tickets x 8 queries x nprobe=2 ranges
+        assert rep.n_range == 3 * 8 * 2
+
+    def test_probe_validation(self):
+        sess = db.open(vector_spec(), corpus(64))
+        qs = queries_for(corpus(64), 4)
+        with pytest.raises(ValueError, match="nprobe"):
+            sess.probe_vectors(qs, k=2, nprobe=NCENT + 1)
+        with pytest.raises(ValueError, match="k >= 1"):
+            sess.probe_vectors(qs, k=0)
+        with pytest.raises(ValueError, match=r"\(Q, 16\)"):
+            sess.probe_vectors(np.zeros((4, 3), np.float32), k=2)
+        with pytest.raises(ValueError, match="probe_cap"):
+            sess.probe_vectors(qs, k=2, probe_cap=-1)
+
+    def test_zero_query_probe_resolves_immediately(self):
+        sess = db.open(vector_spec(), corpus(64))
+        t = sess.probe_vectors(np.zeros((0, DIM), np.float32), k=5)
+        assert t.ready
+        res = t.result()
+        assert res.row_id.shape == (0, 5) and res.count.shape == (0,)
+
+    def test_write_validation(self):
+        sess = db.open(vector_spec(), corpus(64))
+        with pytest.raises(ValueError, match="row_ids"):
+            sess.insert_vectors(corpus(4, seed=5),
+                                row_ids=np.arange(3))
+        with pytest.raises(ValueError, match="previously inserted"):
+            sess.delete_vectors(np.array([9999], np.int32))
+        t = sess.insert_vectors(np.zeros((0, DIM), np.float32))
+        assert t.ready and t.result() == 0
+        t = sess.delete_vectors(np.zeros((0,), np.int32))
+        assert t.ready and t.result() == 0
+
+    def test_stats_and_nbytes_report_vector_tier(self):
+        vecs = corpus(128)
+        sess = db.open(vector_spec(), vecs)
+        s = sess.stats()
+        assert s.tier == "vector" and s.live_keys == 128
+        nb = sess.nbytes()
+        assert nb["arena_bytes"] >= 128 * DIM * 4
+        assert nb["centroid_bytes"] == NCENT * DIM * 4
+        assert nb["total_bytes"] > nb["arena_bytes"]
+
+    def test_compaction_inherited(self):
+        vecs = corpus(256)
+        policy = db.CompactionPolicy(max_chain=1)
+        sess = db.open(vector_spec(tier="live", nprobe=NCENT,
+                                   policy=policy), vecs)
+        sess.insert_vectors(corpus(64, seed=40))
+        rep = sess.flush()
+        assert rep.compacted is not None
+        qs = queries_for(vecs, 8)
+        res = sess.probe_vectors(qs, k=5, probe_cap=1024).result()
+        all_vecs = np.concatenate([vecs, corpus(64, seed=40)])
+        o_rows, _ = brute_force(all_vecs, qs, 5)
+        assert np.array_equal(np.asarray(res.row_id), o_rows)
+
+    def test_lm_embedding_corpus_roundtrip(self):
+        """models/embeddings.py vectors drive the tier end to end."""
+        vecs = token_embeddings(96, DIM, seed=2)
+        assert vecs.shape == (96, DIM) and vecs.dtype == np.float32
+        assert np.array_equal(vecs, token_embeddings(96, DIM, seed=2))
+        sess = db.open(vector_spec(nprobe=NCENT), vecs)
+        res = sess.probe_vectors(vecs[:5], k=1, probe_cap=256).result()
+        # nearest neighbor of a corpus vector is itself
+        assert np.array_equal(np.asarray(res.row_id)[:, 0], np.arange(5))
+
+
+# ---------------------------------------------------------------------------
+# Postmap IR node (the lowering hook the probe rides).
+# ---------------------------------------------------------------------------
+
+class TestPostmap:
+    def test_postmap_wraps_any_expr(self):
+        keys = db.as_key_array(np.arange(32, dtype=np.uint32))
+        sess = db.open(db.IndexSpec(tier="live"), keys)
+        e = db.postmap(lambda cnt: cnt * 2,
+                       db.count(db.between(keys[:4], keys[4:8])))
+        doubled = sess.query(e).result()
+        plain = sess.query(db.count(db.between(keys[:4],
+                                               keys[4:8]))).result()
+        assert np.array_equal(np.asarray(doubled), np.asarray(plain) * 2)
+
+    def test_postmap_empty_submission_runs_fn(self):
+        keys = db.as_key_array(np.arange(8, dtype=np.uint32))
+        sess = db.open(db.IndexSpec(tier="live"), keys)
+        t = sess.query(db.postmap(lambda cnt: cnt.shape,
+                                  db.count(db.between(keys[:0],
+                                                      keys[:0]))))
+        assert t.ready and t.result() == (0,)
+
+    def test_postmap_type_errors(self):
+        keys = db.as_key_array(np.arange(4, dtype=np.uint32))
+        with pytest.raises(TypeError, match="callable"):
+            db.postmap(3, db.eq(keys))
+        with pytest.raises(TypeError, match="expression"):
+            db.postmap(lambda r: r, "nope")
