@@ -3,7 +3,7 @@ PY ?= python
 export JAX_PLATFORMS ?= cpu
 
 .PHONY: check test lint bench-smoke bench-json bench-compare quickstart \
-	examples
+	examples scenarios
 
 check: lint test bench-smoke examples
 
@@ -28,6 +28,15 @@ bench-json:
 bench-compare: bench-json
 	PYTHONPATH=src $(PY) -m benchmarks.compare BENCH_BASELINE.json \
 		bench_results.json
+
+# Hostile-traffic scenario harness (benchmarks/scenarios.py): every
+# scenario end-to-end, plus one --scenario run whose Session.telemetry()
+# export is stamped into the JSON (the CI artifact).
+scenarios:
+	PYTHONPATH=src $(PY) -m benchmarks.run --suites scenarios \
+		--n 8192 --q 4096
+	PYTHONPATH=src $(PY) -m benchmarks.run --scenario flash_crowd \
+		--n 8192 --q 4096 --json scenario_telemetry.json
 
 quickstart:
 	PYTHONPATH=src $(PY) examples/quickstart.py

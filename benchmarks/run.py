@@ -1,7 +1,8 @@
 """Run every paper-table benchmark.  Output: ``name,us_per_call,derived``.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--suites a,b] \
-                                            [--seed S] [--json out.json]
+                                            [--seed S] [--json out.json] \
+                                            [--scenario NAME]
 
 Default sizes are container-scale (2^18 keys); --full is paper-scale
 (2^26 keys / 2^27 lookups, needs paper-class memory).  ``--suites``
@@ -42,6 +43,7 @@ SUITES = [
     ("query_plan", "benchmarks.bench_query_plan"),
     ("recovery", "benchmarks.bench_recovery"),
     ("vector", "benchmarks.bench_vector"),
+    ("scenarios", "benchmarks.scenarios"),
 ]
 
 
@@ -89,13 +91,32 @@ def main() -> None:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write {suite: {metric: us_per_call}} JSON "
                          "(+ provenance under '_meta')")
+    ap.add_argument("--scenario", default=None, metavar="NAME",
+                    help="run ONE adaptive-runtime scenario "
+                         "(benchmarks.scenarios) instead of the suites; "
+                         "its Session.telemetry() export is stamped into "
+                         "the --json payload under '_telemetry'")
     args = ap.parse_args()
     n = args.n or (1 << 26 if args.full else 1 << 18)
     q = args.q or (1 << 27 if args.full else 1 << 19)
 
+    telemetry = None
+    if args.scenario:
+        from benchmarks import scenarios as sc
+
+        common.set_suite("scenarios")
+        if args.scenario not in sc.SCENARIOS:
+            print(f"# ERROR: unknown scenario {args.scenario!r}; known: "
+                  f"{sorted(sc.SCENARIOS)}")
+            sys.exit(2)
+        print(f"# === scenario {args.scenario} (n={n}, q={q}) ===",
+              flush=True)
+        telemetry = {args.scenario:
+                     sc.run_scenario(args.scenario, n, q, args.seed or 0)}
+
     failures = []
     n_ran = 0
-    for name, mod_name in SUITES:
+    for name, mod_name in ([] if args.scenario else SUITES):
         if not _selected(name, args):
             continue
         n_ran += 1
@@ -110,7 +131,7 @@ def main() -> None:
             failures.append(name)
             print(f"# {name} FAILED:\n{traceback.format_exc()[-2000:]}",
                   flush=True)
-    if n_ran == 0:
+    if n_ran == 0 and not args.scenario:
         # A typo'd filter must not produce a green (and, with --json,
         # metric-free) run that measured nothing.
         print(f"# ERROR: no suites matched --only={args.only!r} "
@@ -128,6 +149,10 @@ def main() -> None:
             "n": n,
             "q": q,
         }
+        if telemetry is not None:
+            # Adaptive-runtime observability rides along with provenance:
+            # `_`-prefixed, so compare.py never gates on it.
+            payload["_telemetry"] = telemetry
         with open(args.json, "w") as fh:
             json.dump(payload, fh, indent=2, sort_keys=True)
         print(f"# wrote {args.json} "

@@ -1,0 +1,221 @@
+"""Hostile-traffic scenario harness for the adaptive serving runtime.
+
+Each scenario drives a full ``repro.db`` session loop (not a single
+kernel) with one of the ``repro.data.keygen`` adversarial workload
+shapes and measures what the tuning plane (telemetry bus + admission
+controller + autotuner) does about it:
+
+``flash_crowd``      a burst of overlapping range lookups against an
+                     SLO'd session: the admission controller's deadline
+                     flushing keeps request sojourn under the SLO where
+                     the unprotected baseline batches itself into one
+                     giant tail-blowing flush;
+``zipf_hotshard``    spatially-Zipfian points on a sharded store: the
+                     skew monitor's touch histogram triggers bounded
+                     ``migrate_step`` ticks, vs the stop-and-rebuild
+                     full rebalance's single long pause;
+``boundary_hotspot`` points straddling ONE splitter (heat the size
+                     histogram cannot see, split across two adjacent
+                     shards) — the incremental migrator nudges that
+                     splitter;
+``tenant_mix``       mixed-skew multi-tenant points on the live tier:
+                     the autotuner explores the flat backends and
+                     commits to the measured-fastest.
+
+Scenario sizes are capped (session-loop benchmarks are dominated by
+flush count, not key count), so the suite doubles as the CI perf-smoke
+job.  ``benchmarks.run --scenario <name>`` runs one scenario and stamps
+its ``Session.telemetry()`` export into the ``--json`` payload under
+``_telemetry`` alongside ``_meta``.
+"""
+from benchmarks.common import emit
+
+import time
+
+import numpy as np
+
+import repro.db as db
+from repro.data import keygen
+
+# Session-loop scenarios: cap sizes so a scenario is flush-count bound.
+MAX_N = 1 << 14
+MAX_Q = 1 << 13
+
+
+def _clamp(n, q):
+    return min(n, MAX_N), min(q, MAX_Q)
+
+
+def _p99(xs):
+    return float(np.percentile(np.asarray(xs, np.float64), 99))
+
+
+# ---------------------------------------------------------------------------
+# flash_crowd: deadline flushing vs unprotected batching.
+# ---------------------------------------------------------------------------
+
+def scenario_flash_crowd(n: int, q: int, seed: int = 0) -> dict:
+    n, q = _clamp(n, q // 8)
+    slo_ms = 100.0          # CPU-container floor: a flush is ~tens of ms
+    keys, rows, raw = keygen.keyset(n, 1.0, bits=32, seed=seed)
+    lo, hi = keygen.flash_crowd_ranges(raw, q, width=32, crowd_frac=0.9,
+                                       seed=seed + 1)
+
+    def drive(spec):
+        """Submit the crowd one range at a time (no manual flushing —
+        the admission controller owns the flush decision) and record
+        each request's sojourn: submit -> resolved by some flush."""
+        sess = db.open(spec, keys, rows)
+        # Warm the plan shapes (lanes pad to multiples of query.LANE, so
+        # a couple of flush widths cover the steady state): jit compile
+        # time is toolchain cost, not the queueing behavior under test.
+        for w in (1, 48):
+            sess.range(keygen.as_keys(lo[:w], 32),
+                       keygen.as_keys(hi[:w], 32))
+            sess.flush()
+        sojourn, waiting = [], []
+        for i in range(len(lo)):
+            t0 = time.perf_counter()
+            sess.range(keygen.as_keys(lo[i:i + 1], 32),
+                       keygen.as_keys(hi[i:i + 1], 32))
+            waiting.append(t0)
+            if sess.pending == 0:          # a deadline flush drained us
+                now = time.perf_counter()
+                sojourn.extend(now - t for t in waiting)
+                waiting.clear()
+        sess.flush()
+        now = time.perf_counter()
+        sojourn.extend(now - t for t in waiting)
+        tel = sess.telemetry()
+        sess.close()
+        return sojourn, tel
+
+    sojourn_slo, tel = drive(db.IndexSpec(tier="live", slo_ms=slo_ms))
+    sojourn_base, _ = drive(db.IndexSpec(tier="live"))
+
+    p99_slo, p99_base = _p99(sojourn_slo), _p99(sojourn_base)
+    viol = sum(s > slo_ms / 1e3 for s in sojourn_slo)
+    emit("flash_crowd_p99_slo", p99_slo,
+         f"slo={slo_ms}ms violations={viol}/{len(sojourn_slo)}")
+    emit("flash_crowd_p99_baseline", p99_base, "unprotected")
+    return tel
+
+
+# ---------------------------------------------------------------------------
+# zipf_hotshard: incremental migration vs stop-and-rebuild pause.
+# ---------------------------------------------------------------------------
+
+def _drive_sharded(keys, rows, batches, spec):
+    """Run the lookup batches through flushes, timing each full flush
+    call (autotuner actions INCLUDED — the pause is the point)."""
+    sess = db.open(spec, keys, rows)
+    pauses = []
+    for qb in batches:
+        sess.lookup(qb)
+        t0 = time.perf_counter()
+        sess.flush()
+        pauses.append(time.perf_counter() - t0)
+    tel = sess.telemetry()
+    st = sess.tier.store.stats()
+    sess.close()
+    return pauses, tel, st
+
+
+def scenario_zipf_hotshard(n: int, q: int, seed: int = 0) -> dict:
+    n, q = _clamp(n, q)
+    keys, rows, raw = keygen.keyset(n, 1.0, bits=32, seed=seed)
+    hot = keygen.zipfian_keys(raw, q, theta=1.2, seed=seed + 1)
+    batches = [keygen.as_keys(b, 32)
+               for b in np.array_split(hot, 24) if len(b)]
+
+    def spec(mode):
+        return db.IndexSpec(tier="sharded", shards=4, autotune=True,
+                            max_imbalance=1.3, rebalance_mode=mode,
+                            migrate_max_keys=256)
+
+    pauses_inc, tel, st = _drive_sharded(keys, rows, batches,
+                                         spec("incremental"))
+    _, tel_full, _ = _drive_sharded(keys, rows, batches, spec("full"))
+
+    # The pause comparison is the placement action itself (bus spans the
+    # autotuner records around migrate_step / rebalance), at steady
+    # state (p50): the first ticks of each new apply shape pay a one-off
+    # jit compile that is toolchain cost, not the per-tick pause.
+    mig = tel["spans"].get("migrate", {"p50": 0.0, "n": 0})
+    reb = tel_full["spans"].get("rebalance", {"p50": 0.0, "n": 0})
+    emit("zipf_hotshard_migrate_tick_p50", mig["p50"],
+         f"migrations={st.migrations}")
+    emit("zipf_hotshard_rebalance_p50", reb["p50"],
+         f"n={reb['n']} stop-and-rebuild")
+    emit("zipf_hotshard_flush_p99", _p99(pauses_inc),
+         f"touch_imb={st.touch_imbalance:.2f}")
+    return tel
+
+
+def scenario_boundary_hotspot(n: int, q: int, seed: int = 0) -> dict:
+    n, q = _clamp(n, q)
+    shards = 4
+    keys, rows, raw = keygen.keyset(n, 1.0, bits=32, seed=seed)
+    hot = keygen.boundary_hot_keys(raw, q, shards, boundary=2,
+                                   width=256, seed=seed + 1)
+    batches = [keygen.as_keys(b, 32)
+               for b in np.array_split(hot, 24) if len(b)]
+    spec = db.IndexSpec(tier="sharded", shards=shards, autotune=True,
+                        max_imbalance=1.3, rebalance_mode="incremental",
+                        migrate_max_keys=256)
+    pauses, tel, st = _drive_sharded(keys, rows, batches, spec)
+    emit("boundary_hotspot_flush_p99", _p99(pauses),
+         f"migrations={st.migrations} "
+         f"touch_imb={st.touch_imbalance:.2f}")
+    return tel
+
+
+# ---------------------------------------------------------------------------
+# tenant_mix: backend explore-then-commit under mixed skew.
+# ---------------------------------------------------------------------------
+
+def scenario_tenant_mix(n: int, q: int, seed: int = 0) -> dict:
+    n, q = _clamp(n, q)
+    keys, rows, raw = keygen.keyset(n, 1.0, bits=32, seed=seed)
+    mix, _tids = keygen.tenant_mix(raw, q, seed=seed + 1)
+    batches = [keygen.as_keys(b, 32)
+               for b in np.array_split(mix, 16) if len(b)]
+    sess = db.open(db.IndexSpec(tier="live", autotune=True), keys, rows)
+    for qb in batches:
+        sess.lookup(qb)
+        sess.flush()
+    tel = sess.telemetry()
+    sess.close()
+    committed = tel["autotune"]["committed_backend"]
+    q50 = tel["spans"].get("query", {}).get("p50", 0.0)
+    emit("tenant_mix_query_p50", q50, f"backend={committed}")
+    return tel
+
+
+SCENARIOS = {
+    "flash_crowd": scenario_flash_crowd,
+    "zipf_hotshard": scenario_zipf_hotshard,
+    "boundary_hotspot": scenario_boundary_hotspot,
+    "tenant_mix": scenario_tenant_mix,
+}
+
+
+def run_scenario(name: str, n: int, q: int, seed: int = 0) -> dict:
+    """Run ONE scenario; emits its metrics and returns the session's
+    ``telemetry()`` export (stamped under ``_telemetry`` by run.py)."""
+    if name not in SCENARIOS:
+        raise KeyError(f"unknown scenario {name!r}; known: "
+                       f"{sorted(SCENARIOS)}")
+    return SCENARIOS[name](n, q, seed)
+
+
+def main(args=None) -> None:
+    from benchmarks.common import parse_args
+    args = args or parse_args()
+    seed = args.seed or 0
+    for name in SCENARIOS:
+        run_scenario(name, args.n, args.q, seed)
+
+
+if __name__ == "__main__":
+    main()

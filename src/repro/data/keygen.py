@@ -94,6 +94,142 @@ def hit_ratio_lookups(raw: np.ndarray, q: int, hit_ratio: float,
     return out
 
 
+# ---------------------------------------------------------------------------
+# Adaptive-runtime scenario workloads (benchmarks/scenarios.py): hostile
+# traffic shapes the serving controllers are tuned against.  All are
+# deterministic under a fixed seed (pinned by tests/test_keygen_props.py).
+# ---------------------------------------------------------------------------
+
+def zipfian_keys(raw: np.ndarray, q: int, theta: float, seed: int = 1,
+                 *, spatial: bool = True) -> np.ndarray:
+    """Zipf-skewed point-lookup batch over the key set.
+
+    ``spatial=True`` ranks keys by VALUE (rank 1 = smallest key), so the
+    hot probability mass clusters in one region of key space — the shape
+    that makes ONE shard of a splitter-routed store hot, which is what
+    the migration controller must fix.  ``spatial=False`` ranks over the
+    shuffled insertion order like ``zipf_lookups`` (hot keys scattered
+    across key space: heavy reuse but NO spatial skew).  ``theta <= 0``
+    degrades to uniform.
+    """
+    rng = np.random.default_rng(seed)
+    n = len(raw)
+    if theta <= 0:
+        return raw[rng.integers(0, n, q)]
+    order = np.sort(raw) if spatial else raw
+    ranks = np.arange(1, n + 1, dtype=np.float64)
+    w = ranks ** (-theta)
+    w /= w.sum()
+    return order[rng.choice(n, size=q, p=w)]
+
+
+def flash_crowd_ranges(raw: np.ndarray, q: int, *, width: int = 64,
+                       crowd_frac: float = 0.9,
+                       center: Optional[int] = None,
+                       seed: int = 1) -> Tuple[np.ndarray, np.ndarray]:
+    """Range-lookup batch where a ``crowd_frac`` fraction of queries all
+    hit ONE narrow window of key space (the flash crowd) and the rest
+    are uniform.  Returns (lo, hi) with every range spanning exactly
+    ``width`` consecutive live keys; ``center`` fixes the crowd's start
+    position in the sorted key order (random when None).
+    """
+    if not 0.0 <= crowd_frac <= 1.0:
+        raise ValueError(f"crowd_frac must be in [0, 1], got {crowd_frac}")
+    rng = np.random.default_rng(seed)
+    srt = np.sort(raw)
+    n = len(srt)
+    width = min(width, n)
+    max_start = max(n - width, 1)
+    n_crowd = int(round(q * crowd_frac))
+    if center is None:
+        center = int(rng.integers(0, max_start))
+    center = min(max(center, 0), max_start - 1)
+    # Crowd starts jitter within the window itself: every crowd range
+    # overlaps the same few buckets.
+    crowd = center + rng.integers(0, max(width // 4, 1), n_crowd)
+    uniform = rng.integers(0, max_start, q - n_crowd)
+    starts = np.concatenate([crowd, uniform])
+    rng.shuffle(starts)
+    starts = np.minimum(starts, max_start - 1)
+    lo = srt[starts]
+    hi = srt[np.minimum(starts + width - 1, n - 1)]
+    return lo, hi
+
+
+def boundary_hot_keys(raw: np.ndarray, q: int, num_shards: int,
+                      boundary: int, *, width: int = 128,
+                      hot_frac: float = 0.95,
+                      seed: int = 1) -> np.ndarray:
+    """Point lookups concentrated on the keys straddling one SPLITTER of
+    an equal-split ``num_shards``-way store: ``boundary`` b targets the
+    cut between shard b-1 and shard b (1 <= b < num_shards).  A
+    ``hot_frac`` fraction of lookups lands in the ``width``-key window
+    centered on the cut; the rest are uniform.  The nastiest shape for a
+    splitter-routed store — heat the size histogram cannot see, split
+    across two adjacent shards.
+    """
+    if not 1 <= boundary < num_shards:
+        raise ValueError(
+            f"boundary must be in [1, num_shards), got {boundary} of "
+            f"{num_shards}")
+    rng = np.random.default_rng(seed)
+    srt = np.sort(raw)
+    n = len(srt)
+    cut = boundary * n // num_shards
+    lo_i = max(cut - width // 2, 0)
+    hi_i = min(cut + width // 2, n)
+    n_hot = int(round(q * hot_frac))
+    hot = srt[rng.integers(lo_i, max(hi_i, lo_i + 1), n_hot)]
+    cold = srt[rng.integers(0, n, q - n_hot)]
+    out = np.concatenate([hot, cold])
+    rng.shuffle(out)
+    return out
+
+
+def tenant_mix(raw: np.ndarray, q: int,
+               tenants: Tuple[Tuple[float, float], ...] = ((0.7, 1.2),
+                                                          (0.2, 0.5),
+                                                          (0.1, 0.0)),
+               seed: int = 1) -> Tuple[np.ndarray, np.ndarray]:
+    """Multi-tenant point workload: the sorted key space is cut into
+    ``len(tenants)`` contiguous equal slices (one per tenant), and each
+    query draws a tenant by its ``weight`` then a key from that tenant's
+    slice with the tenant's own Zipf ``theta`` (spatial, like
+    ``zipfian_keys``).  Returns (keys, tenant_ids) — the mixed-traffic
+    shape where aggregate stats look balanced while individual tenants
+    are violently skewed.
+    """
+    if not tenants:
+        raise ValueError("tenant_mix needs at least one (weight, theta)")
+    rng = np.random.default_rng(seed)
+    srt = np.sort(raw)
+    n = len(srt)
+    t = len(tenants)
+    weights = np.array([w for w, _ in tenants], np.float64)
+    if (weights <= 0).any():
+        raise ValueError(f"tenant weights must be positive, got {weights}")
+    weights /= weights.sum()
+    tenant_ids = rng.choice(t, size=q, p=weights).astype(np.int32)
+    out = np.empty(q, srt.dtype)
+    for tid, (_, theta) in enumerate(tenants):
+        sel = tenant_ids == tid
+        m = int(sel.sum())
+        if not m:
+            continue
+        lo = tid * n // t
+        hi = (tid + 1) * n // t
+        slice_ = srt[lo:hi]
+        if theta <= 0:
+            idx = rng.integers(0, len(slice_), m)
+        else:
+            ranks = np.arange(1, len(slice_) + 1, dtype=np.float64)
+            w = ranks ** (-theta)
+            w /= w.sum()
+            idx = rng.choice(len(slice_), size=m, p=w)
+        out[sel] = slice_[idx]
+    return out, tenant_ids
+
+
 def as_keys(raw: np.ndarray, bits: int) -> KeyArray:
     return (KeyArray.from_u64(raw) if bits > 32
             else KeyArray.from_u32(raw.astype(np.uint32)))

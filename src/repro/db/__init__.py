@@ -57,10 +57,13 @@ from repro.query.plan import (AggKeys, Expr, ProbeResult, between, count,
 from repro.store.compaction import CompactionPolicy
 
 from repro.store.replica import ReadReplica, ReplicaSet
+# Adaptive runtime (no import cycle: repro.tuning never imports repro.db
+# at module scope — its OverloadError import is lazy, inside check_admit).
+from repro.tuning import AdmissionController, AutoTuner, TelemetryBus
 
 from .errors import (DbError, DroppedTicketError, InvalidSpecError,
-                     ReadOnlyTierError, RecoveryError, SessionClosedError,
-                     StaleReplicaError)
+                     OverloadError, ReadOnlyTierError, RecoveryError,
+                     SessionClosedError, StaleReplicaError)
 from .session import FlushReport, Session, Ticket
 from .spec import IndexSpec
 from .tiers import (DurabilityManager, IndexTier, LiveTier, ShardedTier,
@@ -80,6 +83,7 @@ __all__ = [
     "InvalidSpecError",
     "KeyArray",
     "LiveTier",
+    "OverloadError",
     "ProbeResult",
     "ReadOnlyTierError",
     "ReadReplica",
@@ -127,6 +131,31 @@ def as_key_array(keys) -> KeyArray:
         f"dtype {arr.dtype}")
 
 
+def _adaptive_runtime(spec: IndexSpec, tier):
+    """The tuning-plane objects ``spec`` asks for (tuning/ package).
+
+    Every opened session gets a ``TelemetryBus`` (a bus nobody reads
+    costs a few ring writes per flush — the perf gate holds the hot path
+    to the compare.py threshold with it on).  The controllers are strictly
+    opt-in: an ``AdmissionController`` only when ``slo_ms`` or
+    ``max_pending`` is set, an ``AutoTuner`` only under ``autotune=True``
+    — so a default spec keeps the session's flush behavior bit-identical
+    to the historical one (pinned in tests/test_tuning.py).
+    """
+    bus = TelemetryBus()
+    admission = None
+    if spec.slo_ms is not None or spec.max_pending is not None:
+        admission = AdmissionController(bus, slo_ms=spec.slo_ms,
+                                        max_pending=spec.max_pending)
+    autotuner = None
+    if spec.autotune:
+        autotuner = AutoTuner(tier, bus,
+                              max_imbalance=spec.max_imbalance,
+                              rebalance_mode=spec.rebalance_mode,
+                              migrate_max_keys=spec.migrate_max_keys)
+    return bus, admission, autotuner
+
+
 def open(spec: Optional[IndexSpec] = None, keys=None, row_ids=None,
          *, recover: bool = False) -> Session:   # noqa: A001 - front door
     """Build (or recover) the tier ``spec`` describes and return the
@@ -169,8 +198,10 @@ def open(spec: Optional[IndexSpec] = None, keys=None, row_ids=None,
                 "embedding corpus to index")
         from repro.vector import VectorSession, build_vector_tier
         tier = build_vector_tier(spec, keys, row_ids)
+        bus, admission, autotuner = _adaptive_runtime(spec, tier)
         return VectorSession(tier, max_hits=spec.max_hits,
-                             nprobe=spec.effective_nprobe)
+                             nprobe=spec.effective_nprobe, bus=bus,
+                             admission=admission, autotuner=autotuner)
     if not spec.durable:
         if recover:
             raise InvalidSpecError(
@@ -181,7 +212,9 @@ def open(spec: Optional[IndexSpec] = None, keys=None, row_ids=None,
         karr = as_key_array(keys)
         rows = None if row_ids is None else jnp.asarray(row_ids, jnp.int32)
         tier = build_tier(spec, karr, rows)
-        return Session(tier, max_hits=spec.max_hits)
+        bus, admission, autotuner = _adaptive_runtime(spec, tier)
+        return Session(tier, max_hits=spec.max_hits, bus=bus,
+                       admission=admission, autotuner=autotuner)
 
     existing = has_durable_state(spec)
     if existing and not recover:
@@ -204,9 +237,11 @@ def open(spec: Optional[IndexSpec] = None, keys=None, row_ids=None,
         karr = as_key_array(keys)
         rows = None if row_ids is None else jnp.asarray(row_ids, jnp.int32)
         tier = build_tier(spec, karr, rows)
-    manager = DurabilityManager(spec)
+    bus, admission, autotuner = _adaptive_runtime(spec, tier)
+    manager = DurabilityManager(spec, bus=bus)
     manager.attach(tier)
     # Baseline snapshot (synchronous): recovery = snapshot + WAL tail,
     # so a snapshot must exist before the first logged write.
     manager.snapshot(tier, wait=True)
-    return Session(tier, max_hits=spec.max_hits, durability=manager)
+    return Session(tier, max_hits=spec.max_hits, durability=manager,
+                   bus=bus, admission=admission, autotuner=autotuner)

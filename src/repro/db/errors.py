@@ -61,6 +61,27 @@ class SessionClosedError(DbError):
     one)."""
 
 
+class OverloadError(DbError):
+    """The session's bounded pending queue is full: the submission was
+    SHED before enqueue (admission backpressure,
+    ``IndexSpec(max_pending=...)``), so nothing was queued and nothing
+    needs cancelling — flush (or wait for the deadline controller to)
+    and resubmit.
+
+    ``queue_depth`` is the pending count at refusal, ``max_pending`` the
+    configured bound, and ``estimated_wait`` the admission controller's
+    predicted seconds to drain the queue (its measured flush cost
+    model) — the retry-after hint.
+    """
+
+    def __init__(self, message: str, *, queue_depth: int,
+                 max_pending: int, estimated_wait: float):
+        super().__init__(message)
+        self.queue_depth = queue_depth
+        self.max_pending = max_pending
+        self.estimated_wait = estimated_wait
+
+
 class DroppedTicketError(DbError, RuntimeError):
     """A ``Ticket`` was dropped by a failed ``flush()``: the flush had
     already drained its queues when it raised (e.g. mixed key widths in

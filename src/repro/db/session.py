@@ -64,6 +64,7 @@ import jax.numpy as jnp
 from repro.core.keys import KeyArray, concat_keys
 from repro.query import plan as qplan
 from repro.query.batch import validate_max_hits
+from repro.query.engine import stage_counter_snapshot
 
 from .errors import (DroppedTicketError, InvalidSpecError,
                      ReadOnlyTierError, SessionClosedError)
@@ -175,7 +176,8 @@ class Session:
     """
 
     def __init__(self, tier: IndexTier, *, max_hits: int = 64,
-                 durability=None):
+                 durability=None, bus=None, admission=None,
+                 autotuner=None):
         try:
             validate_max_hits(max_hits)
         except ValueError as e:
@@ -185,6 +187,16 @@ class Session:
         # Optional tiers.DurabilityManager: owns WAL/snapshot/heartbeat
         # plumbing; None = the memory-only session this always was.
         self._durability = durability
+        # Adaptive runtime (repro.tuning), all optional and all None by
+        # default — a session without them is bit-identical to the
+        # historical behavior (pinned in tests/test_tuning.py):
+        #   bus        tuning.TelemetryBus fed once per flush
+        #   admission  tuning.AdmissionController: deadline flushing +
+        #              bounded-queue shedding at submission time
+        #   autotuner  tuning.AutoTuner ticked after every flush
+        self._bus = bus
+        self._admission = admission
+        self._autotuner = autotuner
         self._replicas: List[object] = []
         self._closed = False
         self._next_ticket = 0
@@ -210,9 +222,27 @@ class Session:
         self._next_ticket += 1
         return t
 
+    def _admit(self) -> None:
+        """Backpressure gate, BEFORE enqueue: a full pending queue sheds
+        this submission with ``OverloadError`` (queue unchanged, caller
+        retries after a flush).  No-op without an admission controller."""
+        if self._admission is not None:
+            self._admission.check_admit(self.pending)
+
+    def _post_submit(self) -> None:
+        """Deadline check, AFTER enqueue: arms the SLO deadline on the
+        first queued request and flushes while a flush started now can
+        still finish inside the SLO.  No-op without a controller."""
+        if self._admission is None:
+            return
+        self._admission.note_submit()
+        if self._admission.should_flush(pending=self.pending):
+            self.flush()
+
     # Zero-length submissions resolve immediately (empty result / an
     # applied-count of 0) instead of queueing: an all-empty flush
     # dispatches nothing, so their tickets would otherwise never settle.
+    # They bypass _admit/_post_submit too — nothing enters the queue.
 
     def query(self, expr: qplan.Expr, *, kind: Optional[str] = None) -> Ticket:
         """Queue one logical-plan expression tree; resolves to the
@@ -224,11 +254,13 @@ class Session:
                 f"(eq/between/isin/limit/count/min_key/max_key/probe/"
                 f"rank_scan), got {type(expr).__name__}")
         self._check_open("query")
+        self._admit()
         t = self._ticket(kind or "query")
         if qplan.expr_size(expr) == 0:
             t._resolve(qplan.empty_result(expr, self.max_hits))
         else:
             self._reads.append((t, expr))
+            self._post_submit()
         return t
 
     def lookup(self, keys: KeyArray) -> Ticket:
@@ -247,21 +279,25 @@ class Session:
     def insert(self, keys: KeyArray, rows: jnp.ndarray) -> Ticket:
         """Queue an insert batch; resolves to the submitted count."""
         self._check_writable("insert")
+        self._admit()
         t = self._ticket("insert")
         if int(keys.shape[0]) == 0:
             t._resolve(0)
         else:
             self._ins.append((t, keys, jnp.asarray(rows, jnp.int32)))
+            self._post_submit()
         return t
 
     def delete(self, keys: KeyArray) -> Ticket:
         """Queue a delete batch; resolves to the submitted count."""
         self._check_writable("delete")
+        self._admit()
         t = self._ticket("delete")
         if int(keys.shape[0]) == 0:
             t._resolve(0)
         else:
             self._dels.append((t, keys))
+            self._post_submit()
         return t
 
     def scan_ranks(self, keys: KeyArray, side: str = "left") -> Ticket:
@@ -357,6 +393,26 @@ class Session:
     def nbytes(self) -> dict:
         return self.tier.nbytes()
 
+    @property
+    def bus(self):
+        """The session's ``tuning.TelemetryBus`` (None when the session
+        was constructed directly without one)."""
+        return self._bus
+
+    def telemetry(self) -> dict:
+        """One JSON-able snapshot of the adaptive runtime: the bus's
+        ``export()`` (spans/rates/gauges/counters/touch/events) plus the
+        admission and autotuner controller states when configured.
+        Empty dict on a session without a bus."""
+        if self._bus is None:
+            return {}
+        out = self._bus.export()
+        if self._admission is not None:
+            out["admission"] = self._admission.snapshot()
+        if self._autotuner is not None:
+            out["autotune"] = self._autotuner.snapshot()
+        return out
+
     # -- the flush ------------------------------------------------------------
 
     def flush(self) -> FlushReport:
@@ -373,6 +429,11 @@ class Session:
 
         n_insert = sum(int(k.shape[0]) for _, k, _ in ins)
         n_delete = sum(int(k.shape[0]) for _, k in dels)
+        n_items = len(reads) + len(ins) + len(dels)
+        # The backend serving THIS flush's reads (the autotuner only
+        # repoints between flushes, at tick time), so tagged query spans
+        # attribute latency to the backend that produced it.
+        backend_tag = getattr(self.tier, "current_backend", None)
 
         # ---- writes first: one apply for the whole flush ----
         t0 = time.perf_counter()
@@ -445,6 +506,46 @@ class Session:
         if program is not None:
             for (t, _), extract in zip(reads, program.extractors):
                 t._resolve(extract(res, ranks))
+
+        # ---- adaptive runtime: feed the bus, close the control loops ----
+        # All three hooks are optional; an empty flush skips everything
+        # (the cheap-no-op contract above).
+        total_seconds = t_update + t_compact + t_lookup + t_rank
+        if self._bus is not None and n_items:
+            bus = self._bus
+            if n_insert or n_delete:
+                bus.span("apply", t_update, n=n_insert + n_delete)
+            if compacted:
+                bus.span("compact", t_compact)
+            if program is not None and program.has_query:
+                lanes = program.n_point + program.n_range + program.n_agg
+                bus.span("query", t_lookup, n=lanes, tag=backend_tag)
+                bus.bump("lanes_point", program.n_point)
+                bus.bump("lanes_range", program.n_range)
+                bus.bump("lanes_agg", program.n_agg)
+            if program is not None and program.has_rank:
+                bus.span("rank", t_rank, n=program.n_rank)
+            bus.span("flush", total_seconds, n=n_items)
+            bus.counters(stage_counter_snapshot())
+            # Stats rollups are periodic, not per-flush: collecting
+            # ShardedStats walks every shard, too heavy for the hot path.
+            if bus.n_flushes % 16 == 0:
+                st = self.tier.stats()
+                for f in dataclasses.fields(st):
+                    v = getattr(st, f.name)
+                    if isinstance(v, (int, float)):
+                        bus.gauge(f.name, float(v))
+            touch = getattr(getattr(self.tier, "store", None), "touch",
+                            None)
+            if touch is not None:
+                bus.touch(touch.snapshot())
+            bus.flush_mark()
+        if self._admission is not None:
+            if n_items:
+                self._admission.observe_flush(total_seconds, n_items)
+            self._admission.on_flush()
+        if self._autotuner is not None and n_items:
+            self._autotuner.tick()
 
         self._flush_count += 1
         return FlushReport(flush=self._flush_count - 1,

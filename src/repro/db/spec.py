@@ -30,6 +30,7 @@ from .errors import InvalidSpecError
 TIERS = ("static", "live", "sharded")
 BACKENDS = ("tree", "binary", "kernel")
 DURABILITY = ("none", "wal", "wal+snapshot")
+REBALANCE_MODES = ("incremental", "full")
 KINDS = ("scalar", "vector")
 
 
@@ -64,6 +65,25 @@ class IndexSpec:
                       bucket count of the ANN layer);
     ``nprobe``        vector kind only: buckets probed per query
                       (default: ``ncentroids`` — exhaustive, exact);
+    ``slo_ms``        optional per-request latency SLO in milliseconds:
+                      arms the deadline-based admission controller
+                      (``tuning/admission.py``) — the session flushes
+                      BEFORE the oldest pending request's deadline would
+                      pass, not only on ``Ticket.result()``;
+    ``max_pending``   optional pending-queue bound: a submission that
+                      would exceed it is shed with a typed
+                      ``OverloadError`` (queue depth + estimated wait)
+                      instead of inflating tail latency;
+    ``autotune``      run the online autotuner (``tuning/autotune.py``)
+                      after every flush: measured-cost backend
+                      re-selection, and — on the sharded tier —
+                      skew-triggered shard migration;
+    ``rebalance_mode``  'incremental' (bounded ``migrate_step`` ticks
+                      between adjacent shards — short pauses, the
+                      autotuner's path) or 'full' (the historical
+                      stop-and-rebuild extract→presorted-build);
+    ``migrate_max_keys``  per-tick key budget of an incremental
+                      migration step;
     ``durability``    'none' (memory-only, the historical behavior),
                       'wal' (every write batch fsynced to a write-ahead
                       log before its device dispatch, one baseline
@@ -87,6 +107,11 @@ class IndexSpec:
     max_imbalance: Optional[float] = 2.0
     jit: bool = True
     cache_scope: Optional[str] = None
+    slo_ms: Optional[float] = None
+    max_pending: Optional[int] = None
+    autotune: bool = False
+    rebalance_mode: str = "incremental"
+    migrate_max_keys: int = 256
     durability: str = "none"
     wal_dir: Optional[str] = None
     kind: str = "scalar"
@@ -114,6 +139,26 @@ class IndexSpec:
             raise InvalidSpecError(str(e)) from None
         if self.tier == "sharded" and self.shards < 1:
             raise InvalidSpecError("sharded tier needs shards >= 1")
+        if self.slo_ms is not None and (
+                not isinstance(self.slo_ms, (int, float))
+                or self.slo_ms <= 0):
+            raise InvalidSpecError(
+                f"slo_ms must be a positive number of milliseconds, got "
+                f"slo_ms={self.slo_ms!r}")
+        if self.max_pending is not None and (
+                not isinstance(self.max_pending, int)
+                or self.max_pending < 1):
+            raise InvalidSpecError(
+                f"max_pending must be a positive int (the pending-queue "
+                f"bound), got max_pending={self.max_pending!r}")
+        if self.rebalance_mode not in REBALANCE_MODES:
+            raise InvalidSpecError(
+                f"unknown rebalance_mode {self.rebalance_mode!r}; "
+                f"expected one of {REBALANCE_MODES}")
+        if self.migrate_max_keys < 1:
+            raise InvalidSpecError(
+                f"migrate_max_keys must be >= 1, got "
+                f"{self.migrate_max_keys!r}")
         if self.durability not in DURABILITY:
             raise InvalidSpecError(
                 f"unknown durability {self.durability!r}; expected one "
@@ -206,4 +251,6 @@ class IndexSpec:
         return ShardedConfig(num_shards=self.shards,
                              live=self.to_live_config(),
                              max_imbalance=self.max_imbalance,
-                             cache_scope=self.cache_scope or "sharded")
+                             cache_scope=self.cache_scope or "sharded",
+                             rebalance_mode=self.rebalance_mode,
+                             migrate_max_keys=self.migrate_max_keys)

@@ -147,6 +147,8 @@ class StaticTier:
     def __init__(self, index: cgrx.CgrxIndex, *, jit: bool = True,
                  cache_scope: Optional[str] = None):
         self.index = index
+        self._jit = jit
+        self._cache_scope = cache_scope
         self.engine = RankEngine(index, jit=jit, cache_scope=cache_scope)
 
     @classmethod
@@ -173,6 +175,21 @@ class StaticTier:
 
     def maybe_compact(self) -> Optional[str]:
         return None
+
+    # -- autotuner hooks (tuning/autotune.py) ---------------------------------
+
+    @property
+    def current_backend(self) -> str:
+        return self.engine.backend_name
+
+    def set_backend(self, name: str) -> None:
+        """Re-point the serving backend ('tree' | 'binary' | 'kernel');
+        the immutable index carries every structure all flat backends
+        need, so this is just an engine rebind."""
+        if name == self.engine.backend_name:
+            return
+        self.engine = RankEngine(self.index, backend=name, jit=self._jit,
+                                 cache_scope=self._cache_scope)
 
     def sync(self) -> None:
         jax.block_until_ready(self.index.buckets.keys.lo)
@@ -232,6 +249,26 @@ class LiveTier:
 
     def maybe_compact(self) -> Optional[str]:
         return self.live.maybe_compact()
+
+    # -- autotuner hooks (tuning/autotune.py) ---------------------------------
+
+    @property
+    def current_backend(self) -> str:
+        """The rep-stage successor-search method the chain-aware 'node'
+        backend dispatches through."""
+        return self.live.config.rep_method
+
+    def set_backend(self, name: str) -> None:
+        self.live.set_rep_method(name)
+
+    @property
+    def bucket_size(self) -> int:
+        return self.live.config.snapshot_bucket_size
+
+    def retune_bucket_size(self, bucket_size: int) -> None:
+        """Epoch-swap to a new snapshot bucket size (see
+        ``store.LiveIndex.retune_bucket_size``)."""
+        self.live.retune_bucket_size(bucket_size)
 
     def sync(self) -> None:
         self.live.sync()
@@ -310,6 +347,40 @@ class ShardedTier:
 
     def maybe_compact(self) -> Optional[str]:
         return self.store.maybe_compact()
+
+    # -- autotuner hooks (tuning/autotune.py) ---------------------------------
+
+    @property
+    def current_backend(self) -> str:
+        return self.store.config.live.rep_method
+
+    def set_backend(self, name: str) -> None:
+        """Re-point every shard's rep-stage method together (one scope,
+        one compiled pipeline per plan shape across shards) and fold the
+        choice into the store config so rebuilt/rebalanced shards
+        inherit it."""
+        cfg = self.store.config
+        if name != cfg.live.rep_method:
+            self.store.config = dataclasses.replace(
+                cfg, live=dataclasses.replace(cfg.live, rep_method=name))
+        for shard in self.store.shards:
+            shard.set_rep_method(name)
+
+    @property
+    def bucket_size(self) -> int:
+        return self.store.config.live.snapshot_bucket_size
+
+    def retune_bucket_size(self, bucket_size: int) -> None:
+        """Per-shard epoch swaps to the new snapshot geometry; siblings
+        keep serving while each shard swaps (same independence as
+        per-shard compaction)."""
+        cfg = self.store.config
+        if bucket_size != cfg.live.snapshot_bucket_size:
+            self.store.config = dataclasses.replace(
+                cfg, live=dataclasses.replace(
+                    cfg.live, snapshot_bucket_size=bucket_size))
+        for shard in self.store.shards:
+            shard.retune_bucket_size(bucket_size)
 
     def sync(self) -> None:
         self.store.sync()
@@ -480,12 +551,15 @@ class DurabilityManager:
     leave a crash window with neither snapshot nor log).
     """
 
-    def __init__(self, spec: IndexSpec, *, heartbeat_interval: float = 5.0):
+    def __init__(self, spec: IndexSpec, *, heartbeat_interval: float = 5.0,
+                 bus=None):
         self.spec = spec
         self.checkpoints = CheckpointManager(_snapshot_dir(spec), keep=2)
         self.auto_snapshot = spec.durability == "wal+snapshot"
+        # The session's TelemetryBus (when it has one): the primary
+        # heartbeat then reports each beat onto the bus event ring.
         self.heartbeat = Heartbeat(os.path.join(spec.wal_dir, "primary.hb"),
-                                   interval=heartbeat_interval)
+                                   interval=heartbeat_interval, bus=bus)
         self._wals: List[wal_mod.WriteAheadLog] = []
         self._pending_prune: Optional[int] = None
         self._started = False

@@ -23,7 +23,7 @@ See docs/ARCHITECTURE.md for the module map and the lane layout.
 from .backends import Backend, available_backends, get_backend, get_probe
 from .batch import MAX_MAX_HITS, QueryBatch, QueryPlan, validate_max_hits
 from .engine import (BatchResult, RankEngine, STAGE_COUNTERS,
-                     clear_shared_exec)
+                     clear_shared_exec, stage_counter_snapshot)
 from .plan import (AggKeys, Expr, ProbeResult, Program, between,
                    compile_exprs, count, eq, isin, limit, max_key, min_key,
                    postmap, probe, rank_scan)
@@ -43,6 +43,7 @@ __all__ = [
     "available_backends",
     "between",
     "clear_shared_exec",
+    "stage_counter_snapshot",
     "compile_exprs",
     "count",
     "eq",

@@ -63,6 +63,13 @@ STAGE_COUNTERS: Dict[str, int] = {"rank": 0, "point_gather": 0,
                                   "row_gather": 0, "agg": 0}
 
 
+def stage_counter_snapshot() -> Dict[str, int]:
+    """A point-in-time copy of ``STAGE_COUNTERS`` — the shape the
+    telemetry bus folds per flush (``tuning/telemetry.py``), detached so
+    later pipeline builds cannot mutate a recorded snapshot."""
+    return dict(STAGE_COUNTERS)
+
+
 def _make_run(backend: "Backend", n_point: int, n_range: int, n_agg: int,
               agg_keys: bool, max_hits: int):
     """The engine pipeline as a pure function of (index, lanes).

@@ -46,9 +46,14 @@ class Heartbeat:
     (store/replica.py).
     """
 
-    def __init__(self, path: str, interval: float = 5.0):
+    def __init__(self, path: str, interval: float = 5.0, bus=None):
         self.path = path
         self.interval = interval
+        # Optional tuning.TelemetryBus: every written beat is mirrored
+        # onto the bus event ring (thread-safe by the bus's contract),
+        # so liveness shows up on the same surface the admission/
+        # autotuning controllers read.
+        self.bus = bus
         self._stop = threading.Event()
         self._step = 0
         self._payload: dict = {}
@@ -82,6 +87,8 @@ class Heartbeat:
             json.dump({"step": self._step, "time": time.time(),
                        **self._payload}, f)
         os.replace(tmp, self.path)
+        if self.bus is not None:
+            self.bus.event("heartbeat", step=self._step, **self._payload)
 
     def stop(self) -> None:
         self._stop.set()
@@ -106,18 +113,25 @@ class Heartbeat:
 
 class StragglerMonitor:
     def __init__(self, threshold: float = 3.0, ema: float = 0.9,
-                 on_straggler: Optional[Callable[[int, float, float], None]] = None):
+                 on_straggler: Optional[Callable[[int, float, float], None]] = None,
+                 bus=None):
         self.threshold = threshold
         self.ema_coef = ema
         self.ema: Optional[float] = None
         self.events: List[Tuple[int, float, float]] = []
         self.on_straggler = on_straggler
+        # Optional tuning.TelemetryBus: straggler flags land on the same
+        # event ring the serving controllers read (see Heartbeat.bus).
+        self.bus = bus
 
     def record(self, step: int, duration: float) -> bool:
         is_straggler = False
         if self.ema is not None and duration > self.threshold * self.ema:
             is_straggler = True
             self.events.append((step, duration, self.ema))
+            if self.bus is not None:
+                self.bus.event("straggler", step=step, duration=duration,
+                               ema=self.ema)
             if self.on_straggler:
                 self.on_straggler(step, duration, self.ema)
             # A straggler step must not poison the baseline.

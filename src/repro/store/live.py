@@ -357,6 +357,31 @@ class LiveIndex:
                            if self.config.rep_method != "node" else "tree")
         return RankEngine(self.snapshot, backend=name, jit=self.config.jit)
 
+    # -- online retuning (tuning/autotune.py acts through these) --------------
+
+    def set_rep_method(self, name: str) -> None:
+        """Re-point the successor-search backend of the rep stage
+        ('tree' | 'binary' | 'kernel').  Cheap: the chain slab is
+        untouched — only the view/engine rebind, and the next dispatch
+        traces (or cache-hits) the new backend's pipeline."""
+        if name == self.config.rep_method:
+            return
+        self.config = dataclasses.replace(self.config, rep_method=name)
+        self._invalidate()
+
+    def retune_bucket_size(self, bucket_size: int) -> None:
+        """Adopt a new snapshot bucket size via the existing epoch-swap
+        path: extract a consistent cut, bulk-load the new geometry,
+        swap.  Reads never observe a half-built epoch — the same safety
+        argument as any compaction."""
+        if bucket_size < 1:
+            raise ValueError(f"bucket_size must be >= 1, got {bucket_size}")
+        if bucket_size == self.config.snapshot_bucket_size:
+            return
+        self.config = dataclasses.replace(
+            self.config, snapshot_bucket_size=bucket_size)
+        self.compact("retune")
+
     # -- writes ---------------------------------------------------------------
 
     def apply(self, ins_keys: Optional[KeyArray] = None,

@@ -64,6 +64,9 @@ class ShardedStats:
     applies: int                    # routed apply() calls since build
     inserts: int                    # keys submitted for insert since build
     deletes: int                    # keys submitted for delete since build
+    migrations: int = 0             # incremental migrate_step ticks
+    touch_rates: Tuple[float, ...] = ()  # per-shard key-touch EWMA (the
+                                    # store's TouchTracker snapshot)
 
     @property
     def live_keys(self) -> int:
@@ -89,10 +92,25 @@ class ShardedStats:
 
     @property
     def imbalance(self) -> float:
-        """Max shard fill over the balanced mean — the skew monitor's
-        trigger quantity (1.0 = perfectly balanced)."""
+        """Max shard fill over the balanced mean — the SIZE axis of skew
+        (1.0 = perfectly balanced).  Size alone can be fooled: a
+        balanced-size store can still serve nearly all its traffic from
+        one shard, which is what ``touch_imbalance`` sees."""
         mean = self.live_keys / max(self.num_shards, 1)
         return max(self.shard_live) / mean if mean else 0.0
+
+    @property
+    def touch_imbalance(self) -> float:
+        """Max shard touch rate over the balanced mean — the LOAD axis
+        of skew, from the store's per-shard key-touch EWMA (1.0 =
+        balanced, 0.0 = no traffic observed yet).  The migration
+        trigger reads BOTH axes so a balanced-size/hot-shard workload
+        still rebalances."""
+        total = sum(self.touch_rates)
+        if total <= 0.0 or not self.touch_rates:
+            return 0.0
+        mean = total / len(self.touch_rates)
+        return max(self.touch_rates) / mean
 
     @property
     def compacting(self) -> bool:
@@ -130,6 +148,7 @@ def collect(live) -> LiveStats:
 def collect_sharded(store) -> ShardedStats:
     """Build a ``ShardedStats`` from a ``ShardedLiveStore`` (duck-typed,
     same import-cycle reasoning as ``collect``)."""
+    touch = getattr(store, "touch", None)
     return ShardedStats(
         num_shards=store.num_shards,
         shards=tuple(collect(s) for s in store.shards),
@@ -137,4 +156,6 @@ def collect_sharded(store) -> ShardedStats:
         applies=store.applies,
         inserts=store.inserts,
         deletes=store.deletes,
+        migrations=getattr(store, "migrations", 0),
+        touch_rates=touch.snapshot() if touch is not None else (),
     )

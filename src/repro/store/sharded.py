@@ -63,6 +63,7 @@ from repro.core.distributed import (compute_splitters, partition_cuts,
 from repro.core.keys import KeyArray, concat_keys, sort_with_payload
 from repro.query import BatchResult, QueryBatch, QueryPlan
 from repro.query.backends import get_backend
+from repro.tuning.telemetry import TouchTracker
 
 from . import metrics
 from .live import LiveConfig, LiveIndex
@@ -87,6 +88,14 @@ class ShardedConfig:
     min_rebalance_keys: int = 256         # never rebalance tiny stores
     auto_rebalance: bool = True           # evaluate skew in maybe_compact
     cache_scope: str = "sharded"          # shared executable-cache scope
+    rebalance_mode: str = "full"          # 'full' = stop-and-rebuild
+                                          # extract→presorted-build (the
+                                          # historical path); 'incremental'
+                                          # = bounded migrate_step ticks
+    migrate_max_keys: int = 256           # per-tick key budget of one
+                                          # incremental migration step
+    touch_decay: float = 0.95             # per-batch EWMA decay of the
+                                          # per-shard touch histogram
 
 
 class ShardedLiveStore:
@@ -113,9 +122,15 @@ class ShardedLiveStore:
         self.splitters = splitters
         self.config = config
         self.rebalances = 0
+        self.migrations = 0           # incremental migrate_step ticks
         self.applies = 0
         self.inserts = 0
         self.deletes = 0
+        # Per-shard key-touch EWMA (tuning/telemetry.py): every routed
+        # read and write batch bumps its touched shards, so the skew
+        # monitor can see a HOT shard even when sizes are balanced.
+        self.touch = TouchTracker(config.num_shards,
+                                  decay=config.touch_decay)
         # Durability hook (db/tiers.py attaches): one WriteAheadLog per
         # shard, written pre-routed — ``wal_seq`` numbers STORE-level
         # applies, and the per-shard records of one apply share that seq
@@ -175,13 +190,15 @@ class ShardedLiveStore:
                 counters=shard_counters[i] if shard_counters else None)
             for i, (k, r) in enumerate(cuts)]
         store = cls(shards, splitters, cfg)
-        for name in ("rebalances", "applies", "inserts", "deletes"):
+        for name in ("rebalances", "migrations", "applies", "inserts",
+                     "deletes"):
             if counters and name in counters:
                 setattr(store, name, int(counters[name]))
         return store
 
     def counter_state(self) -> dict:
-        return {"rebalances": self.rebalances, "applies": self.applies,
+        return {"rebalances": self.rebalances,
+                "migrations": self.migrations, "applies": self.applies,
                 "inserts": self.inserts, "deletes": self.deletes}
 
     @property
@@ -288,10 +305,12 @@ class ShardedLiveStore:
         point_parts: List[Tuple[np.ndarray, object]] = []
         range_parts: List[Tuple[int, np.ndarray, object]] = []
         agg_parts: List[Tuple[int, np.ndarray, object]] = []
+        touches = np.zeros(self.num_shards, np.int64)
         for s, shard in enumerate(self.shards):
             p_idx = np.nonzero(owners == s)[0]
             r_idx = np.nonzero((first <= s) & (s <= last))[0]
             a_idx = np.nonzero((afirst <= s) & (s <= alast))[0]
+            touches[s] = len(p_idx) + len(r_idx) + len(a_idx)
             if not len(p_idx) and not len(r_idx) and not len(a_idx):
                 continue
             qb = QueryBatch()
@@ -311,6 +330,7 @@ class ShardedLiveStore:
             if len(a_idx):
                 agg_parts.append((s, a_idx, res.aggs))
 
+        self.touch.record(touches)
         points = _merge_points(np_, point_parts)
         ranges = _merge_ranges(nr, plan.max_hits, range_parts, first, prefix)
         aggs = (_merge_aggs(na, plan.agg_keys, agg_parts, plan.keys.is64)
@@ -356,12 +376,15 @@ class ShardedLiveStore:
                 for s, _, _ in parts:
                     self.wals[s].sync()
                 self.wal_seq += 1
+            touches = np.zeros(self.num_shards, np.int64)
             for s, i_idx, d_idx in parts:
+                touches[s] = len(i_idx) + len(d_idx)
                 self.shards[s].apply(
                     ins_keys[i_idx] if len(i_idx) else None,
                     ins_rows[i_idx] if len(i_idx) else None,
                     del_keys[d_idx] if len(d_idx) else None,
                     auto_compact=False)
+            self.touch.record(touches)
             self.applies += 1
             self.inserts += n_ins
             self.deletes += n_del
@@ -389,8 +412,10 @@ class ShardedLiveStore:
             reason = shard.maybe_compact()
             if reason:
                 fired.append(f"s{i}:{reason}")
-        if self.config.auto_rebalance and self.maybe_rebalance():
-            fired.append("rebalance")
+        if self.config.auto_rebalance:
+            what = self.maybe_rebalance()
+            if what:
+                fired.append(what)
         return ",".join(fired) or None
 
     def compact_shard(self, shard_id: int, reason: str = "manual") -> None:
@@ -398,22 +423,128 @@ class ShardedLiveStore:
         (their epochs, chains and engines don't move)."""
         self.shards[shard_id].compact(reason)
 
-    def maybe_rebalance(self) -> bool:
-        """Fire a splitter rebalance when per-shard fill diverged past
+    def maybe_rebalance(self):
+        """Fire a splitter refresh when per-shard fill diverged past
         ``max_imbalance``.  Skipped while any shard has an in-flight
         compaction task (its replay log references the store being
-        replaced)."""
+        replaced).
+
+        The trigger quantity here is SIZE imbalance only, on purpose:
+        this path runs inside ``maybe_compact`` — i.e. inside WAL-replay
+        recovery — so it must be a deterministic function of the live
+        multiset the log reproduces.  Touch-rate skew (read traffic the
+        WAL never sees) is acted on by the autotuner's tick instead
+        (``tuning/autotune.py``), whose actions recovery legitimately
+        omits: the rank-offset merge keeps reads bit-identical whatever
+        the splitters are.
+
+        Returns a truthy summary — ``'rebalance'`` (full rebuild) or
+        ``'migrate'`` (one bounded incremental step, per
+        ``config.rebalance_mode``) — or None when nothing fired.
+        """
         cfg = self.config
         if cfg.max_imbalance is None or self.compacting:
-            return False
+            return None
         counts = self._live_counts()
         total = int(counts.sum())
         if total < max(cfg.min_rebalance_keys, cfg.num_shards):
-            return False
+            return None
         if counts.max() <= cfg.max_imbalance * (total / cfg.num_shards):
-            return False
+            return None
+        if cfg.rebalance_mode == "incremental":
+            return ("migrate"
+                    if self.migrate_step(cfg.migrate_max_keys,
+                                         use_touch=False) else None)
         self.rebalance()
-        return True
+        return "rebalance"
+
+    def migrate_step(self, max_keys: Optional[int] = None, *,
+                     use_touch: bool = True) -> int:
+        """Move at most ``max_keys`` keys from the most loaded shard to
+        its less loaded neighbor, nudging ONE splitter — the bounded
+        incremental alternative to ``rebalance``'s stop-and-rebuild.
+
+        Shard pressure is the per-shard live count over the balanced
+        mean, elementwise-max'd with the touch-rate EWMA over ITS mean
+        when ``use_touch`` (so a balanced-size/hot-shard workload still
+        picks the hot shard as donor; recovery-deterministic callers
+        pass ``use_touch=False``).  The donor's boundary run of keys —
+        highest when shedding up-range, lowest when shedding down-range —
+        moves to the adjacent shard through plain ``apply`` calls
+        (chain-local, O(moved) work; no epoch swap, no full extract of
+        any non-donor shard), and the shared splitter moves with it, so
+        routing agrees with placement at every step.
+
+        Not WAL-logged: the live key multiset is unchanged, and merged
+        reads depend only on that multiset (the same invariant recovery
+        relies on), so a replay-rebuilt store answers bit-identically
+        even though its splitters never migrated.  The touch EWMA resets
+        afterwards so the monitor re-observes the new placement instead
+        of ping-ponging on stale heat.
+
+        Returns the number of keys moved (0 = nothing to do: tiny donor,
+        no less-loaded neighbor, or a compaction in flight).
+        """
+        if self.compacting or self.num_shards < 2:
+            return 0
+        k_budget = (self.config.migrate_max_keys if max_keys is None
+                    else int(max_keys))
+        if k_budget < 1:
+            return 0
+        counts = self._live_counts().astype(np.float64)
+        mean = counts.sum() / self.num_shards
+        if mean <= 0:
+            return 0
+        pressure = counts / mean
+        if use_touch and self.touch.total_events:
+            rates = self.touch.rates
+            rmean = rates.sum() / self.num_shards
+            if rmean > 0:
+                pressure = np.maximum(pressure, rates / rmean)
+        donor = int(np.argmax(pressure))
+        neighbors = [s for s in (donor - 1, donor + 1)
+                     if 0 <= s < self.num_shards]
+        recipient = min(neighbors, key=lambda s: pressure[s])
+        if pressure[recipient] >= pressure[donor]:
+            return 0
+        n_donor = int(counts[donor])
+        if n_donor <= 1:
+            return 0
+        # Never move past the balance point: cap at half the live-count
+        # gap so one oversized budget cannot invert the imbalance.
+        gap = int(counts[donor] - counts[recipient])
+        if use_touch and self.touch.total_events:
+            rates = self.touch.rates
+            h_d, h_r = float(rates[donor]), float(rates[recipient])
+            if h_d > h_r > -1.0 and h_d > 0:
+                # Touch-picked donor with balanced sizes has gap ~ 0;
+                # size the step off the HEAT surplus instead.  Under a
+                # uniform-heat approximation, handing the recipient
+                # (h_d - h_r) / 2h_d of the donor's keys balances heat.
+                gap = max(gap, int(n_donor * (h_d - h_r) / h_d))
+        k = min(k_budget, n_donor - 1, max(gap // 2, 1))
+        # Quantize down to a power of two: migration applies then draw
+        # from a tiny set of batch shapes the jit cache already holds,
+        # instead of compiling a fresh executable per tick.
+        k = 1 << (k.bit_length() - 1)
+        keys, rows = self.shards[donor].live_cut()
+        if recipient > donor:
+            moved_k, moved_r = keys[n_donor - k:], rows[n_donor - k:]
+            # New boundary: the donor's highest surviving key.
+            self.splitters = _set_splitter(self.splitters, donor,
+                                           keys[n_donor - k - 1])
+        else:
+            moved_k, moved_r = keys[:k], rows[:k]
+            # The recipient absorbs up to the run's highest key.
+            self.splitters = _set_splitter(self.splitters, recipient,
+                                           keys[k - 1])
+        self.shards[donor].apply(del_keys=moved_k, auto_compact=False)
+        self.shards[recipient].apply(ins_keys=moved_k, ins_rows=moved_r,
+                                     auto_compact=False)
+        self.migrations += 1
+        self.touch.reset()
+        self._invalidate()
+        return k
 
     def rebalance(self) -> None:
         """Recompute equal-count splitters and migrate boundary buckets.
@@ -438,6 +569,7 @@ class ShardedLiveStore:
         self.splitters = compute_splitters(all_keys, self.config.num_shards)
         self.shards = _load_shards(all_keys, all_rows, self.config)
         self.rebalances += 1
+        self.touch.reset()   # re-observe the new placement from scratch
         self._invalidate()
 
     # -- stats ----------------------------------------------------------------
@@ -449,6 +581,15 @@ class ShardedLiveStore:
 # ---------------------------------------------------------------------------
 # Build/merge helpers.
 # ---------------------------------------------------------------------------
+
+def _set_splitter(splitters: KeyArray, i: int, key: KeyArray) -> KeyArray:
+    """Replace splitter ``i`` with the scalar key at ``key``'s position
+    (``key`` is a length-1 or scalar-indexed slice of a key set)."""
+    lo = splitters.lo.at[i].set(jnp.reshape(key.lo, ()))
+    hi = (None if splitters.hi is None
+          else splitters.hi.at[i].set(jnp.reshape(key.hi, ())))
+    return KeyArray(lo, hi)
+
 
 def _load_shards(sorted_keys: KeyArray, sorted_rows: jnp.ndarray,
                  cfg: ShardedConfig) -> List[LiveIndex]:

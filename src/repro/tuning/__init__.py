@@ -1,0 +1,26 @@
+"""Adaptive serving runtime: telemetry, admission control, autotuning.
+
+Three cooperating pieces wired into ``repro.db.Session``:
+
+    telemetry.TelemetryBus      ring-buffered per-flush observation plane
+                                (latency spans, stage counters, gauges,
+                                touch histograms, p50/p95/p99, JSON export)
+    admission.AdmissionController
+                                deadline-based flush admission
+                                (IndexSpec slo_ms) + bounded-queue
+                                backpressure (max_pending -> OverloadError)
+    autotune.AutoTuner          measured-cost backend re-selection,
+                                epoch-swap bucket retuning, and bounded
+                                incremental shard migration under skew
+
+Import-cycle discipline: nothing in this package imports ``repro.db`` at
+module level (``repro.db`` imports us); the one db symbol we raise —
+``OverloadError`` — lives in ``repro.db.errors`` and is imported lazily
+at raise time.
+"""
+from .admission import AdmissionController
+from .autotune import AutoTuner, prior_cost, prior_order
+from .telemetry import TelemetryBus, TouchTracker
+
+__all__ = ["AdmissionController", "AutoTuner", "TelemetryBus",
+           "TouchTracker", "prior_cost", "prior_order"]

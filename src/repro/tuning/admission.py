@@ -1,0 +1,180 @@
+"""Deadline-based flush admission + bounded-queue backpressure.
+
+The session's historical flush discipline is *pull*: requests queue until
+a caller flushes (or touches a ``Ticket.result()``).  Under hostile
+traffic that lets tail latency grow without bound — a flood of
+submissions piles onto one giant flush whose dispatch cost then blows
+every deadline at once.  ``AdmissionController`` closes the loop with two
+mechanisms, both driven by the telemetry bus's online estimates:
+
+*Deadline flushing* (``IndexSpec(slo_ms=...)``): each submission arms a
+deadline ``oldest_enqueue + slo``.  Before accepting the next
+submission, the session asks ``should_flush(...)``, which compares the
+remaining headroom against the PREDICTED cost of flushing what is
+already queued — measured seconds-per-item EWMAs off the bus, padded by
+the measured p99 fixed overhead — and fires the flush while it can still
+finish inside the SLO, not after the violation is unavoidable.
+
+*Backpressure* (``IndexSpec(max_pending=...)``): a full pending queue
+sheds the NEXT submission with a typed ``repro.db.OverloadError``
+carrying the queue depth and the estimated wait (predicted cost of
+draining what is queued), so a caller can back off / retry-after instead
+of silently inflating the tail.  Shedding happens BEFORE enqueue: an
+admitted request is never dropped by this mechanism.
+
+State machine (docs/ARCHITECTURE.md renders it)::
+
+    IDLE --submit--> PENDING --deadline-would-pass--> FLUSH -> IDLE
+                        |
+                        +--queue full--> SHED (OverloadError; queue
+                                         unchanged, caller retries)
+
+With both knobs unset the controller is never constructed and the
+session is bit-identical to the historical behavior (the dispatch
+counter pin in tests/test_tuning.py holds it to that).
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional, TYPE_CHECKING
+
+if TYPE_CHECKING:  # import-cycle discipline: repro.db imports this package
+    from .telemetry import TelemetryBus
+
+# Cold-start flush-cost assumption (seconds/item) before the bus has any
+# measurements: pessimistic enough that the first deadline decisions
+# flush early rather than late.
+COLD_START_RATE = 50e-6
+# Headroom multiplier on the predicted cost: flush at deadline - margin *
+# predicted instead of shaving it exact (the prediction is a tail
+# estimate, not a bound).
+SAFETY_MARGIN = 2.0
+
+
+class AdmissionController:
+    """Per-session deadline + backpressure state (see module doc).
+
+    The session calls, in order, per submission:
+
+        ctl.check_admit(session.pending)      # may raise OverloadError
+        ...enqueue the ticket...
+        ctl.note_submit(now)                  # arms the deadline
+        if ctl.should_flush(now, session.pending): session.flush()
+
+    and per flush: ``ctl.observe_flush(seconds, n_items)`` (feedback for
+    the cost model) + ``ctl.on_flush()`` (disarms the deadline).
+    """
+
+    def __init__(self, bus: "TelemetryBus", *,
+                 slo_ms: Optional[float] = None,
+                 max_pending: Optional[int] = None):
+        if slo_ms is not None and slo_ms <= 0:
+            raise ValueError(f"slo_ms must be positive, got {slo_ms!r}")
+        if max_pending is not None and max_pending < 1:
+            raise ValueError(
+                f"max_pending must be >= 1, got {max_pending!r}")
+        self.bus = bus
+        self.slo_seconds = slo_ms / 1e3 if slo_ms is not None else None
+        self.max_pending = max_pending
+        self._oldest_enqueue: Optional[float] = None
+        # EWMA cost model, fed by observe_flush: seconds-per-item slope
+        # + fixed per-flush overhead (dispatch/compile floor).
+        self._rate_ewma: Optional[float] = None
+        self._fixed_ewma: float = 0.0
+        self.deadline_flushes = 0      # flushes this controller forced
+        self.shed = 0                  # submissions refused
+
+    # -- backpressure ---------------------------------------------------------
+
+    def check_admit(self, pending: int) -> None:
+        """Refuse the next submission when the queue is full.
+
+        Raises ``repro.db.OverloadError`` (lazy import — this package
+        must stay importable without repro.db) with the current queue
+        depth and the estimated wait to drain it.
+        """
+        if self.max_pending is None or pending < self.max_pending:
+            return
+        from repro.db.errors import OverloadError
+        wait = self.predicted_flush_seconds(pending)
+        self.shed += 1
+        self.bus.bump("admission_shed")
+        raise OverloadError(
+            f"pending queue is full ({pending} >= "
+            f"max_pending={self.max_pending}); flush or retry after "
+            f"~{wait * 1e3:.2f} ms",
+            queue_depth=pending, max_pending=self.max_pending,
+            estimated_wait=wait)
+
+    # -- deadline flushing ----------------------------------------------------
+
+    def note_submit(self, now: Optional[float] = None) -> None:
+        """Arm the deadline on the first submission of an empty queue."""
+        if self._oldest_enqueue is None:
+            self._oldest_enqueue = time.monotonic() if now is None else now
+
+    def predicted_flush_seconds(self, pending: int) -> float:
+        """Cost model: measured seconds-per-item slope x queue depth +
+        measured fixed overhead.  Before any observation, a pessimistic
+        cold-start rate (flushing too early is safe; too late is not)."""
+        rate = self._rate_ewma
+        if rate is None:
+            rate = max(self.bus.rate("flush"), COLD_START_RATE)
+        return self._fixed_ewma + rate * max(pending, 1)
+
+    def deadline(self) -> Optional[float]:
+        """Absolute monotonic deadline of the oldest pending request, or
+        None when idle / no SLO configured."""
+        if self.slo_seconds is None or self._oldest_enqueue is None:
+            return None
+        return self._oldest_enqueue + self.slo_seconds
+
+    def should_flush(self, now: Optional[float] = None,
+                     pending: int = 0) -> bool:
+        """True when waiting any longer would let the oldest request's
+        deadline pass before a flush started now could finish."""
+        dl = self.deadline()
+        if dl is None or pending == 0:
+            return False
+        now = time.monotonic() if now is None else now
+        margin = SAFETY_MARGIN * self.predicted_flush_seconds(pending)
+        if now + margin >= dl:
+            self.deadline_flushes += 1
+            self.bus.bump("admission_deadline_flush")
+            return True
+        return False
+
+    # -- feedback -------------------------------------------------------------
+
+    def observe_flush(self, seconds: float, n_items: int,
+                      ewma: float = 0.8) -> None:
+        """Fold one flush's measured wall time into the cost model.
+
+        The slope EWMA tracks seconds-per-item; the fixed-overhead EWMA
+        tracks the floor a 1-item flush pays (so tiny queues are not
+        predicted to cost ~0).
+        """
+        if n_items <= 0:
+            return
+        rate = seconds / n_items
+        self._rate_ewma = (rate if self._rate_ewma is None
+                           else ewma * self._rate_ewma + (1 - ewma) * rate)
+        if n_items == 1:
+            self._fixed_ewma = (ewma * self._fixed_ewma
+                                + (1 - ewma) * seconds)
+
+    def on_flush(self) -> None:
+        """Disarm the deadline: the queue was drained."""
+        self._oldest_enqueue = None
+
+    # -- introspection --------------------------------------------------------
+
+    def snapshot(self) -> dict:
+        """JSON-able controller state (exported via Session.telemetry)."""
+        return {"slo_ms": (self.slo_seconds * 1e3
+                           if self.slo_seconds is not None else None),
+                "max_pending": self.max_pending,
+                "deadline_flushes": self.deadline_flushes,
+                "shed": self.shed,
+                "rate_ewma": self._rate_ewma,
+                "fixed_ewma": self._fixed_ewma}

@@ -1,0 +1,283 @@
+"""Online autotuner: measured-cost steering of backend, bucket size and
+shard placement.
+
+``AutoTuner.tick()`` runs after every session flush (host-side, no
+device work of its own) and closes three independent control loops, each
+reading the telemetry bus and acting through machinery the serving stack
+already trusts:
+
+*Backend re-selection* — explore-then-commit over the flat successor-
+search backends ('tree' | 'binary' | 'kernel').  Exploration order comes
+from the roofline prior (``launch/roofline.py`` constants: estimated
+bytes-per-probe over HBM bandwidth plus a per-launch overhead), so the
+predicted-best candidate is measured first; each candidate then serves
+real flushes while the session tags its query spans with the backend
+name, and once every candidate has enough tagged samples the tuner
+commits to the measured-fastest median.  Measurement beats prior by
+construction — the prior only orders exploration.
+
+*Bucket-size retuning* — the paper's core trade: bigger buckets shrink
+the rep array (cheaper successor search) but lengthen the in-bucket
+scan, so range/aggregate-heavy plans want bigger buckets and point-heavy
+plans smaller ones.  The tuner reads the session's lane-mix counters off
+the bus and proposes a doubling/halving, executed as the existing
+compaction-style epoch swap (``tier.retune_bucket_size``) — reads never
+see a half-built geometry, recovery replays onto the logical cut exactly
+as for any compaction.
+
+*Skew-triggered incremental migration* — on the sharded tier, when
+either size imbalance (``ShardedStats.imbalance``) or touch-rate
+imbalance (the bus's per-shard EWMA histogram — the axis size alone
+cannot see) exceeds the spec's ``max_imbalance``, the tuner runs bounded
+``store.migrate_step(max_keys)`` ticks: each moves at most ``max_keys``
+keys between ADJACENT shards and nudges one splitter, instead of the
+stop-and-rebuild ``extract -> presorted-build`` full rebalance.  Reads
+stay bit-identical throughout because merged results depend only on the
+live key multiset, never on which shard holds a key (the PR-6 recovery
+invariant); migration does not touch the WAL for the same reason — the
+multiset is unchanged, so replay-rebuilt stores answer identically.
+
+Every action is appended to the bus event ring
+(``bus.events("autotune")``), which is how tests pin convergence.
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import List, Optional, Sequence
+
+from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+
+from .telemetry import TelemetryBus
+
+FLAT_BACKENDS = ("tree", "binary", "kernel")
+
+# Per-launch fixed overhead (seconds) in the prior: dominated by dispatch
+# + pipeline setup, not by the probe itself, on small batches.
+LAUNCH_OVERHEAD = {"tree": 2e-5, "binary": 2e-5, "kernel": 6e-5}
+
+MIN_BUCKET = 4
+MAX_BUCKET = 256
+
+
+def prior_cost(backend: str, num_buckets: int, batch: int = 256,
+               key_bytes: int = 8) -> float:
+    """Roofline-style prior seconds-per-batch for one rep search.
+
+    'binary' probes log2(nb) scattered cache lines per query; 'tree'
+    walks the implicit layout with ~half the effective traffic (top
+    levels stay resident); 'kernel' streams rep tiles once per batch at
+    HBM bandwidth and amortizes across lanes, paying a bigger launch
+    overhead.  A PRIOR, not a model — it only orders exploration; the
+    commit decision is measured.
+    """
+    nb = max(num_buckets, 2)
+    depth = math.log2(nb)
+    if backend == "binary":
+        bytes_q = depth * 128.0          # one cache line per probe level
+    elif backend == "tree":
+        bytes_q = depth * 64.0           # resident top levels
+    elif backend == "kernel":
+        # Streams the rep array once per batch tile + O(1) flops/lane.
+        bytes_q = (nb * key_bytes) / max(batch, 1)
+    else:
+        raise ValueError(f"unknown backend {backend!r}; expected one of "
+                         f"{FLAT_BACKENDS}")
+    t_mem = batch * bytes_q / HBM_BW
+    t_flops = batch * depth * 8.0 / PEAK_FLOPS
+    return LAUNCH_OVERHEAD[backend] + t_mem + t_flops
+
+
+def prior_order(candidates: Sequence[str], num_buckets: int,
+                batch: int = 256) -> List[str]:
+    """Candidates ordered cheapest-first under the roofline prior."""
+    return sorted(candidates,
+                  key=lambda b: prior_cost(b, num_buckets, batch))
+
+
+class AutoTuner:
+    """Per-session background controller (see module doc).
+
+    ``tier`` is duck-typed against the hooks db/tiers.py grew for this
+    subsystem: ``current_backend`` / ``set_backend(name)`` /
+    ``retune_bucket_size(b)`` / (sharded only) ``store.migrate_step``.
+    The tuner never imports repro.db — it acts through the tier object
+    the session hands it.
+    """
+
+    def __init__(self, tier, bus: TelemetryBus, *,
+                 backends: Sequence[str] = FLAT_BACKENDS,
+                 explore_flushes: int = 3,
+                 interval: int = 1,
+                 retune_buckets: bool = False,
+                 bucket_cooldown: int = 8,
+                 min_lanes: int = 256,
+                 max_imbalance: Optional[float] = None,
+                 rebalance_mode: str = "incremental",
+                 migrate_max_keys: int = 256):
+        self.tier = tier
+        self.bus = bus
+        self.explore_flushes = int(explore_flushes)
+        self.interval = max(int(interval), 1)
+        self.retune_buckets = retune_buckets
+        self.bucket_cooldown = int(bucket_cooldown)
+        self.min_lanes = int(min_lanes)
+        self.max_imbalance = max_imbalance
+        if rebalance_mode not in ("incremental", "full"):
+            raise ValueError(
+                f"rebalance_mode must be 'incremental' or 'full', got "
+                f"{rebalance_mode!r}")
+        self.rebalance_mode = rebalance_mode
+        self.migrate_max_keys = int(migrate_max_keys)
+
+        nb = self._num_buckets()
+        self.candidates = prior_order(backends, nb)
+        self.committed_backend: Optional[str] = None
+        self._explore_idx: Optional[int] = None
+        self._explore_left = 0
+        self._ticks = 0
+        self._last_retune = -bucket_cooldown
+        self._lanes_at_retune = 0
+
+    def _num_buckets(self) -> int:
+        try:
+            return max(int(self.tier.stats().num_buckets), 2)
+        except Exception:
+            return 2
+
+    # -- the tick -------------------------------------------------------------
+
+    def tick(self) -> None:
+        """One control step; called by the session after each flush."""
+        self._ticks += 1
+        if self._ticks % self.interval:
+            return
+        if getattr(self.tier, "set_backend", None) is not None:
+            self._tune_backend()
+        if self.retune_buckets and \
+                getattr(self.tier, "retune_bucket_size", None) is not None:
+            self._tune_bucket()
+        if self.max_imbalance is not None and \
+                getattr(self.tier, "store", None) is not None:
+            self._tune_placement()
+
+    # -- loop 1: backend explore-then-commit ----------------------------------
+
+    def _tune_backend(self) -> None:
+        if self.committed_backend is not None:
+            return
+        if self._explore_idx is None:
+            # Begin exploration at the prior's pick (often already the
+            # serving backend — then its flushes count as exploration).
+            self._explore_idx = 0
+            self._explore_left = self.explore_flushes
+            self._point_backend(self.candidates[0])
+            return
+        self._explore_left -= 1
+        if self._explore_left > 0:
+            return
+        if self._explore_idx + 1 < len(self.candidates):
+            self._explore_idx += 1
+            self._explore_left = self.explore_flushes
+            self._point_backend(self.candidates[self._explore_idx])
+            return
+        self._commit_backend()
+
+    def _point_backend(self, name: str) -> None:
+        if self.tier.current_backend != name:
+            self.tier.set_backend(name)
+            self.bus.event("autotune", action="explore_backend",
+                           backend=name)
+
+    def _commit_backend(self) -> None:
+        """Pick the measured-fastest candidate by median tagged query
+        latency; candidates with no samples lose to any measured one."""
+        table = self.bus.by_tag("query")
+
+        def measured(name: str) -> float:
+            q = table.get(name)
+            return q["p50"] if q and q["n"] else float("inf")
+
+        best = min(self.candidates, key=measured)
+        if measured(best) == float("inf"):
+            # No read traffic at all during exploration: keep the
+            # prior's pick, stay uncommitted is pointless — commit it.
+            best = self.candidates[0]
+        self.committed_backend = best
+        if self.tier.current_backend != best:
+            self.tier.set_backend(best)
+        self.bus.event("autotune", action="commit_backend", backend=best,
+                       measured_p50_ms={n: (None if measured(n) ==
+                                            float("inf")
+                                            else measured(n) * 1e3)
+                                        for n in self.candidates})
+
+    # -- loop 2: bucket-size retune -------------------------------------------
+
+    def _tune_bucket(self) -> None:
+        if self._ticks - self._last_retune < self.bucket_cooldown:
+            return
+        pts = self.bus.counter("lanes_point")
+        rngs = self.bus.counter("lanes_range") + self.bus.counter("lanes_agg")
+        new_lanes = (pts + rngs) - self._lanes_at_retune
+        if new_lanes < self.min_lanes:
+            return
+        current = self.tier.bucket_size
+        proposal = None
+        if rngs > 4 * max(pts, 1) and current < MAX_BUCKET:
+            proposal = current * 2      # range-heavy: cheaper rep stage
+        elif pts > 4 * max(rngs, 1) and current > MIN_BUCKET:
+            proposal = current // 2     # point-heavy: shorter scans
+        if proposal is None:
+            return
+        self.tier.retune_bucket_size(proposal)   # epoch-swap inside
+        self._last_retune = self._ticks
+        self._lanes_at_retune = pts + rngs
+        self.bus.event("autotune", action="retune_bucket",
+                       bucket_size=proposal, previous=current,
+                       lanes_point=pts, lanes_range=rngs)
+
+    # -- loop 3: skew-triggered incremental migration -------------------------
+
+    def _tune_placement(self) -> None:
+        store = self.tier.store
+        if store.compacting:
+            return
+        stats = store.stats()
+        size_imb = stats.imbalance
+        touch_imb = getattr(stats, "touch_imbalance", 0.0)
+        if max(size_imb, touch_imb) <= self.max_imbalance:
+            return
+        # The action itself is timed onto the bus ("migrate" vs
+        # "rebalance" spans): the scenario suite's pause comparison is
+        # the controller's own cost — splitter nudge + bounded key moves
+        # against extract -> full rebuild — not downstream jit effects.
+        if self.rebalance_mode == "full":
+            t0 = time.perf_counter()
+            store.rebalance()
+            self.bus.span("rebalance", time.perf_counter() - t0)
+            self.bus.event("autotune", action="rebalance_full",
+                           size_imbalance=size_imb,
+                           touch_imbalance=touch_imb)
+            return
+        t0 = time.perf_counter()
+        moved = store.migrate_step(self.migrate_max_keys)
+        if moved:
+            self.bus.span("migrate", time.perf_counter() - t0, n=moved)
+            self.bus.event("autotune", action="migrate_step", moved=moved,
+                           size_imbalance=size_imb,
+                           touch_imbalance=touch_imb,
+                           splitters=None)
+
+    # -- introspection --------------------------------------------------------
+
+    def snapshot(self) -> dict:
+        """JSON-able tuner state (exported via Session.telemetry)."""
+        exploring = (self.candidates[self._explore_idx]
+                     if self._explore_idx is not None
+                     and self.committed_backend is None else None)
+        return {"candidates": list(self.candidates),
+                "committed_backend": self.committed_backend,
+                "exploring": exploring,
+                "ticks": self._ticks,
+                "rebalance_mode": self.rebalance_mode}

@@ -1,0 +1,283 @@
+"""Telemetry bus: the adaptive runtime's low-overhead observation plane.
+
+Every ``repro.db.Session`` owns a ``TelemetryBus`` and feeds it once per
+flush: per-op-class dispatch latency spans (apply / query / rank /
+compact), ``query.STAGE_COUNTERS`` snapshots, periodic ``LiveStats`` /
+``ShardedStats`` rollups (chain depth, fill factor, per-shard live
+counts), and — on the sharded tier — the per-shard key-touch histogram
+the skew monitor reasons about.  ``runtime.ft``'s ``Heartbeat`` and
+``StragglerMonitor`` report into the same bus when handed one, so the
+serving control loops (``tuning.admission``, ``tuning.autotune``) read
+ONE surface instead of scraping N subsystems.
+
+Design constraints, in order:
+
+  1. *Low overhead.*  A span record is two numpy scalar writes into a
+     preallocated ring — no allocation, no locks on the hot path (the
+     session is single-threaded by contract; background reporters like
+     the heartbeat only append to their own event ring).  The perf CI
+     gate holds the ``batched_lookup`` suite to the ``compare.py``
+     threshold with telemetry always on.
+  2. *Bounded memory.*  Everything is ring-buffered: old observations
+     fall off instead of growing without bound, which also makes the
+     quantile summaries *windowed* — exactly what an online controller
+     wants (traffic from an hour ago should not drag today's p99).
+  3. *Machine readable.*  ``export()`` returns one JSON-able dict —
+     quantile summaries per op class, gauges, counters, recent events —
+     consumed by ``benchmarks/run.py --scenario`` (stamped alongside
+     ``_meta``) and by tests pinning controller behavior.
+
+Span rings are keyed by ``(op, tag)``: the session tags ``query`` spans
+with the serving backend name, so the autotuner can compare measured
+per-backend latency for the same plan shape without a join.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+DEFAULT_CAPACITY = 512
+
+# The quantiles every summary reports (the SLO controller keys on p99).
+QUANTILES = (50.0, 95.0, 99.0)
+
+
+class _Ring:
+    """Fixed-capacity ring of float64 observations (seconds)."""
+
+    __slots__ = ("buf", "idx", "count")
+
+    def __init__(self, capacity: int):
+        self.buf = np.zeros(capacity, np.float64)
+        self.idx = 0
+        self.count = 0
+
+    def push(self, value: float) -> None:
+        self.buf[self.idx] = value
+        self.idx = (self.idx + 1) % len(self.buf)
+        self.count += 1
+
+    def window(self) -> np.ndarray:
+        """The filled window, oldest-first not guaranteed (quantiles are
+        order-free)."""
+        n = min(self.count, len(self.buf))
+        return self.buf[:n]
+
+    def quantiles(self) -> Dict[str, float]:
+        w = self.window()
+        if not len(w):
+            return {"n": 0, "p50": 0.0, "p95": 0.0, "p99": 0.0,
+                    "mean": 0.0}
+        qs = np.percentile(w, QUANTILES)
+        return {"n": int(self.count), "p50": float(qs[0]),
+                "p95": float(qs[1]), "p99": float(qs[2]),
+                "mean": float(w.mean())}
+
+
+class TouchTracker:
+    """EWMA per-shard key-touch histogram (the load axis of skew).
+
+    ``ShardedLiveStore`` owns one and bumps it on every routed read and
+    write batch; the decayed rates answer "which shard is HOT", which the
+    live-count histogram cannot (a balanced-size store can still serve
+    99% of its traffic from one shard).  ``imbalance`` mirrors the
+    size-based ``ShardedStats.imbalance`` contract: max shard rate over
+    the balanced mean, 1.0 = perfectly balanced, 0.0 = no data yet.
+    """
+
+    def __init__(self, num_shards: int, decay: float = 0.95):
+        self.decay = float(decay)
+        self.rates = np.zeros(num_shards, np.float64)
+        self.total_events = 0
+
+    def record(self, shard_counts: np.ndarray) -> None:
+        """Fold one batch's per-shard touch counts into the EWMA."""
+        self.rates *= self.decay
+        self.rates += shard_counts
+        self.total_events += int(np.asarray(shard_counts).sum())
+
+    def reset(self) -> None:
+        """Forget the window (called after a migration/rebalance so the
+        monitor re-observes the NEW placement instead of ping-ponging on
+        stale heat)."""
+        self.rates[:] = 0.0
+        self.total_events = 0
+
+    @property
+    def imbalance(self) -> float:
+        total = float(self.rates.sum())
+        if total <= 0.0:
+            return 0.0
+        mean = total / len(self.rates)
+        return float(self.rates.max()) / mean
+
+    def snapshot(self) -> Tuple[float, ...]:
+        return tuple(float(r) for r in self.rates)
+
+
+class TelemetryBus:
+    """Ring-buffered event stream + quantile summaries (module doc).
+
+    Hot-path API (called per flush by the session):
+
+        bus.span("apply", seconds, n=items)        # latency observation
+        bus.span("query", seconds, n=lanes, tag=backend_name)
+        bus.counters(query.STAGE_COUNTERS)         # snapshot deltas
+        bus.gauge("max_chain", stats.max_chain)    # last-value gauges
+        bus.touch(per_shard_counts)                # sharded tier only
+
+    Read API (controllers, tests, exports):
+
+        bus.quantiles("query")          # {'n', 'p50', 'p95', 'p99', ...}
+        bus.p99("apply")                # scalar convenience
+        bus.rate("apply")               # mean seconds-per-item
+        bus.by_tag("query")             # {backend: summary}
+        bus.export() / bus.export_json(path)
+    """
+
+    def __init__(self, capacity: int = DEFAULT_CAPACITY,
+                 event_capacity: int = 256):
+        self.capacity = int(capacity)
+        self._spans: Dict[Tuple[str, Optional[str]], _Ring] = {}
+        # Per-(op, tag) seconds-per-item rings: the admission
+        # controller's cost model (predicted flush time scales with the
+        # queue, not just with history's batch sizes).
+        self._unit: Dict[Tuple[str, Optional[str]], _Ring] = {}
+        self._gauges: Dict[str, float] = {}
+        self._counters: Dict[str, int] = {}
+        self._stage_base: Optional[Dict[str, int]] = None
+        self._events: List[dict] = []
+        self._event_capacity = int(event_capacity)
+        self._event_lock = threading.Lock()   # background reporters only
+        self.touch_rates: Tuple[float, ...] = ()
+        self.n_flushes = 0
+
+    # -- hot path -------------------------------------------------------------
+
+    def span(self, op: str, seconds: float, *, n: int = 0,
+             tag: Optional[str] = None) -> None:
+        """Record one dispatch latency span for op class ``op``.
+
+        ``n`` is the item count the span served (queue items, plan
+        lanes); ``tag`` buckets the observation (the session tags query
+        spans with the backend that ranked them).  Tagged spans are ALSO
+        folded into the untagged ring so op-class summaries see every
+        observation.
+        """
+        for key in ({(op, None), (op, tag)} if tag is not None
+                    else {(op, None)}):
+            ring = self._spans.get(key)
+            if ring is None:
+                ring = self._spans[key] = _Ring(self.capacity)
+            ring.push(seconds)
+            if n > 0:
+                unit = self._unit.get(key)
+                if unit is None:
+                    unit = self._unit[key] = _Ring(self.capacity)
+                unit.push(seconds / n)
+
+    def counters(self, stage_counters: Dict[str, int]) -> None:
+        """Fold a ``query.STAGE_COUNTERS`` snapshot into the bus as
+        monotonic totals (the first snapshot is the baseline, so the bus
+        reports counts SINCE the session opened, not process lifetime)."""
+        if self._stage_base is None:
+            self._stage_base = dict(stage_counters)
+        for k, v in stage_counters.items():
+            self._counters[f"stage_{k}"] = v - self._stage_base.get(k, 0)
+
+    def bump(self, name: str, inc: int = 1) -> None:
+        self._counters[name] = self._counters.get(name, 0) + inc
+
+    def gauge(self, name: str, value: float) -> None:
+        self._gauges[name] = float(value)
+
+    def touch(self, rates) -> None:
+        """Publish the sharded tier's per-shard touch-rate histogram."""
+        self.touch_rates = tuple(float(r) for r in rates)
+
+    def event(self, kind: str, **fields) -> None:
+        """Append one discrete event (heartbeat, straggler, autotuner
+        action) to the bounded event ring.  Thread-safe: heartbeat
+        threads report here concurrently with the session."""
+        rec = {"kind": kind, "time": time.time(), **fields}
+        with self._event_lock:
+            self._events.append(rec)
+            if len(self._events) > self._event_capacity:
+                del self._events[:len(self._events) - self._event_capacity]
+
+    def flush_mark(self) -> None:
+        self.n_flushes += 1
+
+    # -- read side ------------------------------------------------------------
+
+    def quantiles(self, op: str, tag: Optional[str] = None) -> Dict[str, float]:
+        ring = self._spans.get((op, tag))
+        if ring is None:
+            return {"n": 0, "p50": 0.0, "p95": 0.0, "p99": 0.0, "mean": 0.0}
+        return ring.quantiles()
+
+    def p99(self, op: str, tag: Optional[str] = None) -> float:
+        return self.quantiles(op, tag)["p99"]
+
+    def rate(self, op: str, tag: Optional[str] = None) -> float:
+        """Mean measured seconds-per-item for ``op`` (0.0 = no data)."""
+        ring = self._unit.get((op, tag))
+        if ring is None or not ring.count:
+            return 0.0
+        return float(ring.window().mean())
+
+    def by_tag(self, op: str) -> Dict[str, Dict[str, float]]:
+        """Per-tag summaries of one op class — the autotuner's
+        measured-latency table ({backend_name: quantile summary})."""
+        return {tag: ring.quantiles()
+                for (o, tag), ring in self._spans.items()
+                if o == op and tag is not None}
+
+    def counter(self, name: str) -> int:
+        return self._counters.get(name, 0)
+
+    def gauges(self) -> Dict[str, float]:
+        return dict(self._gauges)
+
+    def events(self, kind: Optional[str] = None) -> List[dict]:
+        with self._event_lock:
+            evs = list(self._events)
+        return [e for e in evs if kind is None or e["kind"] == kind]
+
+    # -- export ---------------------------------------------------------------
+
+    def export(self) -> dict:
+        """One JSON-able snapshot of everything the bus holds.
+
+        Schema (docs/ARCHITECTURE.md "Adaptive runtime"):
+
+            {"flushes": int,
+             "spans":   {"op" | "op:tag": {n, p50, p95, p99, mean}},
+             "rates":   {"op" | "op:tag": seconds_per_item},
+             "gauges":  {name: value},
+             "counters": {name: int},      # incl. stage_* deltas
+             "touch_rates": [per-shard EWMA...],
+             "events":  [{kind, time, ...} ...]}
+        """
+        def keyname(op, tag):
+            return op if tag is None else f"{op}:{tag}"
+
+        return {
+            "flushes": self.n_flushes,
+            "spans": {keyname(o, t): r.quantiles()
+                      for (o, t), r in self._spans.items()},
+            "rates": {keyname(o, t): float(r.window().mean())
+                      for (o, t), r in self._unit.items() if r.count},
+            "gauges": self.gauges(),
+            "counters": dict(self._counters),
+            "touch_rates": list(self.touch_rates),
+            "events": self.events(),
+        }
+
+    def export_json(self, path: str) -> None:
+        with open(path, "w") as fh:
+            json.dump(self.export(), fh, indent=2, sort_keys=True)

@@ -57,8 +57,10 @@ class VectorSession(Session):
     """``Session`` plus the vector verbs (see module docstring)."""
 
     def __init__(self, tier: VectorTier, *, max_hits: int = 64,
-                 nprobe: int = 1):
-        super().__init__(tier, max_hits=max_hits)
+                 nprobe: int = 1, bus=None, admission=None,
+                 autotuner=None):
+        super().__init__(tier, max_hits=max_hits, bus=bus,
+                         admission=admission, autotuner=autotuner)
         self.nprobe = nprobe
 
     # -- reads ----------------------------------------------------------------

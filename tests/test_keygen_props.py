@@ -1,0 +1,200 @@
+"""Property tests for the hostile-traffic workload generators.
+
+The scenario harness (benchmarks/scenarios.py) and the gated scenario
+tests both lean on ``repro.data.keygen``'s adaptive-runtime generators
+being (a) deterministic under a fixed seed, (b) closed over the live key
+set, and (c) actually shaped like their docstrings claim (Zipf slope,
+crowd concentration, boundary window, tenant slices).  Each claim is
+checked against a plain-numpy oracle; hypothesis drives the shapes via
+the optional ``tests/_hypothesis_compat.py`` shim.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.data import keygen
+
+PROPS = settings(max_examples=20, deadline=None)
+
+
+def _raw(n, seed=0):
+    """A deduplicated uint64 key set with irregular gaps."""
+    rng = np.random.default_rng(seed)
+    return np.unique(rng.integers(0, 1 << 48, n).astype(np.uint64))
+
+
+# ---------------------------------------------------------------------------
+# Determinism + membership (all four generators).
+# ---------------------------------------------------------------------------
+
+@PROPS
+@given(n=st.integers(64, 512), q=st.integers(1, 256),
+       seed=st.integers(0, 2**31))
+def test_zipfian_keys_deterministic_and_member(n, q, seed):
+    raw = _raw(n)
+    a = keygen.zipfian_keys(raw, q, 1.1, seed=seed)
+    b = keygen.zipfian_keys(raw, q, 1.1, seed=seed)
+    np.testing.assert_array_equal(a, b)
+    assert len(a) == q
+    assert np.isin(a, raw).all()
+
+
+@PROPS
+@given(n=st.integers(64, 512), q=st.integers(1, 256),
+       seed=st.integers(0, 2**31))
+def test_flash_crowd_deterministic_and_member(n, q, seed):
+    raw = _raw(n)
+    lo1, hi1 = keygen.flash_crowd_ranges(raw, q, width=16, seed=seed)
+    lo2, hi2 = keygen.flash_crowd_ranges(raw, q, width=16, seed=seed)
+    np.testing.assert_array_equal(lo1, lo2)
+    np.testing.assert_array_equal(hi1, hi2)
+    assert np.isin(lo1, raw).all() and np.isin(hi1, raw).all()
+    assert (lo1 <= hi1).all()
+
+
+@PROPS
+@given(n=st.integers(64, 512), q=st.integers(1, 256),
+       boundary=st.integers(1, 3), seed=st.integers(0, 2**31))
+def test_boundary_hot_deterministic_and_member(n, q, boundary, seed):
+    raw = _raw(n)
+    a = keygen.boundary_hot_keys(raw, q, 4, boundary, seed=seed)
+    b = keygen.boundary_hot_keys(raw, q, 4, boundary, seed=seed)
+    np.testing.assert_array_equal(a, b)
+    assert len(a) == q
+    assert np.isin(a, raw).all()
+
+
+@PROPS
+@given(n=st.integers(64, 512), q=st.integers(1, 256),
+       seed=st.integers(0, 2**31))
+def test_tenant_mix_deterministic_and_member(n, q, seed):
+    raw = _raw(n)
+    k1, t1 = keygen.tenant_mix(raw, q, seed=seed)
+    k2, t2 = keygen.tenant_mix(raw, q, seed=seed)
+    np.testing.assert_array_equal(k1, k2)
+    np.testing.assert_array_equal(t1, t2)
+    assert np.isin(k1, raw).all()
+    assert ((t1 >= 0) & (t1 < 3)).all()
+
+
+# ---------------------------------------------------------------------------
+# Shape oracles.
+# ---------------------------------------------------------------------------
+
+def test_zipfian_keys_follow_zipf_slope():
+    """Empirical log-log frequency-vs-rank slope ~= -theta (spatial
+    mode: rank 1 = smallest key value)."""
+    raw = _raw(512, seed=3)
+    theta = 1.2
+    ks = keygen.zipfian_keys(raw, 200_000, theta, seed=5)
+    srt = np.sort(raw)
+    counts = np.bincount(np.searchsorted(srt, ks), minlength=len(srt))
+    top = np.arange(1, 33)                 # head ranks: dense statistics
+    slope = np.polyfit(np.log(top), np.log(counts[:32]), 1)[0]
+    assert slope == pytest.approx(-theta, abs=0.15)
+    # Spatial mode: hottest key IS the smallest key.
+    assert counts.argmax() == 0
+
+
+def test_zipfian_keys_spatial_vs_shuffled():
+    raw = _raw(256, seed=4)
+    spat = keygen.zipfian_keys(raw, 50_000, 1.5, seed=6, spatial=True)
+    shuf = keygen.zipfian_keys(raw, 50_000, 1.5, seed=6, spatial=False)
+    # Spatial: the hot half of the traffic sits in the low half of key
+    # space.  Shuffled: it lands wherever insertion order put it.
+    median = np.median(np.sort(raw))
+    assert (spat <= median).mean() > 0.9
+    assert np.isin(shuf, raw).all()
+
+
+def test_zipfian_keys_theta_zero_is_uniform():
+    raw = _raw(128, seed=5)
+    ks = keygen.zipfian_keys(raw, 50_000, 0.0, seed=7)
+    counts = np.bincount(np.searchsorted(np.sort(raw), ks),
+                         minlength=len(raw))
+    assert counts.max() / counts.mean() < 1.5
+
+
+def test_flash_crowd_width_oracle():
+    """Every emitted range spans EXACTLY ``width`` consecutive live
+    keys (searchsorted count oracle)."""
+    raw = _raw(400, seed=6)
+    width = 24
+    lo, hi = keygen.flash_crowd_ranges(raw, 128, width=width,
+                                       crowd_frac=0.8, seed=8)
+    srt = np.sort(raw)
+    spans = (np.searchsorted(srt, hi, "right")
+             - np.searchsorted(srt, lo, "left"))
+    np.testing.assert_array_equal(spans, np.full(128, width))
+
+
+def test_flash_crowd_concentration():
+    """The crowd fraction of starts collapses into one width//4 window
+    at the pinned center."""
+    raw = _raw(400, seed=7)
+    q, width, frac = 256, 32, 0.9
+    lo, _hi = keygen.flash_crowd_ranges(raw, q, width=width,
+                                        crowd_frac=frac, center=100,
+                                        seed=9)
+    srt = np.sort(raw)
+    starts = np.searchsorted(srt, lo)
+    n_crowd = int(round(q * frac))
+    in_window = ((starts >= 100) & (starts < 100 + width // 4)).sum()
+    assert in_window >= n_crowd            # uniforms may land there too
+
+
+def test_flash_crowd_validates_crowd_frac():
+    with pytest.raises(ValueError):
+        keygen.flash_crowd_ranges(_raw(64), 8, crowd_frac=1.5)
+
+
+def test_boundary_hot_window_membership():
+    """hot_frac of the batch lands inside the width-key window centered
+    on the requested splitter cut."""
+    raw = _raw(512, seed=8)
+    srt = np.sort(raw)
+    n, shards, boundary, width = len(srt), 4, 2, 64
+    ks = keygen.boundary_hot_keys(raw, 1000, shards, boundary,
+                                  width=width, hot_frac=0.95, seed=10)
+    cut = boundary * n // shards
+    window = set(srt[cut - width // 2:cut + width // 2].tolist())
+    in_window = np.fromiter((int(k) in window for k in ks), bool)
+    assert in_window.mean() >= 0.90        # 0.95 hot minus uniform noise
+    # The window genuinely straddles the cut: heat on BOTH sides.
+    below = set(srt[cut - width // 2:cut].tolist())
+    above = set(srt[cut:cut + width // 2].tolist())
+    assert any(int(k) in below for k in ks)
+    assert any(int(k) in above for k in ks)
+
+
+def test_boundary_hot_validates_boundary():
+    raw = _raw(64)
+    with pytest.raises(ValueError):
+        keygen.boundary_hot_keys(raw, 8, 4, 0)
+    with pytest.raises(ValueError):
+        keygen.boundary_hot_keys(raw, 8, 4, 4)
+
+
+def test_tenant_mix_slice_membership_and_weights():
+    """Each query's key falls in ITS tenant's contiguous slice, and
+    tenant frequencies track the requested weights."""
+    raw = _raw(300, seed=9)
+    srt = np.sort(raw)
+    n, q = len(srt), 5000
+    tenants = ((0.7, 1.2), (0.2, 0.5), (0.1, 0.0))
+    ks, tids = keygen.tenant_mix(raw, q, tenants, seed=11)
+    t = len(tenants)
+    for tid in range(t):
+        sel = tids == tid
+        slice_ = srt[tid * n // t:(tid + 1) * n // t]
+        assert np.isin(ks[sel], slice_).all()
+    freqs = np.bincount(tids, minlength=t) / q
+    np.testing.assert_allclose(freqs, [0.7, 0.2, 0.1], atol=0.05)
+
+
+def test_tenant_mix_validates_weights():
+    with pytest.raises(ValueError):
+        keygen.tenant_mix(_raw(64), 8, tenants=())
+    with pytest.raises(ValueError):
+        keygen.tenant_mix(_raw(64), 8, tenants=((0.5, 1.0), (-0.1, 0.0)))

@@ -1,0 +1,467 @@
+"""Adaptive serving runtime: telemetry bus, admission control, autotuner.
+
+Pins, per subsystem:
+
+* ``TelemetryBus`` — windowed quantiles against numpy oracles, ring
+  bounds, tag folding, stage-counter baselining, JSON-able export;
+* ``TouchTracker`` — EWMA decay, imbalance contract, reset;
+* ``AdmissionController`` — the submission protocol's edge cases: SLO
+  unset leaves the session BIT-IDENTICAL to the historical behavior
+  (dispatch counter pinned), a 1-item queue survives a flush storm,
+  ``OverloadError`` carries an accurate queue depth, shed-then-retry
+  succeeds, deadline flushing fires exactly when predicted cost eats
+  the headroom;
+* ``AutoTuner`` — explore-then-commit converges on the measured-fastest
+  backend (prior only orders exploration), and BOTH placement trigger
+  paths fire: size imbalance (the historical axis) and touch-rate
+  imbalance — the balanced-size/hot-shard workload the size histogram
+  cannot see (the ``ShardedStats.imbalance`` blindness this PR fixes);
+* ``runtime.ft`` — heartbeats and straggler flags land on the bus.
+"""
+import json
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+import repro.db as db
+from repro.core.keys import KeyArray
+from repro.runtime.ft import Heartbeat, StragglerMonitor
+from repro.store import (CompactionPolicy, LiveConfig, ShardedConfig,
+                         ShardedLiveStore)
+from repro.tuning import (AdmissionController, AutoTuner, TelemetryBus,
+                          TouchTracker, prior_cost, prior_order)
+
+NEVER = CompactionPolicy().never()
+
+
+def mk(raw):
+    return KeyArray.from_u64(np.asarray(raw, dtype=np.uint64))
+
+
+def build_store(raw, num_shards=4, **cfg_kwargs):
+    cfg_kwargs.setdefault("auto_rebalance", False)
+    cfg = ShardedConfig(num_shards=num_shards,
+                        live=LiveConfig(node_cap=16, policy=NEVER),
+                        **cfg_kwargs)
+    rows = jnp.arange(len(raw), dtype=jnp.int32)
+    return ShardedLiveStore.build(mk(raw), rows, cfg)
+
+
+# ---------------------------------------------------------------------------
+# TelemetryBus.
+# ---------------------------------------------------------------------------
+
+class TestTelemetryBus:
+    def test_quantiles_match_numpy(self):
+        bus = TelemetryBus()
+        vals = [0.001 * i for i in range(1, 101)]
+        for v in vals:
+            bus.span("query", v)
+        q = bus.quantiles("query")
+        assert q["n"] == 100
+        assert q["p50"] == pytest.approx(np.percentile(vals, 50))
+        assert q["p99"] == pytest.approx(np.percentile(vals, 99))
+        assert q["mean"] == pytest.approx(np.mean(vals))
+        assert bus.p99("query") == q["p99"]
+
+    def test_ring_is_windowed(self):
+        bus = TelemetryBus(capacity=8)
+        for _ in range(100):
+            bus.span("apply", 1.0)
+        for _ in range(8):
+            bus.span("apply", 3.0)          # overwrite the whole window
+        q = bus.quantiles("apply")
+        assert q["mean"] == pytest.approx(3.0)   # old 1.0s fell off
+        assert q["n"] == 108                     # count is lifetime
+
+    def test_tagged_spans_fold_into_untagged(self):
+        bus = TelemetryBus()
+        bus.span("query", 0.010, tag="tree")
+        bus.span("query", 0.020, tag="binary")
+        assert bus.quantiles("query")["n"] == 2
+        table = bus.by_tag("query")
+        assert set(table) == {"tree", "binary"}
+        assert table["tree"]["p50"] == pytest.approx(0.010)
+
+    def test_rate_is_seconds_per_item(self):
+        bus = TelemetryBus()
+        bus.span("flush", 0.10, n=100)
+        bus.span("flush", 0.30, n=100)
+        assert bus.rate("flush") == pytest.approx(0.002)
+        assert bus.rate("never-seen") == 0.0
+
+    def test_stage_counters_report_deltas(self):
+        bus = TelemetryBus()
+        bus.counters({"gather": 10, "rank": 5})     # baseline
+        bus.counters({"gather": 17, "rank": 5})
+        assert bus.counter("stage_gather") == 7
+        assert bus.counter("stage_rank") == 0
+
+    def test_event_ring_is_bounded(self):
+        bus = TelemetryBus(event_capacity=4)
+        for i in range(10):
+            bus.event("beat", step=i)
+        evs = bus.events("beat")
+        assert len(evs) == 4
+        assert [e["step"] for e in evs] == [6, 7, 8, 9]
+
+    def test_export_is_json_able(self, tmp_path):
+        bus = TelemetryBus()
+        bus.span("query", 0.01, n=4, tag="tree")
+        bus.bump("lanes_point", 4)
+        bus.gauge("fill", 0.5)
+        bus.touch([1.0, 3.0])
+        bus.event("autotune", action="noop")
+        bus.flush_mark()
+        out = bus.export()
+        assert out["flushes"] == 1
+        assert "query:tree" in out["spans"] and "query" in out["spans"]
+        assert out["counters"]["lanes_point"] == 4
+        assert out["touch_rates"] == [1.0, 3.0]
+        json.dumps(out)                       # must round-trip
+        p = tmp_path / "tel.json"
+        bus.export_json(str(p))
+        assert json.loads(p.read_text())["gauges"]["fill"] == 0.5
+
+
+class TestTouchTracker:
+    def test_imbalance_contract(self):
+        t = TouchTracker(4)
+        assert t.imbalance == 0.0             # no data yet
+        t.record(np.array([100, 0, 0, 0]))
+        assert t.imbalance == pytest.approx(4.0)
+        t.record(np.array([0, 100, 0, 0]))    # decays toward balance
+        assert 1.0 < t.imbalance < 4.0
+        t.reset()
+        assert t.imbalance == 0.0 and t.total_events == 0
+
+    def test_decay_forgets_old_heat(self):
+        t = TouchTracker(2, decay=0.5)
+        t.record(np.array([64, 0]))
+        for _ in range(20):
+            t.record(np.array([0, 64]))
+        assert np.argmax(t.rates) == 1
+        assert t.imbalance < 2.01             # near-balanced history gone
+
+
+# ---------------------------------------------------------------------------
+# AdmissionController.
+# ---------------------------------------------------------------------------
+
+def _keys(vals):
+    return db.as_key_array(np.asarray(vals, np.uint64))
+
+
+class TestAdmission:
+    def test_slo_unset_is_bit_identical(self):
+        """A default spec constructs NO controller, and the session's
+        dispatch counters + results match the historical behavior."""
+        raw = np.arange(512, dtype=np.uint64) * 3
+        plain = db.open(db.IndexSpec(tier="live"), raw)
+        assert plain._admission is None and plain._autotuner is None
+        q = _keys([0, 3, 9, 5])
+        t1 = plain.lookup(q)
+        plain.insert(_keys([1000]), np.asarray([7]))
+        plain.flush()
+        assert plain.dispatches == {"apply": 1, "query": 1, "rank": 0}
+
+        slo = db.open(db.IndexSpec(tier="live", slo_ms=1e6), raw)
+        t2 = slo.lookup(q)
+        slo.insert(_keys([1000]), np.asarray([7]))
+        slo.flush()
+        # A generous SLO never forces a flush: same dispatch rounds,
+        # bit-identical results.
+        assert slo.dispatches == plain.dispatches
+        for f in ("found", "row_id", "position"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(t1.result(), f)),
+                np.asarray(getattr(t2.result(), f)))
+
+    def test_overload_error_carries_queue_state(self):
+        raw = np.arange(64, dtype=np.uint64)
+        sess = db.open(db.IndexSpec(tier="live", max_pending=2), raw)
+        sess.lookup(_keys([1]))
+        sess.lookup(_keys([2]))
+        with pytest.raises(db.OverloadError) as ei:
+            sess.lookup(_keys([3]))
+        err = ei.value
+        assert err.queue_depth == 2
+        assert err.max_pending == 2
+        assert err.estimated_wait > 0.0
+        assert sess.pending == 2              # shed BEFORE enqueue
+        assert sess.telemetry()["admission"]["shed"] == 1
+
+    def test_shed_then_retry_succeeds(self):
+        raw = np.arange(64, dtype=np.uint64)
+        sess = db.open(db.IndexSpec(tier="live", max_pending=1), raw)
+        sess.lookup(_keys([1]))
+        with pytest.raises(db.OverloadError):
+            sess.lookup(_keys([2]))
+        sess.flush()
+        t = sess.lookup(_keys([2]))           # queue drained: admitted
+        assert bool(np.asarray(t.result().found)[0])
+
+    def test_flush_storm_under_one_item_queue(self):
+        """max_pending=1: every second submission sheds; flushing after
+        each shed keeps the session serving every admitted request."""
+        raw = np.arange(256, dtype=np.uint64)
+        sess = db.open(db.IndexSpec(tier="live", max_pending=1), raw)
+        shed = 0
+        for i in range(40):
+            try:
+                sess.insert(_keys([1000 + i]), np.asarray([i]))
+            except db.OverloadError:
+                shed += 1
+                sess.flush()
+                # An admitted retry after the drain must succeed.
+                sess.insert(_keys([1000 + i]), np.asarray([i]))
+        sess.flush()
+        assert shed == 39                     # every non-first fill shed
+        assert sess.telemetry()["admission"]["shed"] == 39
+        # The storm never lost an ADMITTED item.
+        t = sess.lookup(_keys([int(1000 + i) for i in range(40)]))
+        assert np.asarray(t.result().found).all()
+        # And the queue bound genuinely holds: without draining, only
+        # the first submission of a burst is admitted.
+        with pytest.raises(db.OverloadError):
+            sess.insert(_keys([2000]), np.asarray([0]))
+            sess.insert(_keys([2001]), np.asarray([1]))
+        assert sess.pending == 1
+
+    def test_deadline_flush_fires_on_headroom(self):
+        bus = TelemetryBus()
+        ctl = AdmissionController(bus, slo_ms=100.0)
+        ctl.note_submit(now=0.0)
+        # Far from the deadline: predicted cost fits, no flush.
+        assert not ctl.should_flush(now=0.0, pending=1)
+        # Teach the model a 10ms/item cost: at 8 pending the 2x-padded
+        # prediction (160ms) eats the 100ms budget from t=0.
+        ctl.observe_flush(0.10, 10)
+        ctl.observe_flush(0.10, 10)
+        assert ctl.should_flush(now=0.0, pending=8)
+        assert ctl.deadline_flushes == 1
+        assert bus.counter("admission_deadline_flush") == 1
+        ctl.on_flush()
+        assert ctl.deadline() is None         # disarmed
+
+    def test_deadline_flush_in_session(self):
+        """An SLO'd session flushes from the submission path once the
+        queue's predicted drain cost threatens the oldest deadline."""
+        raw = np.arange(512, dtype=np.uint64)
+        sess = db.open(db.IndexSpec(tier="live", slo_ms=20.0), raw)
+        # Teach the cost model an expensive flush: 1s for 10 items.
+        sess._admission.observe_flush(1.0, 10)
+        tickets = [sess.lookup(_keys([int(i)])) for i in range(4)]
+        # 100ms/item * 2 safety margin >= 20ms SLO at pending=1: the
+        # second submission must have flushed the first.
+        assert sess.telemetry()["admission"]["deadline_flushes"] >= 1
+        sess.flush()
+        assert all(t.ready for t in tickets)
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            AdmissionController(TelemetryBus(), slo_ms=0)
+        with pytest.raises(ValueError):
+            AdmissionController(TelemetryBus(), max_pending=0)
+        with pytest.raises(db.InvalidSpecError):
+            db.IndexSpec(slo_ms=-1)
+        with pytest.raises(db.InvalidSpecError):
+            db.IndexSpec(max_pending=0)
+        with pytest.raises(db.InvalidSpecError):
+            db.IndexSpec(rebalance_mode="sometimes")
+
+
+# ---------------------------------------------------------------------------
+# AutoTuner.
+# ---------------------------------------------------------------------------
+
+class _FakeStats:
+    num_buckets = 64
+
+
+class _FakeTier:
+    """Duck-typed tier recording backend repoints."""
+
+    def __init__(self, backend="tree"):
+        self.current_backend = backend
+        self.history = [backend]
+
+    def set_backend(self, name):
+        self.current_backend = name
+        self.history.append(name)
+
+    def stats(self):
+        return _FakeStats()
+
+
+class TestAutoTuner:
+    def test_prior_orders_by_roofline(self):
+        order = prior_order(("tree", "binary", "kernel"), num_buckets=64)
+        assert set(order) == {"tree", "binary", "kernel"}
+        costs = [prior_cost(b, 64) for b in order]
+        assert costs == sorted(costs)
+
+    def test_explore_then_commit_picks_measured_fastest(self):
+        """The prior only orders exploration; the commit is measured.
+        'kernel' is made the measured-fastest even though its prior
+        (launch overhead) ranks it last."""
+        bus = TelemetryBus()
+        tier = _FakeTier()
+        tuner = AutoTuner(tier, bus, explore_flushes=2)
+        assert tuner.candidates[-1] == "kernel"   # worst under the prior
+        lat = {"tree": 0.010, "binary": 0.008, "kernel": 0.002}
+        for _ in range(3 * 2 + 2):                # enough ticks to commit
+            bus.span("query", lat[tier.current_backend], n=4,
+                     tag=tier.current_backend)
+            tuner.tick()
+            if tuner.committed_backend:
+                break
+        assert tuner.committed_backend == "kernel"
+        assert tier.current_backend == "kernel"
+        commits = [e for e in bus.events("autotune")
+                   if e["action"] == "commit_backend"]
+        assert len(commits) == 1 and commits[0]["backend"] == "kernel"
+        # Every candidate was actually explored before the commit.
+        assert set(tier.history) == {"tree", "binary", "kernel"}
+
+    def test_commit_without_traffic_keeps_prior_pick(self):
+        bus = TelemetryBus()
+        tier = _FakeTier()
+        tuner = AutoTuner(tier, bus, explore_flushes=1)
+        for _ in range(5):
+            tuner.tick()
+        assert tuner.committed_backend == tuner.candidates[0]
+
+    def test_session_convergence_end_to_end(self):
+        """A live session under autotune commits to the backend with the
+        fastest measured tagged p50 — pinned via its own telemetry."""
+        raw = np.arange(2048, dtype=np.uint64) * 5
+        sess = db.open(db.IndexSpec(tier="live", autotune=True), raw)
+        q = _keys((np.arange(256) * 5) % 2048)
+        while sess._autotuner.committed_backend is None:
+            sess.lookup(q)
+            sess.flush()
+        tel = sess.telemetry()
+        committed = tel["autotune"]["committed_backend"]
+        table = {t: s for t, s in sess.bus.by_tag("query").items()
+                 if s["n"]}
+        assert committed in table
+        assert table[committed]["p50"] == min(s["p50"]
+                                              for s in table.values())
+        sess.close()
+
+
+# ---------------------------------------------------------------------------
+# Placement triggers: size-skew vs touch-skew (the blindness fix).
+# ---------------------------------------------------------------------------
+
+class _StoreTier:
+    """Minimal tier wrapper handing the tuner a sharded store."""
+
+    def __init__(self, store):
+        self.store = store
+
+    def stats(self):
+        return self.store.stats()
+
+
+class TestPlacementTriggers:
+    def _hot_traffic(self, store, shard, batches=6):
+        """Point-lookup traffic confined to ONE shard's key range."""
+        cuts = [np.asarray(s.live_cut()[0].lo) for s in store.shards]
+        hot = cuts[shard]
+        for _ in range(batches):
+            store.lookup(mk(hot[:64]))
+
+    def test_touch_trigger_fires_where_size_is_blind(self):
+        """Balanced sizes + one hot shard: ``imbalance`` (size) sees
+        nothing, ``touch_imbalance`` does, and the tuner migrates."""
+        raw = np.arange(1024, dtype=np.uint64) * 7
+        store = build_store(raw, num_shards=4)
+        self._hot_traffic(store, shard=2)
+        st = store.stats()
+        assert st.imbalance <= 1.1            # size histogram: balanced
+        assert st.touch_imbalance > 2.0       # the axis size cannot see
+        bus = TelemetryBus()
+        tuner = AutoTuner(_StoreTier(store), bus, max_imbalance=1.5,
+                          rebalance_mode="incremental",
+                          migrate_max_keys=64)
+        tuner.tick()
+        assert store.migrations == 1
+        evs = [e for e in bus.events("autotune")
+               if e["action"] == "migrate_step"]
+        assert len(evs) == 1 and evs[0]["moved"] >= 1
+        assert evs[0]["touch_imbalance"] > 2.0
+        # Migration reset the touch window: no ping-pong on stale heat.
+        assert store.stats().touch_imbalance == 0.0
+
+    def test_size_trigger_still_fires(self):
+        """The historical size-skew path: maybe_rebalance (the
+        WAL-replay-deterministic trigger) acts on live counts alone."""
+        raw = np.arange(1024, dtype=np.uint64) * 7
+        store = build_store(raw, num_shards=4, auto_rebalance=True,
+                            max_imbalance=1.5,
+                            rebalance_mode="incremental",
+                            migrate_max_keys=64)
+        # Pile inserts onto shard 3's keyspace: size imbalance, no reads.
+        hi = np.asarray(store.splitters.lo).max()
+        extra = np.arange(2048, dtype=np.uint64) * 3 + hi
+        store.apply(ins_keys=mk(extra),
+                    ins_rows=jnp.arange(len(extra), dtype=jnp.int32))
+        assert store.stats().imbalance > 1.5
+        # (apply itself may already have migrated via maybe_compact —
+        # the size trigger is live on the write path too.)
+        assert store.maybe_rebalance() == "migrate"
+        assert store.migrations >= 1
+
+    def test_replay_determinism_ignores_touch(self):
+        """maybe_rebalance must be a function of the replayed multiset:
+        read heat (absent from the WAL) may NOT trigger it."""
+        raw = np.arange(1024, dtype=np.uint64) * 7
+        store = build_store(raw, num_shards=4, auto_rebalance=True,
+                            max_imbalance=1.5)
+        self._hot_traffic(store, shard=1)
+        assert store.stats().touch_imbalance > 2.0
+        assert store.maybe_rebalance() is None
+        assert store.migrations == 0 and store.rebalances == 0
+
+    def test_migration_preserves_reads(self):
+        """Reads stay bit-identical across migrate_step ticks (multiset
+        unchanged), while the splitters genuinely moved."""
+        rng = np.random.default_rng(3)
+        raw = np.unique(rng.integers(0, 1 << 40, 1500).astype(np.uint64))
+        store = build_store(raw, num_shards=4)
+        before = np.asarray(store.splitters.lo).copy()
+        q = mk(np.concatenate([raw[::3], raw[:5] + 1]))   # hits + misses
+        want = store.lookup(q)
+        self._hot_traffic(store, shard=0)
+        moved = store.migrate_step(128)
+        assert moved >= 1
+        got = store.lookup(q)
+        for f in ("found", "row_id", "position"):
+            np.testing.assert_array_equal(np.asarray(getattr(got, f)),
+                                          np.asarray(getattr(want, f)))
+        assert not np.array_equal(np.asarray(store.splitters.lo), before)
+
+
+# ---------------------------------------------------------------------------
+# runtime.ft reports onto the bus.
+# ---------------------------------------------------------------------------
+
+class TestFtOnBus:
+    def test_heartbeat_events(self, tmp_path):
+        bus = TelemetryBus()
+        hb = Heartbeat(str(tmp_path / "hb.json"), bus=bus)
+        hb.write_now(step=3, payload={"wal_seq": 17})
+        evs = bus.events("heartbeat")
+        assert evs and evs[-1]["step"] == 3 and evs[-1]["wal_seq"] == 17
+
+    def test_straggler_events(self):
+        bus = TelemetryBus()
+        mon = StragglerMonitor(threshold=2.0, bus=bus)
+        mon.record(0, 1.0)
+        assert mon.record(1, 10.0)            # 10x the EMA: flagged
+        evs = bus.events("straggler")
+        assert evs and evs[0]["step"] == 1
+        assert evs[0]["duration"] == pytest.approx(10.0)
